@@ -1,0 +1,78 @@
+"""Benchmark harness — one function per paper table/figure plus the
+roofline report.  Prints ``name,value,derived`` CSV and writes
+results/bench/*.csv.
+
+    PYTHONPATH=src python -m benchmarks.run              # everything
+    PYTHONPATH=src python -m benchmarks.run --only table2,roofline
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+from benchmarks import roofline, tables  # noqa: E402
+
+OUT = Path(__file__).resolve().parents[1] / "results" / "bench"
+
+SUITES = {
+    "table2": tables.table2_kernels,
+    "table3": tables.table3_dnns,
+    "table4": tables.table4_dnns,
+    "gpt2": tables.gpt2_eval,
+    "fig10": tables.ablation,
+    "fig11": tables.parallelism_sweep,
+    "table8": tables.fifo_percentage,
+    "micro": tables.kernel_microbench,
+}
+
+
+def run_roofline() -> int:
+    rows = roofline.build_table()
+    if not rows:
+        print("roofline: no dry-run results found — run "
+              "`python -m repro.launch.dryrun` first", file=sys.stderr)
+        return 0
+    OUT.mkdir(parents=True, exist_ok=True)
+    csv = [roofline.CSV_HEADER] + [r.csv() for r in rows]
+    (OUT / "roofline.csv").write_text("\n".join(csv) + "\n")
+    ok = [r for r in rows if r.status == "ok"]
+    for r in ok:
+        print(f"roofline/{r.arch}/{r.shape}/{r.mesh},"
+              f"{r.roofline_fraction:.4f},dominant={r.dominant};"
+              f"useful={r.useful_ratio:.2f};peak_GiB={r.peak_gib:.1f}")
+    n_fit = sum(1 for r in ok if r.fits_hbm)
+    print(f"roofline/summary,{len(ok)},ok_cells;fits_hbm={n_fit}/{len(ok)}")
+    return len(ok)
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="all",
+                    help=f"comma list of {sorted(SUITES)} + roofline")
+    args = ap.parse_args(argv)
+    wanted = None if args.only == "all" else set(args.only.split(","))
+
+    OUT.mkdir(parents=True, exist_ok=True)
+    print("name,value,derived")
+    for name, fn in SUITES.items():
+        if wanted is not None and name not in wanted:
+            continue
+        t0 = time.time()
+        rows = fn()
+        lines = [r.csv() for r in rows]
+        (OUT / f"{name}.csv").write_text("name,value,derived\n"
+                                         + "\n".join(lines) + "\n")
+        for line in lines:
+            print(line)
+        print(f"{name}/elapsed_s,{time.time() - t0:.2f},")
+    if wanted is None or "roofline" in wanted:
+        run_roofline()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,38 @@
+"""Compile ResNet-18 (Table III workload) end to end, including the
+Opt1..Opt5 ablation of Table VII and the resource/performance sweep of
+Fig. 11.
+
+    PYTHONPATH=src python examples/compile_resnet18.py
+"""
+
+import pathlib
+import sys
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1] / "src"))
+
+from repro.core import CodoOptions, codo_opt  # noqa: E402
+from repro.models.dataflow_models import resnet18  # noqa: E402
+
+
+def main():
+    g = resnet18(32)
+    print(f"resnet18(3x32x32): {len(g.tasks)} tasks, "
+          f"{len(g.buffers)} buffers")
+
+    print("\n== ablation (Table VII / Fig. 10) ==")
+    for name, opt in [("opt1", CodoOptions.opt1()), ("opt2", CodoOptions.opt2()),
+                      ("opt3", CodoOptions.opt3()), ("opt4", CodoOptions.opt4()),
+                      ("opt5", CodoOptions.opt5())]:
+        c = codo_opt(g, opt)
+        print(f"  {name}: speedup {c.speedup:9.1f}x  fifo {c.fifo_fraction:4.0%}"
+              f"  compile {c.compile_seconds*1e3:6.1f} ms")
+
+    print("\n== resource/performance trade-off (Fig. 11) ==")
+    for budget in (128, 256, 512, 1024, 2048):
+        c = codo_opt(g, CodoOptions(budget_units=budget))
+        print(f"  budget {budget:5d}: speedup {c.speedup:9.1f}x  "
+              f"units {c.schedule_report.units_used:5d}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,63 @@
+"""Pipeline-parallel execution demo: CODO's balanced stages on a device
+mesh (Fig. 1 at pod scale) — runs on 8 virtual CPU devices.
+
+    PYTHONPATH=src python examples/pipeline_parallel.py
+
+The CODO scheduler assigns tasks to latency-balanced stages
+(core.schedule.assign_stages); the pipeline executor streams microbatches
+through the stage ring over collective_permute — the inter-stage FIFO.
+"""
+
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import pathlib
+import sys
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1] / "src"))
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+from repro.core.pipeline import (PipelineSchedule, pipeline_fn,  # noqa: E402
+                                 reference_serial)
+from repro.core import codo_opt, assign_stages  # noqa: E402
+from repro.launch.mesh import make_debug_mesh  # noqa: E402
+from repro.models.dataflow_models import autoencoder  # noqa: E402
+
+
+def main():
+    # 1) CODO stage balancing on a real task graph
+    g = autoencoder(64, 784)
+    compiled = codo_opt(g)
+    stages = assign_stages(compiled.graph, compiled.options.hw, num_stages=4)
+    print("CODO-balanced stages:")
+    for i, names in enumerate(stages):
+        print(f"  stage {i}: {names}")
+
+    # 2) pipeline execution of a 4-stage MLP over 8 microbatches
+    mesh = make_debug_mesh((4,), ("stage",))
+    D, nmb, mb = 32, 8, 4
+
+    def stage(p, x):
+        return jnp.tanh(x @ p["w"] + p["b"])
+
+    key = jax.random.PRNGKey(0)
+    params = {"w": jax.random.normal(key, (4, D, D)) * 0.5,
+              "b": jnp.zeros((4, D))}
+    x = jax.random.normal(jax.random.PRNGKey(1), (nmb, mb, D))
+
+    fn = pipeline_fn([stage] * 4, mesh)
+    y = fn(params, x)
+    y_ref = reference_serial([stage] * 4, params, x)
+    err = float(jnp.abs(y - y_ref).max())
+    sched = PipelineSchedule(num_stages=4, num_microbatches=nmb)
+    print(f"\npipeline vs serial max err: {err:.2e}")
+    print(f"ticks={sched.ticks} bubble={sched.bubble_fraction:.1%} "
+          f"(GPipe fill/drain)")
+    assert err < 1e-5
+
+
+if __name__ == "__main__":
+    main()

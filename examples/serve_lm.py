@@ -1,0 +1,16 @@
+"""Serve a reduced GPT-2 with slot-based batched decoding.
+
+    PYTHONPATH=src python examples/serve_lm.py
+"""
+
+import pathlib
+import sys
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1] / "src"))
+
+from repro.launch.serve import main as serve_main  # noqa: E402
+
+if __name__ == "__main__":
+    raise SystemExit(serve_main(["--arch", "gpt2-medium", "--smoke",
+                                 "--requests", "8", "--batch", "4",
+                                 "--max-new", "12", "--cache-len", "64"]))

@@ -1,0 +1,37 @@
+"""repro.core — the CODO dataflow compiler (the paper's contribution).
+
+Public API:
+
+    from repro.core import (DataflowGraph, codo_opt, CodoOptions, lower,
+                            graph_latency, autoschedule)
+"""
+
+from .buffers import BufferPlan, determine_buffers, downgrade_to_pingpong
+from .coarse import eliminate_coarse
+from .compiler import CodoOptions, CompiledDataflow, codo_opt, verify_violation_free
+from .costmodel import V5E, GraphCost, HwParams, graph_latency, sequential_latency, task_cost
+from .fine import eliminate_fine
+from .graph import (FIFO, PINGPONG, Access, Buffer, DataflowGraph, Loop, Task,
+                    conv2d_task, copy_task, ewise_task, full_index, idx,
+                    matmul_task, pad_task, pool_task, reduce_task, retarget_fn)
+from .lowering import (LoweredProgram, fusion_groups, lower, register_group_kernel,
+                       verify_lowering)
+from .offchip import TransferPlan, host_manifest, plan_offchip
+from .patterns import (coarse_violations, fine_violations, violation_report,
+                       access_sig, arrival_order)
+from .reuse import generate_reuse_buffers, parallel_safety
+from .schedule import assign_stages, autoschedule
+
+__all__ = [
+    "Access", "Buffer", "BufferPlan", "CodoOptions", "CompiledDataflow",
+    "DataflowGraph", "FIFO", "GraphCost", "HwParams", "Loop", "LoweredProgram",
+    "PINGPONG", "Task", "TransferPlan", "V5E", "access_sig", "arrival_order",
+    "assign_stages", "autoschedule", "coarse_violations", "codo_opt",
+    "conv2d_task", "copy_task", "determine_buffers", "downgrade_to_pingpong",
+    "eliminate_coarse", "eliminate_fine", "ewise_task", "fine_violations",
+    "full_index", "fusion_groups", "generate_reuse_buffers", "graph_latency",
+    "host_manifest", "idx", "lower", "matmul_task", "pad_task",
+    "parallel_safety", "plan_offchip", "pool_task", "reduce_task",
+    "register_group_kernel", "retarget_fn", "sequential_latency", "task_cost",
+    "verify_lowering", "verify_violation_free", "violation_report",
+]

@@ -1,0 +1,161 @@
+"""codo_opt — the end-to-end compilation pipeline (paper Fig. 3).
+
+Pass order (deeply co-optimizing, matching §III):
+
+  1. coarse-grained violation elimination        (coarse.py)
+  2. fine-grained violation elimination          (fine.py)
+  3. reuse-buffer generation (+ re-run 1&2)      (reuse.py)
+  4. communication-buffer determination          (buffers.py)
+  5. off-chip transfer management                (offchip.py)
+  6. automated dataflow scheduling + inter-task  (schedule.py)
+
+Each pass can be disabled for the Opt1..Opt5 ablation of Table VII.  The
+result is a :class:`CompiledDataflow`: the transformed graph, the buffer &
+transfer plans, the schedule report, and latency estimates for the
+baseline (sequential), the ping-pong-only design and the final design —
+the numbers the benchmark tables report.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+from .buffers import BufferPlan, determine_buffers
+from .coarse import CoarseReport, eliminate_coarse
+from .costmodel import V5E, GraphCost, HwParams, graph_latency, sequential_latency
+from .fine import FineReport, eliminate_fine
+from .graph import DataflowGraph
+from .offchip import TransferPlan, plan_offchip
+from .patterns import coarse_violations, fine_violations
+from .reuse import ReuseReport, generate_reuse_buffers
+from .schedule import ScheduleReport, autoschedule
+
+
+@dataclass
+class CodoOptions:
+    """User-facing knobs of ``codo-opt`` (§III: "users can optionally adjust
+    input parameters like maximum parallelism and tiling factors")."""
+
+    coarse: bool = True
+    fine: bool = True
+    communication: bool = True      # reuse buffers + buffer determination + offchip
+    scheduling: bool = True
+    enable_up: bool = True
+    enable_dp: bool = True
+    budget_units: int | None = None
+    max_degree: int = 4096
+    balance_n: float = 2.0
+    hbm_channels: int = 8
+    hw: HwParams = V5E
+
+    # Table VII's ablation configurations.
+    @staticmethod
+    def opt1() -> "CodoOptions":
+        return CodoOptions(coarse=False, fine=True, communication=False, scheduling=False)
+
+    @staticmethod
+    def opt2() -> "CodoOptions":
+        return CodoOptions(coarse=True, fine=False, communication=False, scheduling=False)
+
+    @staticmethod
+    def opt3() -> "CodoOptions":
+        return CodoOptions(coarse=True, fine=False, communication=True, scheduling=False)
+
+    @staticmethod
+    def opt4() -> "CodoOptions":
+        return CodoOptions(coarse=True, fine=True, communication=True, scheduling=False)
+
+    @staticmethod
+    def opt5() -> "CodoOptions":
+        return CodoOptions()
+
+
+@dataclass
+class CompiledDataflow:
+    graph: DataflowGraph
+    options: CodoOptions
+    coarse_report: CoarseReport | None = None
+    fine_report: FineReport | None = None
+    reuse_report: ReuseReport | None = None
+    buffer_plan: BufferPlan | None = None
+    transfer_plan: TransferPlan | None = None
+    schedule_report: ScheduleReport | None = None
+    baseline: GraphCost | None = None          # sequential, degree 1
+    final: GraphCost | None = None
+    compile_seconds: float = 0.0
+
+    @property
+    def speedup(self) -> float:
+        if not self.baseline or not self.final or self.final.total_cycles == 0:
+            return 1.0
+        return self.baseline.total_cycles / self.final.total_cycles
+
+    @property
+    def fifo_fraction(self) -> float:
+        return self.buffer_plan.fifo_fraction() if self.buffer_plan else 0.0
+
+    def report(self) -> str:
+        lines = [f"== codo_opt({self.graph.name}) =="]
+        for r in (self.coarse_report, self.fine_report, self.reuse_report,
+                  self.buffer_plan, self.transfer_plan, self.schedule_report):
+            if r is not None:
+                lines.append("  " + r.summary())
+        if self.baseline and self.final:
+            lines.append(f"  baseline {self.baseline.total_cycles:,.0f} cyc -> "
+                         f"final {self.final.total_cycles:,.0f} cyc "
+                         f"({self.speedup:.1f}x, {self.fifo_fraction:.0%} FIFO)")
+        lines.append(f"  compile time {self.compile_seconds*1e3:.1f} ms")
+        return "\n".join(lines)
+
+
+def codo_opt(graph: DataflowGraph, options: CodoOptions | None = None
+             ) -> CompiledDataflow:
+    import time
+    t0 = time.perf_counter()
+    opts = options or CodoOptions()
+    g = graph.copy()
+    g.validate()
+    out = CompiledDataflow(g, opts)
+    out.baseline = sequential_latency(g, opts.hw)
+
+    if opts.coarse:
+        out.coarse_report = eliminate_coarse(g)
+    if opts.fine:
+        out.fine_report = eliminate_fine(g)
+    if opts.communication:
+        out.reuse_report = generate_reuse_buffers(g)
+        if opts.fine:
+            # reuse rewriting changes stream orders: re-run correctness
+            # ("reinvokes the correctness passes to avoid new violations")
+            fr2 = eliminate_fine(g)
+            out.fine_report.permutations += fr2.permutations
+            out.fine_report.reductions_rewritten += fr2.reductions_rewritten
+            out.fine_report.unresolved = fr2.unresolved
+    out.buffer_plan = determine_buffers(g)
+    if opts.communication:
+        out.transfer_plan = plan_offchip(g, opts.hbm_channels)
+    if opts.scheduling:
+        out.schedule_report = autoschedule(
+            g, out.buffer_plan, opts.hw, opts.budget_units, opts.max_degree,
+            opts.balance_n, opts.enable_up, opts.enable_dp)
+
+    # A design with surviving coarse violations cannot enter a dataflow
+    # region at all — it executes sequentially (the Opt1 lesson of Fig. 10).
+    sequential = bool(coarse_violations(g))
+    out.final = graph_latency(g, opts.hw, out.buffer_plan, sequential=sequential)
+    out.compile_seconds = time.perf_counter() - t0
+    return out
+
+
+def verify_violation_free(compiled: CompiledDataflow) -> list[str]:
+    """Post-compilation invariant check (tests + CI): every FIFO edge must
+    be violation-free; ping-pong edges may keep violations by design."""
+    problems = []
+    g = compiled.graph
+    for v in coarse_violations(g):
+        problems.append(f"coarse:{v.kind}:{v.buffer}")
+    impl = compiled.buffer_plan.impl if compiled.buffer_plan else {}
+    for v in fine_violations(g):
+        if impl.get(v.buffer) == "fifo":
+            problems.append(f"fine-on-fifo:{v.kind}:{v.buffer}")
+    return problems

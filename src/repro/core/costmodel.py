@@ -1,0 +1,266 @@
+"""Profiling-based performance model (paper §VI "Stage One", refs [43][48]),
+re-parameterized for TPU v5e.
+
+The paper profiles basic operators (adders, MACs) and estimates each loop's
+latency from trip counts × parallelism.  We keep exactly that structure —
+an op-level initiation-interval (II) table plus trip-count arithmetic — but
+the resource vector becomes (compute units ≈ MXU/VPU lane groups, VMEM
+bytes, HBM bytes/s per channel) instead of (DSP, BRAM, LUT, FF).
+
+Latencies are reported in *cycles at the nominal TPU clock* so the
+benchmark tables can mirror the paper's cycle counts, and in seconds for
+the roofline cross-check.
+
+The dataflow-graph latency evaluator implements Fig. 1/Fig. 2 semantics:
+
+* FIFO edge — the consumer starts as soon as its first required element
+  arrives: producer start + first-emit skew (+ line-buffer fill for
+  stencil consumers).  Delayed FIFO writes (Fig. 2 Issue 2: un-rewritten
+  reductions emit at ~8/9 of the iteration space) show up here directly.
+* Ping-pong edge — the consumer waits for the producer's whole block.
+* Sequential (unresolved coarse violation) — no overlap at all.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from .buffers import BufferPlan
+from .graph import FIFO, PINGPONG, DataflowGraph, Task
+from .patterns import index_dims, reduction_dims
+
+# --------------------------------------------------------------------------
+# Hardware parameters (TPU v5e)
+# --------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class HwParams:
+    name: str = "tpu-v5e"
+    clock_hz: float = 940e6            # nominal core clock
+    peak_flops: float = 197e12         # bf16
+    hbm_bw: float = 819e9              # bytes/s
+    ici_bw: float = 50e9               # bytes/s per link
+    vmem_bytes: int = 128 * 2**20
+    hbm_channels: int = 8
+    # "compute units": lane-groups the scheduler allocates, the DSP-budget
+    # analogue.  One unit retires `unit_flops_per_cycle` flops per cycle.
+    max_units: int = 2048
+    unit_flops_per_cycle: float = 2.0  # 1 MAC / unit / cycle
+
+    @property
+    def hbm_bytes_per_cycle(self) -> float:
+        return self.hbm_bw / self.clock_hz
+
+    @property
+    def channel_bytes_per_cycle(self) -> float:
+        return self.hbm_bytes_per_cycle / self.hbm_channels
+
+
+V5E = HwParams()
+
+# Op-level initiation intervals (cycles per innermost iteration at degree 1)
+# — the "profiled basic operation" table of §VI.
+OP_II: dict[str, float] = {
+    "conv": 1.0, "matmul": 1.0, "ewise": 1.0, "pad": 1.0, "copy": 1.0,
+    "pool": 1.0, "reduce": 1.0, "norm": 2.0, "softmax": 4.0, "exp": 4.0,
+    "generic": 1.0,
+}
+
+# Extra pipeline depth (fill) per op — constant, small.
+OP_DEPTH: dict[str, float] = {"softmax": 24.0, "norm": 12.0}
+
+
+# --------------------------------------------------------------------------
+# Per-task cost
+# --------------------------------------------------------------------------
+
+
+@dataclass
+class TaskCost:
+    task: str
+    compute_cycles: float
+    memory_cycles: float
+    latency: float          # max(compute, memory) + depth
+    first_emit: float       # cycles until first FIFO write is available
+    degree: int             # total parallel degree (product over loops)
+    units: int              # compute units consumed
+    vmem_bytes: int         # reuse buffers + accumulators
+
+    @property
+    def bound(self) -> str:
+        return "compute" if self.compute_cycles >= self.memory_cycles else "memory"
+
+
+def task_degree(task: Task) -> int:
+    d = 1
+    for l in task.loops:
+        d *= max(1, l.parallel)
+    return d
+
+
+def _offchip_read_bytes(graph: DataflowGraph, task: Task) -> dict[int, float]:
+    """bytes per HBM channel this task pulls from off-chip (inputs, weights,
+    ping-pong intermediates)."""
+    per_ch: dict[int, float] = {}
+    for a in task.reads:
+        buf = graph.buffers[a.buffer]
+        off = buf.kind in ("input", "weight") or buf.impl == PINGPONG
+        if not off:
+            continue
+        from .patterns import access_sig
+        sig = access_sig(task, a)
+        # after reuse rewriting reads are exact-once; otherwise each re-read
+        # really hits memory
+        elems = min(sig.total, max(sig.distinct, 1)) if "reuse-rewritten" in task.tags \
+            or a.enclosing is not None else sig.total
+        nbytes = elems * np.dtype(buf.dtype).itemsize
+        burst_eff = 1.0
+        if buf.burst_len:
+            burst_eff = buf.burst_len / (buf.burst_len + 32)
+        ch = buf.hbm_channel if buf.hbm_channel >= 0 else 0
+        per_ch[ch] = per_ch.get(ch, 0.0) + nbytes / burst_eff
+    for a in task.writes:
+        buf = graph.buffers[a.buffer]
+        if buf.kind == "output" or buf.impl == PINGPONG:
+            ch = buf.hbm_channel if buf.hbm_channel >= 0 else 0
+            per_ch[ch] = per_ch.get(ch, 0.0) + buf.nbytes
+    return per_ch
+
+
+def task_cost(graph: DataflowGraph, task: Task, hw: HwParams = V5E) -> TaskCost:
+    ii = OP_II.get(task.op, 1.0)
+    degree = task_degree(task)
+    iters = task.total_iters
+    compute = iters * ii / degree + OP_DEPTH.get(task.op, 0.0)
+
+    per_ch = _offchip_read_bytes(graph, task)
+    memory = max(per_ch.values()) / hw.channel_bytes_per_cycle if per_ch else 0.0
+
+    latency = max(compute, memory) + sum(l.trip for l in task.loops[:2]) * 0.0
+
+    # first-emit skew: how far into the iteration space the first FIFO write
+    # lands.  Early (rewritten) writes emit after one reduction window;
+    # un-rewritten reductions emit at the end of the innermost index sweep —
+    # Fig. 2 Issue 2's "8/9 of iterations" penalty falls out of this.
+    first = latency  # default: block semantics
+    if task.writes:
+        w = task.writes[0]
+        red = reduction_dims(task, w)
+        red_iters = int(np.prod([task.loop(v).trip for v in red])) if red else 1
+        if w.enclosing is not None or not red:
+            # rewritten (or naturally streaming): first element after one
+            # reduction window at the current degree
+            first = red_iters * ii / degree + OP_DEPTH.get(task.op, 0.0)
+        else:
+            # write still inside reduction: last-minute emission — the
+            # consumer effectively waits for almost the whole task
+            idx_iters = int(np.prod([task.loop(v).trip for v in index_dims(task, w)]))
+            first = latency * (1.0 - 1.0 / max(idx_iters, 1))
+    vmem = sum(int(np.prod(s)) * 4 for s in task.reuse_buffers.values())
+    return TaskCost(task.name, compute, memory, latency, min(first, latency),
+                    degree, degree, vmem)
+
+
+# --------------------------------------------------------------------------
+# Graph latency (dataflow schedule evaluation, Fig. 1/2 semantics)
+# --------------------------------------------------------------------------
+
+
+@dataclass
+class GraphCost:
+    total_cycles: float
+    start: dict[str, float]
+    finish: dict[str, float]
+    costs: dict[str, TaskCost]
+    bottleneck: str
+    units: int
+    vmem_bytes: int
+    seconds: float = 0.0
+
+    def summary(self) -> str:
+        return (f"latency={self.total_cycles:,.0f} cycles ({self.seconds*1e3:.3f} ms), "
+                f"bottleneck={self.bottleneck}, units={self.units}, "
+                f"vmem={self.vmem_bytes/2**20:.2f} MiB")
+
+
+def _num_blocks(task: Task) -> int:
+    """Ping-pong block count: iterations of the outermost varying loop."""
+    for l in task.loops:
+        if l.trip > 1:
+            return l.trip
+    return 1
+
+
+def _stencil_fill(task: Task, cost: TaskCost) -> float:
+    """Line-buffer fill delay before a stencil consumer can start: kh-1 rows."""
+    for name, shape in task.reuse_buffers.items():
+        if name.startswith("lb_") and len(shape) == 3:
+            ci, khm1, row = shape
+            return ci * khm1 * row  # one cycle per element at arrival rate
+    return 0.0
+
+
+def graph_latency(graph: DataflowGraph, hw: HwParams = V5E,
+                  plan: BufferPlan | None = None,
+                  sequential: bool = False) -> GraphCost:
+    costs = {t.name: task_cost(graph, t, hw) for t in graph.tasks}
+    order = graph.toposort()
+    start: dict[str, float] = {}
+    finish: dict[str, float] = {}
+    impl = plan.impl if plan is not None else {
+        b.name: b.impl for b in graph.buffers.values()}
+
+    for t in order:
+        c = costs[t.name]
+        ready = 0.0
+        for a in t.reads:
+            buf = graph.buffers[a.buffer]
+            prods = graph.producers(a.buffer)
+            if not prods:
+                continue
+            p = prods[0]
+            pc, pf, ps = costs[p.name], finish[p.name], start[p.name]
+            if sequential:
+                ready = max(ready, pf)
+            elif impl.get(a.buffer) == FIFO:
+                skew = ps + pc.first_emit + _stencil_fill(t, c)
+                ready = max(ready, skew)
+            else:
+                # ping-pong: blocks alternate at the producer's outermost
+                # varying-loop granularity (Fig. 1(b)/Fig. 2(c)); the
+                # consumer starts once the first block lands.
+                ready = max(ready, ps + pc.latency / _num_blocks(p))
+        start[t.name] = ready
+        # steady state: a streaming consumer cannot finish before its
+        # producers finish feeding it (rate matching), plus the drain of
+        # its last block/element.
+        drain = 0.0
+        for a in t.reads:
+            for p in graph.producers(a.buffer):
+                if impl.get(a.buffer) == FIFO:
+                    tail = c.latency / max(t.total_iters, 1)
+                else:
+                    tail = c.latency / _num_blocks(t)
+                drain = max(drain, finish[p.name] + tail)
+        finish[t.name] = max(ready + c.latency, drain)
+
+    total = max(finish.values()) if finish else 0.0
+    bottleneck = max(costs.values(), key=lambda c: c.latency).task if costs else ""
+    units = sum(c.units for c in costs.values())
+    vmem = sum(c.vmem_bytes for c in costs.values())
+    if plan is not None:
+        vmem += plan.vmem_bytes
+    return GraphCost(total, start, finish, costs, bottleneck, units, vmem,
+                     seconds=total / hw.clock_hz)
+
+
+def sequential_latency(graph: DataflowGraph, hw: HwParams = V5E) -> GraphCost:
+    """The Vitis-HLS-baseline analogue: every task at degree 1, no overlap."""
+    g = graph.copy()
+    for t in g.tasks:
+        for l in t.loops:
+            l.parallel = 1
+    return graph_latency(g, hw, sequential=True)

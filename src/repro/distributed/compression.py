@@ -1,0 +1,86 @@
+"""Int8 gradient compression with error feedback (distributed-optimization
+trick, DESIGN.md §5).
+
+Per-tensor symmetric quantization: q = round(g / s · 127), s = max|g|.
+The quantization residual is carried in the optimizer state ("ef" buffers)
+and added back before the next quantization — the standard error-feedback
+correction that keeps compressed SGD/Adam convergent.
+
+The all-reduce itself runs on int32-accumulated int8 payloads (4× [bf16] /
+2× [f32→int8+scale] wire reduction).  Inside pjit the psum is expressed
+with ``jax.lax.psum`` when running under shard_map; under plain pjit the
+quantize/dequantize pair still shrinks any GSPMD-inserted all-reduce to
+the int8 payload.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize(g: jax.Array) -> tuple[jax.Array, jax.Array]:
+    g32 = g.astype(jnp.float32)
+    scale = jnp.maximum(jnp.max(jnp.abs(g32)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(g32 / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def compress_tree(grads: Any, ef: Any | None = None):
+    """Quantize every leaf (+error feedback).  Returns (q_tree, scale_tree,
+    new_ef_tree)."""
+    if ef is None:
+        ef = jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32), grads)
+    corrected = jax.tree.map(lambda g, e: g.astype(jnp.float32) + e, grads, ef)
+    qs = jax.tree.map(quantize, corrected,
+                      is_leaf=lambda x: isinstance(x, jax.Array))
+    q = jax.tree.map(lambda t: t[0], qs, is_leaf=lambda t: isinstance(t, tuple))
+    s = jax.tree.map(lambda t: t[1], qs, is_leaf=lambda t: isinstance(t, tuple))
+    new_ef = jax.tree.map(lambda c, qq, ss: c - dequantize(qq, ss),
+                          corrected, q, s)
+    return q, s, new_ef
+
+
+def compressed_allreduce(grads: Any, opt_state: dict,
+                         axes: tuple[str, ...]) -> tuple[Any, dict]:
+    """shard_map-visible compressed gradient all-reduce with error feedback
+    kept in ``opt_state['ef']``.
+
+    All ranks quantize against a *shared* scale (pmax of local abs-max):
+    the int32-accumulated payload then dequantizes exactly as
+    scale · Σ q_r.  Wire cost: 1 byte/grad + one scalar pmax per tensor,
+    vs 2-4 bytes/grad uncompressed.
+    """
+    ef = opt_state.get("ef")
+    if ef is None:
+        ef = jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32), grads)
+    corrected = jax.tree.map(lambda g, e: g.astype(jnp.float32) + e, grads, ef)
+
+    def leaf_reduce(c):
+        amax = jax.lax.pmax(jnp.max(jnp.abs(c)), axes)
+        scale = jnp.maximum(amax, 1e-12) / 127.0
+        q = jnp.clip(jnp.round(c / scale), -127, 127).astype(jnp.int8)
+        summed = jax.lax.psum(q.astype(jnp.int32), axes)
+        return summed.astype(jnp.float32) * scale, c - q.astype(jnp.float32) * scale
+
+    pairs = jax.tree.map(leaf_reduce, corrected)
+    out = jax.tree.map(lambda t: t[0], pairs,
+                       is_leaf=lambda t: isinstance(t, tuple))
+    new_ef = jax.tree.map(lambda t: t[1], pairs,
+                          is_leaf=lambda t: isinstance(t, tuple))
+    new_state = dict(opt_state)
+    new_state["ef"] = new_ef
+    return out, new_state
+
+
+def wire_bytes(tree: Any, compressed: bool) -> int:
+    leaves = jax.tree.leaves(tree)
+    if compressed:
+        return sum(x.size * 1 + 4 for x in leaves)
+    return sum(x.size * x.dtype.itemsize for x in leaves)

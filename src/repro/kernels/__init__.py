@@ -1,0 +1,19 @@
+"""Pallas TPU kernels for the compute hot-spots the paper optimizes.
+
+Each subpackage ships the kernel (pl.pallas_call + explicit BlockSpec VMEM
+tiling), a jit'd ``ops`` wrapper, and a ``ref`` pure-jnp oracle the tests
+sweep against in interpret mode:
+
+* ``flashattn``  — streaming online-softmax attention (GQA/causal/SWA)
+* ``matmul``     — blocked matmul with k-accumulation (Fig. 5 rewriting)
+* ``streamfuse`` — fused pad→conv→relu (the Fig. 2 motivating chain)
+* ``rglru``      — RG-LRU linear recurrence (FIFO-native stream)
+* ``ssd``        — Mamba-2 SSD inter-chunk state scan
+"""
+
+from . import flashattn, matmul, rglru, ssd, streamfuse
+
+
+def register_all() -> None:
+    """Hook hand-written kernels into the CODO lowering registry."""
+    streamfuse.register()

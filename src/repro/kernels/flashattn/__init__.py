@@ -1,0 +1,5 @@
+from .flashattn import flash_attention
+from .ops import flash_attn
+from .ref import attention_ref
+
+__all__ = ["attention_ref", "flash_attention", "flash_attn"]

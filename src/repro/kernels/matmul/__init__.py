@@ -1,0 +1,5 @@
+from .matmul import matmul
+from .ops import mm
+from .ref import matmul_ref
+
+__all__ = ["matmul", "matmul_ref", "mm"]

@@ -1,0 +1,24 @@
+"""Jit'd public wrapper for the blocked matmul kernel."""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from .matmul import matmul
+from .ref import matmul_ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@partial(jax.jit, static_argnames=("block_m", "block_n", "block_k",
+                                   "use_kernel"))
+def mm(a, b, *, block_m: int = 128, block_n: int = 128, block_k: int = 128,
+       use_kernel: bool = True):
+    if not use_kernel:
+        return matmul_ref(a, b)
+    return matmul(a, b, block_m=block_m, block_n=block_n, block_k=block_k,
+                  interpret=not _on_tpu())

@@ -1,0 +1,5 @@
+from .ops import rglru
+from .ref import rglru_ref
+from .rglru import rglru_scan
+
+__all__ = ["rglru", "rglru_ref", "rglru_scan"]

@@ -1,0 +1,16 @@
+"""Pure-jnp oracle for the RG-LRU recurrence kernel."""
+
+import jax
+import jax.numpy as jnp
+
+
+def rglru_ref(a: jax.Array, b: jax.Array) -> jax.Array:
+    def combine(l, r):
+        al, bl = l
+        ar, br = r
+        return al * ar, ar * bl + br
+
+    af = a.astype(jnp.float32)
+    bf = b.astype(jnp.float32)
+    _, h = jax.lax.associative_scan(combine, (af, bf), axis=1)
+    return h.astype(a.dtype)

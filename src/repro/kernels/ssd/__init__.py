@@ -1,0 +1,5 @@
+from .ops import ssd_states
+from .ref import ssd_chunk_scan_ref
+from .ssd import ssd_chunk_scan
+
+__all__ = ["ssd_chunk_scan", "ssd_chunk_scan_ref", "ssd_states"]

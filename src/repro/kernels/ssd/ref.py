@@ -1,0 +1,16 @@
+"""Pure-jnp oracle for the SSD chunk-state scan kernel."""
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_chunk_scan_ref(states: jax.Array, decay: jax.Array) -> jax.Array:
+    """states: (nc, BH, P, N); decay: (nc, BH, 1, 1) -> carried-in states."""
+
+    def step(h, inp):
+        st, dec = inp
+        return h * dec.astype(jnp.float32) + st.astype(jnp.float32), h
+
+    h0 = jnp.zeros(states.shape[1:], jnp.float32)
+    _, prevs = jax.lax.scan(step, h0, (states, decay))
+    return prevs.astype(states.dtype)

@@ -1,0 +1,6 @@
+from .ops import pad_conv_relu, register
+from .ref import pad_conv_relu_ref
+from .streamfuse import fused_pad_conv_relu
+
+__all__ = ["fused_pad_conv_relu", "pad_conv_relu", "pad_conv_relu_ref",
+           "register"]

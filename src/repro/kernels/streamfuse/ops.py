@@ -1,0 +1,47 @@
+"""Jit'd wrapper + CODO-lowering registration for the streamfuse kernel.
+
+``register()`` hooks the kernel into the dataflow compiler's lowering: a
+fusion group matching (pad, conv, ewise) — the motivating chain — executes
+as this single streaming kernel instead of three XLA ops.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from .ref import pad_conv_relu_ref
+from .streamfuse import fused_pad_conv_relu
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@partial(jax.jit, static_argnames=("use_kernel",))
+def pad_conv_relu(x, w, *, use_kernel: bool = True):
+    if not use_kernel:
+        return pad_conv_relu_ref(x, w)
+    return fused_pad_conv_relu(x, w, interpret=not _on_tpu())
+
+
+def register() -> None:
+    """Register as the lowering for (pad, conv, ewise) fusion groups."""
+    from ...core.lowering import register_group_kernel
+
+    def factory(graph, group):
+        pad_t = graph.task(group.tasks[0])
+        conv_t = graph.task(group.tasks[1])
+        relu_t = graph.task(group.tasks[2])
+        x_buf = pad_t.reads[0].buffer
+        w_buf = next(a.buffer for a in conv_t.reads
+                     if graph.buffers[a.buffer].kind == "weight")
+        out_buf = relu_t.writes[0].buffer
+
+        def run(env):
+            return {out_buf: pad_conv_relu(env[x_buf], env[w_buf])}
+
+        return run
+
+    register_group_kernel(("pad", "conv", "ewise"), factory)

@@ -1,0 +1,14 @@
+"""Pure-jnp oracle for the fused pad+conv+relu streaming kernel."""
+
+import jax
+import jax.numpy as jnp
+
+
+def pad_conv_relu_ref(x: jax.Array, w: jax.Array) -> jax.Array:
+    k = w.shape[-1]
+    p = k // 2
+    xp = jnp.pad(x, ((0, 0), (0, 0), (p, p), (p, p)))
+    y = jax.lax.conv_general_dilated(
+        xp.astype(jnp.float32), w.astype(jnp.float32), (1, 1), "VALID",
+        dimension_numbers=("NCHW", "OIHW", "NCHW"))
+    return jnp.maximum(y, 0).astype(x.dtype)

@@ -1,0 +1,394 @@
+"""Compiled-HLO walker: loop-aware FLOP / byte / collective accounting.
+
+XLA's ``compiled.cost_analysis()`` counts a ``while`` body **once**,
+regardless of trip count — under a layer-``scan`` (and the nested
+blockwise-attention scans) that undercounts a transformer step by orders
+of magnitude.  This walker parses the post-optimization HLO text and
+aggregates per-computation costs **multiplied through while-loop trip
+counts**:
+
+* FLOPs       — ``dot`` ops: 2 · |result| · K (K = contracted extent from
+  the lhs operand's shape, resolved via a per-computation symbol table).
+* HBM bytes   — fusion-boundary traffic: for every materializing op
+  (fusion, dot, dynamic-slice/update, copy, collectives, ...) the result
+  bytes + operand bytes.  Values internal to a fusion never hit memory —
+  exactly XLA's own bytes-accessed convention, but loop-aware.
+* Collectives — per-type link bytes with ring-algorithm multipliers
+  (see EXPERIMENTS.md §Roofline) using ``replica_groups`` sizes.
+
+Trip counts come from each while-condition computation's comparison
+constant (jax scans lower to ``iter < C``).
+"""
+
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "u64": 8,
+                "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+                "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1, "c64": 8, "c128": 16}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(.+)$")
+_COMP_HDR = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->.*\{")
+_PARAM_RE = re.compile(r"%?([\w.\-]+):\s*([a-z0-9]+\[[0-9,]*\])")
+_CALL_ATTR = re.compile(
+    r"(?:calls=|to_apply=|condition=|body=)%([\w.\-]+)")
+_BRANCHES = re.compile(r"branch_computations=\{([^}]*)\}")
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_BRACES = re.compile(r"replica_groups=\{\{([^}]*)\}")
+_CONST_RE = re.compile(r"s32\[\]\s+constant\((\d+)\)")
+_COLL_OPS = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+             "collective-permute")
+
+# ops whose operands/results cross a memory boundary
+_MATERIALIZING = ("fusion(", "dot(", "convolution(", "dynamic-slice(",
+                  "dynamic-update-slice(", "copy(", "gather(", "scatter(",
+                  "sort(", "reduce(", "transpose(", "concatenate(", "pad(",
+                  "select(", "custom-call(")
+
+# in-place-aliased accumulators: traffic = slice, not the whole buffer
+_ALIASING = ("dynamic-update-slice", "dynamic_update_slice", "dynamic-slice",
+             "dynamic_slice")
+
+
+def _shape_elems(dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n
+
+
+def _first_shape(text: str) -> tuple[str, int] | None:
+    m = _SHAPE_RE.search(text)
+    if not m:
+        return None
+    return m.group(1), _shape_elems(m.group(2))
+
+
+def _all_bytes(text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt in _DTYPE_BYTES:
+            total += _shape_elems(dims) * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclass
+class Computation:
+    name: str
+    lines: list[str] = field(default_factory=list)
+    symbols: dict[str, str] = field(default_factory=dict)  # var -> "dt[dims]"
+
+
+@dataclass
+class HloCost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    transcendentals: float = 0.0
+    collective: dict = field(default_factory=lambda: {
+        k: 0.0 for k in _COLL_OPS} | {"count": 0.0})
+
+    def add(self, other: "HloCost", mult: float = 1.0) -> None:
+        self.flops += other.flops * mult
+        self.bytes += other.bytes * mult
+        self.transcendentals += other.transcendentals * mult
+        for k in self.collective:
+            self.collective[k] += other.collective.get(k, 0.0) * mult
+
+    @property
+    def collective_total(self) -> float:
+        return sum(v for k, v in self.collective.items() if k != "count")
+
+
+def parse_computations(hlo: str) -> dict[str, Computation]:
+    comps: dict[str, Computation] = {}
+    cur: Computation | None = None
+    for line in hlo.splitlines():
+        if cur is None:
+            m = _COMP_HDR.match(line.strip())
+            if m:
+                cur = Computation(m.group(1))
+                for var, shape in _PARAM_RE.findall(line):
+                    cur.symbols[var] = shape
+            continue
+        if line.strip() == "}":
+            comps[cur.name] = cur
+            cur = None
+            continue
+        cur.lines.append(line)
+        dm = _DEF_RE.match(line)
+        if dm:
+            var, rhs = dm.group(1), dm.group(2)
+            fs = _SHAPE_RE.match(rhs.strip().lstrip("("))
+            if fs:
+                cur.symbols[var] = f"{fs.group(1)}[{fs.group(2)}]"
+    return comps
+
+
+def _dot_flops(line: str, comp: Computation) -> float:
+    dm = _DEF_RE.match(line)
+    if not dm:
+        return 0.0
+    rhs = dm.group(2)
+    res = _first_shape(rhs.split("dot(")[0])
+    if res is None:
+        return 0.0
+    _dt, out_elems = res
+    # contracted extent from lhs operand shape + lhs_contracting_dims
+    args = rhs[rhs.index("dot(") + 4:]
+    arg_names = re.findall(r"%([\w.\-]+)", args.split(")")[0])
+    cm = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", rhs)
+    k = 1
+    if arg_names and cm:
+        lhs_shape = comp.symbols.get(arg_names[0])
+        if lhs_shape:
+            dims = [int(d) for d in
+                    _SHAPE_RE.match(lhs_shape).group(2).split(",") if d]
+            for ci in cm.group(1).split(","):
+                if ci and int(ci) < len(dims):
+                    k *= dims[int(ci)]
+    return 2.0 * out_elems * k
+
+
+def _operand_shapes(rhs: str, comp: Computation) -> list[str]:
+    op_start = rhs.find("(")
+    if op_start < 0:
+        return []
+    arg_str = rhs[op_start + 1:]
+    depth, end = 1, 0
+    for i, ch in enumerate(arg_str):
+        if ch == "(":
+            depth += 1
+        elif ch == ")":
+            depth -= 1
+            if depth == 0:
+                end = i
+                break
+    out = []
+    for name in re.findall(r"%([\w.\-]+)", arg_str[:end]):
+        shp = comp.symbols.get(name)
+        if shp:
+            out.append(shp)
+    return out
+
+
+def _line_bytes(line: str, rhs: str, comp: Computation) -> float:
+    """HBM traffic of one materializing op.
+
+    * plain op: result bytes + operand bytes (XLA's bytes-accessed
+      convention at the fusion boundary);
+    * dynamic-(update-)slice, or a fusion wrapping one: the big buffer is
+      aliased in place — traffic is the *slice* (operands whose shape
+      differs from the result) read+written, not the whole accumulator.
+    """
+    result_b = float(_all_bytes(rhs.split("(")[0] if "(" in rhs else rhs))
+    operands = _operand_shapes(rhs, comp)
+    aliasing = any(tok in rhs for tok in _ALIASING) or \
+        any(tok in line.split("=")[0] for tok in _ALIASING)
+    if aliasing:
+        op_bytes = [_all_bytes(s) for s in operands]
+        big_op = max(op_bytes, default=0)
+        if result_b >= big_op:
+            # dus-like: result is the aliased accumulator; traffic = the
+            # update slice (largest operand smaller than the buffer)
+            slice_b = max([b for b in op_bytes if b < result_b],
+                          default=result_b)
+            return 2.0 * slice_b
+        # ds-like: an operand is the aliased buffer; traffic = the slice out
+        return 2.0 * result_b
+    return result_b + sum(_all_bytes(s) for s in operands)
+
+
+def _fusion_param_charges(called: Computation) -> list[float] | None:
+    """Per-parameter HBM charge of a fusion computation.
+
+    A fusion parameter whose only uses are ``dynamic-slice`` ops is read as
+    slices (loop-carried big buffers: charge the slice, not the buffer);
+    any other use reads the tensor fully.  Returns charges indexed by
+    parameter number, or None if parsing fails.
+    """
+    params: dict[str, tuple[int, str]] = {}
+    for line in called.lines:
+        m = re.match(r"\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*([a-z0-9]+\[[0-9,]*\])"
+                     r"[^=]*parameter\((\d+)\)", line)
+        if m:
+            params[m.group(1)] = (int(m.group(3)), m.group(2))
+    if not params:
+        return None
+    n = max(i for (i, _s) in params.values()) + 1
+    charges = [0.0] * n
+    sliced_only = {name: True for name in params}
+    slice_bytes = {name: 0.0 for name in params}
+    for line in called.lines:
+        dm = _DEF_RE.match(line)
+        if not dm:
+            continue
+        rhs = dm.group(2)
+        if re.search(r"parameter\(\d+\)", rhs):
+            continue
+        used = [nm for nm in re.findall(r"%([\w.\-]+)", rhs) if nm in params]
+        if not used:
+            continue
+        is_ds = bool(re.search(r"\bdynamic-slice\(", rhs))
+        for nm in used:
+            if is_ds and nm == used[0]:
+                slice_bytes[nm] += _all_bytes(rhs.split("(")[0])
+            else:
+                sliced_only[nm] = False
+    for nm, (idx_, shp) in params.items():
+        if sliced_only[nm] and slice_bytes[nm] > 0:
+            charges[idx_] += slice_bytes[nm]
+        else:
+            charges[idx_] += _all_bytes(shp)
+    return charges
+
+
+def _trip_count(cond_name: str, comps: dict[str, Computation]) -> int:
+    """Max s32 constant in the condition computation (+1 level of calls)."""
+    seen = []
+    comp = comps.get(cond_name)
+    if comp is None:
+        return 1
+    text = "\n".join(comp.lines)
+    seen += [int(x) for x in _CONST_RE.findall(text)]
+    for callee in _CALL_ATTR.findall(text):
+        sub = comps.get(callee)
+        if sub:
+            seen += [int(x) for x in _CONST_RE.findall("\n".join(sub.lines))]
+    return max(seen) if seen else 1
+
+
+def _collective_moved(op: str, nbytes: float, g: int) -> float:
+    if op == "all-reduce":
+        return 2 * (g - 1) / g * nbytes
+    if op == "all-gather":
+        return (g - 1) / g * nbytes          # result = gathered tensor
+    if op == "reduce-scatter":
+        return float((g - 1)) * nbytes       # result = the shard
+    if op == "all-to-all":
+        return (g - 1) / g * nbytes
+    return nbytes                             # collective-permute
+
+
+def analyze(hlo: str, entry: str | None = None) -> HloCost:
+    comps = parse_computations(hlo)
+    if entry is None:
+        m = re.search(r"^ENTRY\s+%?([\w.\-]+)", hlo, re.M)
+        entry = m.group(1) if m else next(iter(comps))
+    memo: dict[str, HloCost] = {}
+
+    def walk(name: str) -> HloCost:
+        if name in memo:
+            return memo[name]
+        memo[name] = HloCost()          # break accidental cycles
+        comp = comps.get(name)
+        if comp is None:
+            return memo[name]
+        cost = HloCost()
+        # bytes are de-duplicated per tensor within one invocation of this
+        # computation: a value read by many fusions inside one loop body
+        # stays resident (the TPU mega-fusion view); sliced accumulators
+        # still charge one slice per invocation.
+        seen_tensors: set[str] = set()
+
+        def tensor_bytes_unique(line: str, rhs: str) -> float:
+            aliasing = any(tok in rhs for tok in _ALIASING) or \
+                any(tok in line.split("=")[0] for tok in _ALIASING)
+            if aliasing:
+                return _line_bytes(line, rhs, comp)
+            total = 0.0
+            dm2 = _DEF_RE.match(line)
+            res_name = dm2.group(1) if dm2 else None
+            if res_name and res_name not in seen_tensors:
+                seen_tensors.add(res_name)
+                total += _all_bytes(rhs.split("(")[0])
+            op_start = rhs.find("(")
+            if op_start < 0:
+                return total
+            arg_str = rhs[op_start + 1:]
+            depth, end = 1, 0
+            for i, ch in enumerate(arg_str):
+                if ch == "(":
+                    depth += 1
+                elif ch == ")":
+                    depth -= 1
+                    if depth == 0:
+                        end = i
+                        break
+            operands = re.findall(r"%([\w.\-]+)", arg_str[:end])
+            # fusion interior analysis: parameters consumed only through
+            # dynamic-slice charge the slice, not the full buffer
+            charges = None
+            cm = re.search(r"calls=%([\w.\-]+)", rhs)
+            if cm and cm.group(1) in comps:
+                charges = _fusion_param_charges(comps[cm.group(1)])
+            for i, nm in enumerate(operands):
+                shp = comp.symbols.get(nm)
+                if not shp:
+                    continue
+                full = _all_bytes(shp)
+                if charges is not None and i < len(charges):
+                    charge = min(charges[i], full)
+                    if charge < full:
+                        total += charge      # sliced read: charge per call
+                        continue
+                if nm in seen_tensors:
+                    continue
+                seen_tensors.add(nm)
+                total += full
+            return total
+
+        for line in comp.lines:
+            dm = _DEF_RE.match(line)
+            if not dm:
+                continue
+            rhs = dm.group(2)
+            # ---- collectives ------------------------------------------------
+            coll = next((c for c in _COLL_OPS
+                         if re.search(rf"\b{c}(-start)?\(", rhs)), None)
+            if coll is not None and f"{coll}-done(" not in rhs:
+                gm = _GROUPS_RE.search(rhs)
+                if gm:
+                    g = int(gm.group(2))
+                else:
+                    gb = _GROUPS_BRACES.search(rhs)
+                    g = len(gb.group(1).split(",")) if gb else 2
+                nbytes = _all_bytes(rhs[:rhs.index(coll)])
+                cost.collective[coll] += _collective_moved(coll, nbytes, max(g, 2))
+                cost.collective["count"] += 1
+                cost.bytes += nbytes
+                continue
+            # ---- while loops -----------------------------------------------
+            if re.search(r"\bwhile\(", rhs):
+                cm = re.search(r"condition=%([\w.\-]+)", rhs)
+                bm = re.search(r"body=%([\w.\-]+)", rhs)
+                trip = _trip_count(cm.group(1), comps) if cm else 1
+                if bm:
+                    cost.add(walk(bm.group(1)), mult=max(trip, 1))
+                continue
+            # ---- conditionals / calls ---------------------------------------
+            br = _BRANCHES.search(rhs)
+            if br:
+                for callee in re.findall(r"%([\w.\-]+)", br.group(1)):
+                    cost.add(walk(callee))
+                continue
+            called = _CALL_ATTR.findall(rhs)
+            for callee in called:
+                cost.add(walk(callee))
+            # ---- flops --------------------------------------------------------
+            if re.search(r"\bdot\(", rhs):
+                cost.flops += _dot_flops(line, comp)
+            if re.search(r"\b(exponential|tanh|logistic|log|rsqrt|power)\(", rhs):
+                fs = _first_shape(rhs)
+                if fs:
+                    cost.transcendentals += fs[1]
+            # ---- bytes ---------------------------------------------------------
+            if any(tok in rhs for tok in _MATERIALIZING):
+                cost.bytes += tensor_bytes_unique(line, rhs)
+        memo[name] = cost
+        return cost
+
+    return walk(entry)

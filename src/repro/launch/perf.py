@@ -1,0 +1,81 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""§Perf iteration driver: compile one (arch × shape × mesh) cell under a
+set of optimization-switch combinations and print the roofline-term
+comparison — the hypothesis→change→measure loop as a command.
+
+    PYTHONPATH=src python -m repro.launch.perf --arch gemma-7b \\
+        --shape train_4k \\
+        --variant base \\
+        --variant h1:REPRO_ATTN_OPT=1 \\
+        --variant h1d:REPRO_ATTN_OPT=1,REPRO_REMAT_POLICY=dots
+
+Each variant spawns a fresh subprocess (the switches are read at import
+time) running the dry-run for the cell, then the parent prints a table.
+"""
+
+import argparse
+import json
+import subprocess
+import sys
+import tempfile
+from pathlib import Path
+
+
+def run_variant(arch: str, shape: str, mesh: str, name: str,
+                env_pairs: list[str], outdir: Path) -> dict:
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)   # child sets its own
+    for pair in env_pairs:
+        k, v = pair.split("=", 1)
+        env[k] = v
+    vdir = outdir / name
+    cmd = [sys.executable, "-m", "repro.launch.dryrun", "--arch", arch,
+           "--shape", shape, "--mesh", mesh, "--out", str(vdir), "--force"]
+    proc = subprocess.run(cmd, env=env, capture_output=True, text=True)
+    if proc.returncode != 0:
+        raise RuntimeError(proc.stderr[-2000:])
+    rec = json.loads(next(vdir.glob("*.json")).read_text())
+    rec["variant"] = name
+    return rec
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--mesh", default="single", choices=["single", "multi"])
+    ap.add_argument("--variant", action="append", default=[],
+                    help="name[:ENV=V,ENV=V...]; 'base' = no switches")
+    ap.add_argument("--out", default="")
+    args = ap.parse_args(argv)
+
+    outdir = Path(args.out) if args.out else Path(tempfile.mkdtemp(prefix="perf_"))
+    variants = args.variant or ["base"]
+
+    sys.path.insert(0, str(Path(__file__).resolve().parents[3] / "benchmarks"))
+    from benchmarks.roofline import roofline_row  # noqa: E402
+
+    rows = []
+    for v in variants:
+        name, _, envs = v.partition(":")
+        pairs = [p for p in envs.split(",") if p]
+        rec = run_variant(args.arch, args.shape, args.mesh, name, pairs, outdir)
+        rows.append((name, roofline_row(rec)))
+        r = rows[-1][1]
+        print(f"{name:<12s} compute={r.compute_s:9.4f}s memory={r.memory_s:9.4f}s "
+              f"collective={r.collective_s:9.4f}s dominant={r.dominant:<10s} "
+              f"useful={r.useful_ratio:5.2f} roofline={r.roofline_fraction:8.5f} "
+              f"peak={r.peak_gib:6.2f}GiB", flush=True)
+    if len(rows) > 1:
+        base, last = rows[0][1], rows[-1][1]
+        if base.roofline_fraction > 0:
+            print(f"\nroofline gain {rows[-1][0]} vs {rows[0][0]}: "
+                  f"{last.roofline_fraction / base.roofline_fraction:.2f}x")
+    print(f"records in {outdir}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

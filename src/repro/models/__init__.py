@@ -1,0 +1,64 @@
+"""Model zoo facade + batch construction for every (arch × shape) cell."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import ArchConfig, ShapeSpec
+from . import layers, rglru, ssm, transformer
+from .transformer import (cache_len_for, decode_step, forward, init_cache,
+                          init_params, loss_fn, param_count, param_shapes,
+                          prefill)
+
+
+def batch_spec(cfg: ArchConfig, shape: ShapeSpec) -> dict:
+    """ShapeDtypeStruct stand-ins for every model input of this cell
+    (the dry-run's ``input_specs()``)."""
+    B, S = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    if shape.kind == "decode":
+        return {"tokens": jax.ShapeDtypeStruct((B,), i32)}
+    s_text = S - cfg.n_patches if cfg.n_patches else S
+    out = {"tokens": jax.ShapeDtypeStruct((B, s_text), i32)}
+    if shape.kind == "train":
+        out["labels"] = jax.ShapeDtypeStruct((B, s_text), i32)
+    if cfg.n_patches:
+        out["patch_embeds"] = jax.ShapeDtypeStruct(
+            (B, cfg.n_patches, cfg.d_model), cfg.jdtype)
+    if cfg.enc_dec:
+        out["frames"] = jax.ShapeDtypeStruct(
+            (B, cfg.enc_frames, cfg.d_model), cfg.jdtype)
+    return out
+
+
+def make_batch(cfg: ArchConfig, *, batch: int, seq: int, kind: str,
+               seed: int = 0) -> dict:
+    """Concrete synthetic batch (smoke tests / examples).  The audio/vision
+    frontends are stubs: frames/patch embeddings are generated directly."""
+    rng = np.random.default_rng(seed)
+    if kind == "decode":
+        return {"tokens": jnp.asarray(rng.integers(0, cfg.vocab, (batch,)),
+                                      jnp.int32)}
+    s_text = seq - cfg.n_patches if cfg.n_patches else seq
+    out = {"tokens": jnp.asarray(rng.integers(0, cfg.vocab, (batch, s_text)),
+                                 jnp.int32)}
+    if kind == "train":
+        out["labels"] = jnp.asarray(rng.integers(0, cfg.vocab, (batch, s_text)),
+                                    jnp.int32)
+    if cfg.n_patches:
+        out["patch_embeds"] = jnp.asarray(
+            rng.standard_normal((batch, cfg.n_patches, cfg.d_model)) * 0.02,
+            cfg.jdtype)
+    if cfg.enc_dec:
+        out["frames"] = jnp.asarray(
+            rng.standard_normal((batch, cfg.enc_frames, cfg.d_model)) * 0.02,
+            cfg.jdtype)
+    return out
+
+
+__all__ = ["batch_spec", "cache_len_for", "decode_step", "forward",
+           "init_cache", "init_params", "layers", "loss_fn", "make_batch",
+           "param_count", "param_shapes", "prefill", "rglru", "ssm",
+           "transformer"]

@@ -1,0 +1,580 @@
+"""Transformer layer library: norms, RoPE, GQA/MQA attention (blockwise,
+sliding-window, KV-cache), gated/plain FFN, MoE, embeddings.
+
+Everything is functional (params are plain dict pytrees) so the same code
+paths run under jit / shard_map / eval_shape.  Attention for long
+sequences is *blockwise with online softmax* (the flash-attention
+recurrence) implemented in pure jnp via nested ``lax.scan`` — the memory-
+bounded oracle; the Pallas kernel in ``kernels/flashattn`` implements the
+same recurrence for the TPU target and is validated against this.
+
+Dataflow-compiler tie-in: the online-softmax recurrence *is* CODO's
+reduction-operation rewriting (Fig. 5) applied to the softmax/PV chain —
+the KV axis is the reduction dim, the running (m, l, acc) triple is the
+temporary accumulator, and the rescaled tile is emitted exactly once.
+"""
+
+from __future__ import annotations
+
+import math
+import os
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+
+Params = dict
+
+# --- §Perf hillclimb switches (read at trace time; set by launch/dryrun) ---
+# REPRO_ATTN_OPT=1     repeat KV to query heads and shard the merged head
+#                      dim over `model` (GQA under TP: trades a small KV
+#                      repeat for un-replicated attention compute).
+# REPRO_ATTN_SEQSHARD=1  additionally shard q-blocks over `model`
+#                      (sequence-parallel attention for head-starved archs).
+_ATTN_OPT = os.environ.get("REPRO_ATTN_OPT", "0") == "1"
+_ATTN_SEQSHARD = os.environ.get("REPRO_ATTN_SEQSHARD", "0") == "1"
+# REPRO_BF16_BWD=1  cast matmul cotangents to the weight dtype before the
+#                   backward dots: keeps weight all-gathers and activation-
+#                   grad all-reduces in bf16 instead of f32 (halves the
+#                   dominant collective payloads; standard mixed-precision
+#                   training practice).
+_BF16_BWD = os.environ.get("REPRO_BF16_BWD", "0") == "1"
+# REPRO_MOE_BF16DISPATCH=1  run the MoE dispatch/one-hot einsums in bf16:
+#                   the dispatch matrix is {0,1}-valued (bf16-exact) and
+#                   each token lands in exactly one capacity slot, so
+#                   dispatch is lossless; only the f32 combine weights
+#                   stay f32.  Halves the dominant MoE dispatch traffic.
+_MOE_BF16 = os.environ.get("REPRO_MOE_BF16DISPATCH", "0") == "1"
+# REPRO_MOE_CHUNK=N  token-chunk size of the MoE dispatch scan.  Each chunk
+#                   re-reads the full expert weight bank, so fewer/larger
+#                   chunks trade dispatch-tensor size for weight traffic.
+_MOE_CHUNK = int(os.environ.get("REPRO_MOE_CHUNK", "0"))
+
+
+@jax.custom_vjp
+def dot_bf16bwd(x, w):
+    return x @ w
+
+
+def _dot_fwd(x, w):
+    return x @ w, (x, w)
+
+
+def _dot_bwd(res, g):
+    x, w = res
+    gb = g.astype(w.dtype)
+    dx = jnp.einsum("...f,df->...d", gb, w)
+    dw = jnp.einsum("...d,...f->df", x, gb).astype(w.dtype)
+    return dx.astype(x.dtype), dw
+
+
+dot_bf16bwd.defvjp(_dot_fwd, _dot_bwd)
+
+
+# --------------------------------------------------------------------------
+# Initializers / linear
+# --------------------------------------------------------------------------
+
+
+def dense_init(key, d_in: int, d_out: int, dtype, bias: bool = False,
+               scale: float | None = None) -> Params:
+    scale = scale if scale is not None else 1.0 / math.sqrt(d_in)
+    p = {"w": (jax.random.normal(key, (d_in, d_out)) * scale).astype(dtype)}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+def linear(p: Params, x: jax.Array) -> jax.Array:
+    y = dot_bf16bwd(x, p["w"]) if _BF16_BWD else x @ p["w"]
+    if "b" in p:
+        y = y + p["b"]
+    return y
+
+
+def norm_init(d: int, kind: str, dtype) -> Params:
+    p = {"scale": jnp.ones((d,), dtype)}
+    if kind == "layernorm":
+        p["bias"] = jnp.zeros((d,), dtype)
+    return p
+
+
+def apply_norm(p: Params, x: jax.Array, kind: str, eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    if kind == "layernorm":
+        mu = xf.mean(-1, keepdims=True)
+        var = ((xf - mu) ** 2).mean(-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + eps)
+        return (y * p["scale"].astype(jnp.float32)
+                + p["bias"].astype(jnp.float32)).astype(x.dtype)
+    var = (xf ** 2).mean(-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+def activation(x: jax.Array, act: str) -> jax.Array:
+    if act in ("silu", "swish"):
+        return jax.nn.silu(x)
+    if act in ("gelu", "geglu"):
+        return jax.nn.gelu(x)
+    if act == "relu":
+        return jax.nn.relu(x)
+    raise ValueError(act)
+
+
+# --------------------------------------------------------------------------
+# RoPE
+# --------------------------------------------------------------------------
+
+
+def rope_freqs(hd: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, hd, 2, dtype=jnp.float32) / hd))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., S, H, hd); positions: broadcastable to (..., S)."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                       # (hd/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (..., S, hd/2)
+    ang = ang[..., None, :]                              # (..., S, 1, hd/2)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# Attention
+# --------------------------------------------------------------------------
+
+
+def init_attention(key, cfg: ArchConfig, d_model: int | None = None) -> Params:
+    d = d_model or cfg.d_model
+    ks = jax.random.split(key, 4)
+    dt = cfg.jdtype
+    return {
+        "wq": dense_init(ks[0], d, cfg.q_dim, dt, bias=cfg.qkv_bias),
+        "wk": dense_init(ks[1], d, cfg.kv_dim, dt, bias=cfg.qkv_bias),
+        "wv": dense_init(ks[2], d, cfg.kv_dim, dt, bias=cfg.qkv_bias),
+        "wo": dense_init(ks[3], cfg.q_dim, d, dt),
+    }
+
+
+def _qkv(p: Params, x: jax.Array, cfg: ArchConfig):
+    B, S, _ = x.shape
+    q = linear(p["wq"], x).reshape(B, S, cfg.n_heads, cfg.hd)
+    k = linear(p["wk"], x).reshape(B, S, cfg.n_kv_heads, cfg.hd)
+    v = linear(p["wv"], x).reshape(B, S, cfg.n_kv_heads, cfg.hd)
+    return q, k, v
+
+
+def blockwise_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                        *, causal: bool, window: int = 0,
+                        q_offset: int = 0,
+                        block_q: int = 512, block_k: int = 1024) -> jax.Array:
+    """Flash-style online-softmax attention in pure jnp.
+
+    q: (B, Sq, Hq, hd); k/v: (B, Sk, Hkv, hd) with Hq = G·Hkv.
+    Nested scans over (q blocks × kv blocks) keep live memory at
+    O(B·H·bq·bk) regardless of sequence length.
+    """
+    B, Sq, Hq, hd = q.shape
+    Sk, Hkv = k.shape[1], k.shape[2]
+    if _ATTN_OPT and Hq > Hkv:
+        # repeat KV to query heads: the merged head dim then shards over
+        # `model` regardless of the (small) KV-head count — attention
+        # compute stops replicating across the TP axis (§Perf H1)
+        rep = Hq // Hkv
+        k = jnp.repeat(k, rep, axis=2)
+        v = jnp.repeat(v, rep, axis=2)
+        Hkv = Hq
+    G = Hq // Hkv
+    scale = 1.0 / math.sqrt(hd)
+    bq, bk = min(block_q, Sq), min(block_k, Sk)
+    nq, nk = Sq // bq, Sk // bk
+    assert Sq % bq == 0 and Sk % bk == 0, (Sq, bq, Sk, bk)
+
+    if _ATTN_SEQSHARD:
+        # §Perf H2 (revised): sharding the *scanned* q-block axis makes
+        # GSPMD gather it (a scan is sequential) — instead group q blocks
+        # (outer scanned, inner P-parallel) and shard the inner group dim
+        # over `model`: each device owns nq/P q-blocks per outer step.
+        return _blockwise_seqshard(q, k, v, causal=causal, window=window,
+                                   q_offset=q_offset, bq=bq, bk=bk)
+
+    qb = q.reshape(B, nq, bq, Hkv, G, hd).transpose(1, 0, 3, 4, 2, 5)  # (nq,B,Hkv,G,bq,hd)
+    kb = k.reshape(B, nk, bk, Hkv, hd).transpose(1, 0, 3, 2, 4)        # (nk,B,Hkv,bk,hd)
+    vb = v.reshape(B, nk, bk, Hkv, hd).transpose(1, 0, 3, 2, 4)
+    if _ATTN_OPT:
+        from ..distributed.sharding import BATCH, shard_hint
+        qb = shard_hint(qb, None, BATCH, "model", None, None, None)
+        kb = shard_hint(kb, None, BATCH, "model", None, None)
+        vb = shard_hint(vb, None, BATCH, "model", None, None)
+
+    q_pos_base = jnp.arange(bq)
+    k_pos_base = jnp.arange(bk)
+
+    def q_block(qi, qtile):
+        q_pos = q_offset + qi * bq + q_pos_base                  # (bq,)
+
+        @jax.checkpoint
+        def kv_block(carry, inp):
+            m, l, acc = carry
+            ki, ktile, vtile = inp
+            k_pos = ki * bk + k_pos_base                         # (bk,)
+            s = jnp.einsum("bhgqd,bhkd->bhgqk", qtile.astype(jnp.float32),
+                           ktile.astype(jnp.float32)) * scale
+            mask = jnp.ones((bq, bk), bool)
+            if causal:
+                mask &= q_pos[:, None] >= k_pos[None, :]
+            if window:
+                mask &= q_pos[:, None] - k_pos[None, :] < window
+            s = jnp.where(mask[None, None, None], s, -1e30)
+            m_new = jnp.maximum(m, s.max(-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bhgqk,bhkd->bhgqd", p, vtile.astype(jnp.float32))
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((B, Hkv, G, bq), -1e30, jnp.float32)
+        l0 = jnp.zeros((B, Hkv, G, bq), jnp.float32)
+        a0 = jnp.zeros((B, Hkv, G, bq, hd), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(
+            kv_block, (m0, l0, a0), (jnp.arange(nk), kb, vb))
+        return acc / jnp.maximum(l, 1e-30)[..., None]
+
+    q_block = jax.checkpoint(q_block)   # bwd re-streams KV per q-block
+    _, out = jax.lax.scan(
+        lambda _c, inp: (None, q_block(*inp)), None, (jnp.arange(nq), qb))
+    # out: (nq, B, Hkv, G, bq, hd) -> (B, Sq, Hq, hd)
+    out = out.transpose(1, 0, 4, 2, 3, 5).reshape(B, Sq, Hq, hd)
+    return out.astype(q.dtype)
+
+
+def _blockwise_seqshard(q, k, v, *, causal: bool, window: int,
+                        q_offset: int, bq: int, bk: int) -> jax.Array:
+    """Sequence-parallel blockwise attention: q blocks grouped (outer
+    scanned × inner P-parallel), the inner group dim sharded over `model`.
+    Numerically identical to blockwise_attention."""
+    from ..distributed.sharding import BATCH, shard_hint
+
+    B, Sq, Hq, hd = q.shape
+    Sk, Hkv = k.shape[1], k.shape[2]
+    G = Hq // Hkv
+    scale = 1.0 / math.sqrt(hd)
+    nq, nk = Sq // bq, Sk // bk
+    try:
+        mesh = jax.sharding.get_abstract_mesh()
+        P = mesh.shape.get("model", 1) if mesh is not None else 1
+    except Exception:
+        P = 1
+    if nq % max(P, 1) != 0 or P <= 1:
+        P = 1
+    no = nq // P
+
+    # q blocks: index = o*P + p  (o scanned, p parallel/sharded)
+    qb = q.reshape(B, no, P, bq, Hkv, G, hd).transpose(1, 2, 0, 4, 5, 3, 6)
+    # (no, P, B, Hkv, G, bq, hd)
+    qb = shard_hint(qb, None, "model", BATCH, None, None, None, None)
+    kb = k.reshape(B, nk, bk, Hkv, hd).transpose(1, 0, 3, 2, 4)
+    vb = v.reshape(B, nk, bk, Hkv, hd).transpose(1, 0, 3, 2, 4)
+
+    q_pos_base = jnp.arange(bq)
+    k_pos_base = jnp.arange(bk)
+
+    def outer(oi, qtile):                      # qtile: (P,B,Hkv,G,bq,hd)
+        q_pos = (q_offset + (oi * P + jnp.arange(P)[:, None]) * bq
+                 + q_pos_base[None, :])        # (P, bq)
+
+        @jax.checkpoint
+        def kv_block(carry, inp):
+            m, l, acc = carry
+            ki, ktile, vtile = inp
+            k_pos = ki * bk + k_pos_base
+            s = jnp.einsum("pbhgqd,bhkd->pbhgqk", qtile.astype(jnp.float32),
+                           ktile.astype(jnp.float32)) * scale
+            mask = jnp.ones((P, bq, bk), bool)
+            if causal:
+                mask &= q_pos[:, :, None] >= k_pos[None, None, :]
+            if window:
+                mask &= q_pos[:, :, None] - k_pos[None, None, :] < window
+            s = jnp.where(mask[:, None, None, None], s, -1e30)
+            m_new = jnp.maximum(m, s.max(-1))
+            p_ = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p_.sum(-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "pbhgqk,bhkd->pbhgqd", p_, vtile.astype(jnp.float32))
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((P, B, Hkv, G, bq), -1e30, jnp.float32)
+        l0 = jnp.zeros((P, B, Hkv, G, bq), jnp.float32)
+        a0 = jnp.zeros((P, B, Hkv, G, bq, hd), jnp.float32)
+        m0, l0, a0 = (shard_hint(t, "model", BATCH, None, None, None)
+                      if t.ndim == 5 else
+                      shard_hint(t, "model", BATCH, None, None, None, None)
+                      for t in (m0, l0, a0))
+        (m, l, acc), _ = jax.lax.scan(
+            kv_block, (m0, l0, a0), (jnp.arange(nk), kb, vb))
+        return acc / jnp.maximum(l, 1e-30)[..., None]
+
+    outer = jax.checkpoint(outer)
+    _, out = jax.lax.scan(
+        lambda _c, inp: (None, outer(*inp)), None, (jnp.arange(no), qb))
+    # (no, P, B, Hkv, G, bq, hd) -> (B, Sq, Hq, hd)
+    out = out.transpose(2, 0, 1, 5, 3, 4, 6).reshape(B, Sq, Hq, hd)
+    return out.astype(q.dtype)
+
+
+def full_attention(q, k, v, *, causal: bool, window: int = 0,
+                   q_positions=None, k_positions=None) -> jax.Array:
+    """Unblocked reference (small S / decode).  Same signature semantics."""
+    B, Sq, Hq, hd = q.shape
+    Sk, Hkv = k.shape[1], k.shape[2]
+    G = Hq // Hkv
+    qg = q.reshape(B, Sq, Hkv, G, hd)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qg.astype(jnp.float32),
+                   k.astype(jnp.float32)) / math.sqrt(hd)
+    qp = q_positions if q_positions is not None else jnp.arange(Sq)
+    kp = k_positions if k_positions is not None else jnp.arange(Sk)
+    mask = jnp.ones((Sq, Sk), bool)
+    if causal:
+        mask &= qp[:, None] >= kp[None, :]
+    if window:
+        mask &= qp[:, None] - kp[None, :] < window
+    s = jnp.where(mask[None, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", p, v.astype(jnp.float32))
+    return out.reshape(B, Sq, Hq, hd).astype(q.dtype)
+
+
+def attention_train(p: Params, x: jax.Array, cfg: ArchConfig, *,
+                    causal: bool = True, window: int = 0,
+                    positions: jax.Array | None = None) -> jax.Array:
+    B, S, _ = x.shape
+    q, k, v = _qkv(p, x, cfg)
+    if cfg.pos == "rope":
+        pos = positions if positions is not None else jnp.arange(S)[None]
+        q = apply_rope(q, pos, cfg.rope_theta)
+        k = apply_rope(k, pos, cfg.rope_theta)
+    if S > 2048:
+        o = blockwise_attention(q, k, v, causal=causal, window=window)
+    else:
+        o = full_attention(q, k, v, causal=causal, window=window)
+    return linear(p["wo"], o.reshape(B, S, cfg.q_dim))
+
+
+def init_kv_cache(cfg: ArchConfig, batch: int, cache_len: int, layers: int,
+                  dtype=None) -> Params:
+    dt = dtype or cfg.jdtype
+    shape = (layers, batch, cache_len, cfg.n_kv_heads, cfg.hd)
+    return {"k": jnp.zeros(shape, dt), "v": jnp.zeros(shape, dt)}
+
+
+def attention_decode(p: Params, x: jax.Array, cfg: ArchConfig, *,
+                     k_cache: jax.Array, v_cache: jax.Array,
+                     pos: jax.Array, window: int = 0):
+    """One-token decode.  x: (B, 1, D); caches: (B, C, Hkv, hd); pos: ()
+    current absolute position.  Returns (y, k_cache, v_cache).
+
+    With a sliding window the cache is a ring buffer of length C=window;
+    otherwise C >= seq_len and slot = pos.
+    """
+    B, _, _ = x.shape
+    C = k_cache.shape[1]
+    q, k, v = _qkv(p, x, cfg)
+    if cfg.pos == "rope":
+        q = apply_rope(q, pos[None, None], cfg.rope_theta)
+        k = apply_rope(k, pos[None, None], cfg.rope_theta)
+    slot = jnp.where(window > 0, pos % jnp.maximum(C, 1), pos)
+    k_cache = jax.lax.dynamic_update_slice(k_cache, k, (0, slot, 0, 0))
+    v_cache = jax.lax.dynamic_update_slice(v_cache, v, (0, slot, 0, 0))
+    # positions held in each cache slot (ring-aware)
+    slots = jnp.arange(C)
+    if window > 0:
+        base = jnp.maximum(pos + 1 - C, 0)
+        cand = slots + (pos + 1 - C // 2)  # not used; compute exact below
+        # absolute position stored in slot s: the largest p <= pos with p % C == s
+        kpos = pos - ((pos - slots) % C)
+        valid = kpos >= jnp.maximum(pos - window + 1, 0)
+        kpos = jnp.where(valid, kpos, -1)
+    else:
+        kpos = jnp.where(slots <= pos, slots, -1)
+    qg = q.reshape(B, 1, cfg.n_kv_heads, cfg.n_heads // cfg.n_kv_heads, cfg.hd)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qg.astype(jnp.float32),
+                   k_cache.astype(jnp.float32)) / math.sqrt(cfg.hd)
+    s = jnp.where((kpos >= 0)[None, None, None, None, :], s, -1e30)
+    pr = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgqk,bkhd->bqhgd", pr, v_cache.astype(jnp.float32))
+    o = o.reshape(B, 1, cfg.q_dim).astype(x.dtype)
+    return linear(p["wo"], o), k_cache, v_cache
+
+
+def init_cross_attention(key, cfg: ArchConfig) -> Params:
+    return init_attention(key, cfg)
+
+
+def cross_attention(p: Params, x: jax.Array, enc_kv: tuple[jax.Array, jax.Array],
+                    cfg: ArchConfig) -> jax.Array:
+    """Decoder->encoder attention; enc_kv precomputed (B, F, Hkv, hd)."""
+    B, S, _ = x.shape
+    q = linear(p["wq"], x).reshape(B, S, cfg.n_heads, cfg.hd)
+    k, v = enc_kv
+    o = full_attention(q, k, v, causal=False)
+    return linear(p["wo"], o.reshape(B, S, cfg.q_dim))
+
+
+def encode_kv(p: Params, enc_out: jax.Array, cfg: ArchConfig):
+    B, F, _ = enc_out.shape
+    k = linear(p["wk"], enc_out).reshape(B, F, cfg.n_kv_heads, cfg.hd)
+    v = linear(p["wv"], enc_out).reshape(B, F, cfg.n_kv_heads, cfg.hd)
+    return k, v
+
+
+# --------------------------------------------------------------------------
+# FFN (dense + MoE)
+# --------------------------------------------------------------------------
+
+
+def init_ffn(key, cfg: ArchConfig, d_ff: int | None = None) -> Params:
+    ff = d_ff or cfg.d_ff
+    dt = cfg.jdtype
+    ks = jax.random.split(key, 3)
+    p = {"w_in": dense_init(ks[0], cfg.d_model, ff, dt),
+         "w_out": dense_init(ks[1], ff, cfg.d_model, dt)}
+    if cfg.glu:
+        p["w_gate"] = dense_init(ks[2], cfg.d_model, ff, dt)
+    return p
+
+
+def ffn_apply(p: Params, x: jax.Array, cfg: ArchConfig) -> jax.Array:
+    h = linear(p["w_in"], x)
+    if cfg.glu:
+        h = activation(linear(p["w_gate"], x), cfg.act) * h
+    else:
+        h = activation(h, cfg.act)
+    return linear(p["w_out"], h)
+
+
+def init_moe(key, cfg: ArchConfig) -> Params:
+    assert cfg.moe is not None
+    E, ff, d, dt = cfg.moe.num_experts, cfg.d_ff, cfg.d_model, cfg.jdtype
+    ks = jax.random.split(key, 4)
+    s = 1.0 / math.sqrt(d)
+    p = {
+        "router": dense_init(ks[0], d, E, dt, scale=0.02),
+        "w_in": (jax.random.normal(ks[1], (E, d, ff)) * s).astype(dt),
+        "w_out": (jax.random.normal(ks[2], (E, ff, d)) * (1 / math.sqrt(ff))).astype(dt),
+    }
+    if cfg.glu:
+        p["w_gate"] = (jax.random.normal(ks[3], (E, d, ff)) * s).astype(dt)
+    return p
+
+
+def moe_apply(p: Params, x: jax.Array, cfg: ArchConfig,
+              chunk: int = 1024) -> jax.Array:
+    if _MOE_CHUNK:
+        chunk = _MOE_CHUNK
+    """Capacity-based dense dispatch, chunked over tokens so the one-hot
+    dispatch tensor stays O(chunk · E · C) — the dataflow-compiler lesson
+    applied to MoE: stream token blocks through the expert "tasks" instead
+    of materializing the full routing matrix (a ping-pong→FIFO conversion).
+
+    Expert dim is sharded over the ``model`` mesh axis (EP); GSPMD inserts
+    the all-to-all pair around the expert computation.
+    """
+    assert cfg.moe is not None
+    B, S, D = x.shape
+    E, K = cfg.moe.num_experts, cfg.moe.top_k
+    T = B * S
+    xt = x.reshape(T, D)
+    chunk = min(chunk, T)
+    n_chunks = T // chunk
+    assert T % chunk == 0, (T, chunk)
+    C = max(1, int(chunk * K * cfg.moe.capacity_factor / E))
+
+    logits = (xt @ p["router"]["w"]).astype(jnp.float32)         # (T, E)
+    gates = jax.nn.softmax(logits, axis=-1)
+    topw, topi = jax.lax.top_k(gates, K)                          # (T, K)
+    topw = topw / jnp.maximum(topw.sum(-1, keepdims=True), 1e-9)
+
+    disp_dt = jnp.bfloat16 if _MOE_BF16 else jnp.float32
+
+    def one_chunk(carry, inp):
+        xc, wc, ic = inp                                          # (c,D),(c,K),(c,K)
+        # position of each (token, k) within its expert's capacity buffer
+        onehot = jax.nn.one_hot(ic, E, dtype=jnp.float32)         # (c,K,E)
+        flat = onehot.reshape(-1, E)                              # (c*K,E)
+        pos_in_e = (jnp.cumsum(flat, axis=0) - flat).reshape(chunk, K, E)
+        pos = jnp.einsum("cke,cke->ck", pos_in_e, onehot).astype(jnp.int32)
+        keep = pos < C
+        # dispatch tensor (c, E, C): {0,1}-valued, exact in bf16
+        disp = jnp.einsum("cke,ckp->cep",
+                          (onehot * keep[..., None]).astype(disp_dt),
+                          jax.nn.one_hot(pos, C, dtype=disp_dt))
+        xe = jnp.einsum("cep,cd->epd", disp,
+                        xc.astype(disp_dt)).astype(xc.dtype)
+        h = jnp.einsum("epd,edf->epf", xe, p["w_in"])
+        if cfg.glu:
+            g = jnp.einsum("epd,edf->epf", xe, p["w_gate"])
+            h = activation(g, cfg.act) * h
+        else:
+            h = activation(h, cfg.act)
+        ye = jnp.einsum("epf,efd->epd", h, p["w_out"])
+        comb = jnp.einsum("cke,ckp,ck->cep", onehot * keep[..., None],
+                          jax.nn.one_hot(pos, C, dtype=jnp.float32),
+                          wc.astype(jnp.float32))
+        yc = jnp.einsum("cep,epd->cd", comb, ye.astype(jnp.float32))
+        return carry, yc.astype(xc.dtype)
+
+    xcs = xt.reshape(n_chunks, chunk, D)
+    wcs = topw.reshape(n_chunks, chunk, K)
+    ics = topi.reshape(n_chunks, chunk, K)
+    _, ys = jax.lax.scan(one_chunk, None, (xcs, wcs, ics))
+    return ys.reshape(B, S, D)
+
+
+def moe_aux_loss(logits: jax.Array, topi: jax.Array, E: int) -> jax.Array:
+    """Load-balancing auxiliary loss (Switch-style)."""
+    gates = jax.nn.softmax(logits.astype(jnp.float32), -1)
+    me = gates.mean(axis=tuple(range(gates.ndim - 1)))
+    ce = jax.nn.one_hot(topi[..., 0], E).mean(
+        axis=tuple(range(topi.ndim - 1)))
+    return E * jnp.sum(me * ce)
+
+
+# --------------------------------------------------------------------------
+# Embeddings
+# --------------------------------------------------------------------------
+
+
+def init_embed(key, cfg: ArchConfig) -> Params:
+    dt = cfg.jdtype
+    p = {"tok": (jax.random.normal(key, (cfg.padded_vocab, cfg.d_model)) * 0.02).astype(dt)}
+    if cfg.pos == "learned":
+        p["pos"] = (jax.random.normal(key, (8192, cfg.d_model)) * 0.01).astype(dt)
+    return p
+
+
+def embed(p: Params, tokens: jax.Array, cfg: ArchConfig,
+          positions: jax.Array | None = None) -> jax.Array:
+    x = jnp.take(p["tok"], tokens, axis=0)
+    if cfg.pos == "learned":
+        pos = positions if positions is not None else jnp.arange(tokens.shape[-1])
+        pe = jnp.take(p["pos"], jnp.clip(pos, 0, p["pos"].shape[0] - 1), axis=0)
+        x = x + pe
+    if cfg.family in ("dense", "hybrid") and cfg.name.startswith(("gemma", "recurrentgemma")):
+        x = x * jnp.asarray(math.sqrt(cfg.d_model), x.dtype)
+    return x
+
+
+def unembed(embed_p: Params, head_p: Params | None, x: jax.Array,
+            cfg: ArchConfig) -> jax.Array:
+    w = embed_p["tok"].T if (cfg.tie_embeddings or head_p is None) \
+        else head_p["w"]
+    return dot_bf16bwd(x, w) if _BF16_BWD else x @ w

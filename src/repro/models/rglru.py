@@ -1,0 +1,106 @@
+"""RG-LRU recurrent blocks (RecurrentGemma / Griffin, arXiv:2402.19427).
+
+The Real-Gated Linear Recurrent Unit:
+
+    r_t = sigmoid(W_a x_t + b_a)          (recurrence gate)
+    i_t = sigmoid(W_x x_t + b_x)          (input gate)
+    log a_t = -c * softplus(Λ) * r_t      (per-channel decay, c = 8)
+    h_t = a_t ⊙ h_{t-1} + sqrt(1 - a_t²) ⊙ (i_t ⊙ x_t)
+
+A *purely streaming* op — each element is produced and consumed exactly
+once in order, i.e. FIFO-native in CODO terms (DESIGN.md §4).  Training
+uses an associative scan over the (a, b) affine composition; decode is a
+single-step update with O(1) state.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from .layers import Params, apply_norm, dense_init, linear, norm_init
+
+_C = 8.0
+
+
+def init_rglru_block(key, cfg: ArchConfig) -> Params:
+    d = cfg.d_model
+    dt = cfg.jdtype
+    ks = jax.random.split(key, 6)
+    return {
+        "norm": norm_init(d, cfg.norm, dt),
+        "in_x": dense_init(ks[0], d, d, dt),      # recurrent branch
+        "in_y": dense_init(ks[1], d, d, dt),      # gate branch (GeLU)
+        "conv": (jax.random.normal(ks[2], (4, d)) * 0.2).astype(dt),
+        "w_a": dense_init(ks[3], d, d, dt),
+        "w_i": dense_init(ks[4], d, d, dt),
+        "lam": jnp.full((d,), 2.0, jnp.float32),  # softplus(2) ~ healthy decay
+        "out": dense_init(ks[5], d, d, dt),
+    }
+
+
+def _gates(p: Params, x: jax.Array):
+    r = jax.nn.sigmoid(linear(p["w_a"], x).astype(jnp.float32))
+    i = jax.nn.sigmoid(linear(p["w_i"], x).astype(jnp.float32))
+    log_a = -_C * jax.nn.softplus(p["lam"]) * r
+    a = jnp.exp(log_a)
+    b = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * i * x.astype(jnp.float32)
+    return a, b
+
+
+def _conv1d(p: Params, x: jax.Array) -> jax.Array:
+    w = p["conv"]
+    cw = w.shape[0]
+    S = x.shape[1]
+    pad = jnp.pad(x, ((0, 0), (cw - 1, 0), (0, 0)))
+    return sum(pad[:, i:i + S, :] * w[i][None, None, :] for i in range(cw))
+
+
+def rglru_scan(a: jax.Array, b: jax.Array, h0: jax.Array | None = None):
+    """h_t = a_t h_{t-1} + b_t over axis 1, via associative scan."""
+
+    def combine(l, r):
+        al, bl = l
+        ar, br = r
+        return al * ar, ar * bl + br
+
+    a_s, b_s = jax.lax.associative_scan(combine, (a, b), axis=1)
+    if h0 is not None:
+        b_s = b_s + a_s * h0[:, None, :]
+    return b_s
+
+
+def rglru_block_train(p: Params, xin: jax.Array, cfg: ArchConfig) -> jax.Array:
+    h = apply_norm(p["norm"], xin, cfg.norm)
+    gate = jax.nn.gelu(linear(p["in_y"], h))
+    x = linear(p["in_x"], h)
+    x = _conv1d(p, x)
+    a, b = _gates(p, x)
+    y = rglru_scan(a, b).astype(xin.dtype)
+    y = y * gate
+    return xin + linear(p["out"], y)
+
+
+def init_rglru_cache(cfg: ArchConfig, batch: int, layers: int) -> Params:
+    d = cfg.d_model
+    return {
+        "h": jnp.zeros((layers, batch, d), jnp.float32),
+        "conv": jnp.zeros((layers, batch, 3, d), cfg.jdtype),
+    }
+
+
+def rglru_block_decode(p: Params, xin: jax.Array, cfg: ArchConfig, *,
+                       h_state: jax.Array, conv_buf: jax.Array):
+    """xin: (B, 1, D); h_state: (B, D); conv_buf: (B, cw-1, D)."""
+    h = apply_norm(p["norm"], xin, cfg.norm)
+    gate = jax.nn.gelu(linear(p["in_y"], h))
+    x = linear(p["in_x"], h)[:, 0]                       # (B, D)
+    hist = jnp.concatenate([conv_buf, x[:, None]], axis=1)
+    x = jnp.einsum("bcd,cd->bd", hist.astype(jnp.float32),
+                   p["conv"].astype(jnp.float32)).astype(xin.dtype)
+    conv_buf = hist[:, 1:]
+    a, b = _gates(p, x[:, None])
+    hnew = a[:, 0] * h_state + b[:, 0]
+    y = (hnew.astype(xin.dtype) * gate[:, 0])[:, None]
+    return xin + linear(p["out"], y), hnew, conv_buf

@@ -1,0 +1,184 @@
+"""Mamba-2 SSD (state-space duality) blocks — arXiv:2405.21060.
+
+The chunked SSD algorithm is the clearest instance of the paper's
+reduction-operation rewriting at sequence scale: the recurrence over time
+is split into intra-chunk (dense, matmul-shaped — MXU-friendly) and
+inter-chunk (a tiny scan over per-chunk states).  States are the
+"temporary array" of Fig. 5; each chunk's output is emitted exactly once.
+
+Shapes follow the minimal reference implementation:
+  x: (B, S, H, P)   heads H = expand·d_model / P
+  dt: (B, S, H)     per-head step size (softplus of a projection)
+  B, C: (B, S, N)   shared across heads (G = 1 group)
+  A: (H,)           negative decay rates
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from .layers import Params, apply_norm, dense_init, linear, norm_init
+
+
+def _segsum(a: jax.Array) -> jax.Array:
+    """Lower-triangular pairwise cumulative sums: out[i,j] = sum_{j<k<=i} a_k."""
+    q = a.shape[-1]
+    cs = jnp.cumsum(a, axis=-1)
+    out = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((q, q), bool), 0)
+    return jnp.where(mask, out, -jnp.inf)
+
+
+def ssd_chunked(x: jax.Array, dt: jax.Array, A: jax.Array, Bm: jax.Array,
+                Cm: jax.Array, chunk: int):
+    """Returns (y, final_state).  final_state: (B, H, P, N)."""
+    b, s, h, p = x.shape
+    n = Bm.shape[-1]
+    nc = s // chunk
+    assert s % chunk == 0, (s, chunk)
+
+    a = dt * A[None, None, :]                      # (b, s, h) log-decay (negative)
+    xc = x.reshape(b, nc, chunk, h, p)
+    ac = a.reshape(b, nc, chunk, h)
+    dtc = dt.reshape(b, nc, chunk, h)
+    Bc = Bm.reshape(b, nc, chunk, n)
+    Cc = Cm.reshape(b, nc, chunk, n)
+
+    # intra-chunk (diagonal blocks): attention-like with decay kernel
+    L = jnp.exp(_segsum(ac.transpose(0, 1, 3, 2)))          # (b, nc, h, q, q)
+    scores = jnp.einsum("bcqn,bckn->bcqk", Cc, Bc)          # (b, nc, q, q)
+    y_diag = jnp.einsum("bcqk,bchqk,bckh,bckhp->bcqhp", scores, L, dtc, xc)
+
+    # end-of-chunk states
+    decay_states = jnp.exp(ac.cumsum(2)[:, :, -1:, :] - ac.cumsum(2))  # (b,nc,q,h)
+    states = jnp.einsum("bckn,bckh,bckh,bckhp->bchpn",
+                        Bc, decay_states, dtc, xc)                      # (b,nc,h,p,n)
+
+    # inter-chunk recurrence over nc states
+    chunk_decay = jnp.exp(ac.sum(2))                                    # (b, nc, h)
+
+    def step(hprev, inp):
+        st, dec = inp                                                   # (b,h,p,n),(b,h)
+        hnew = hprev * dec[..., None, None] + st
+        return hnew, hprev
+
+    h0 = jnp.zeros((b, h, p, n), jnp.float32)
+    hlast, hprevs = jax.lax.scan(
+        step, h0,
+        (states.transpose(1, 0, 2, 3, 4).astype(jnp.float32),
+         chunk_decay.transpose(1, 0, 2).astype(jnp.float32)))
+    hprevs = hprevs.transpose(1, 0, 2, 3, 4)                            # (b,nc,h,p,n)
+
+    # contribution of carried-in state to each position
+    state_decay = jnp.exp(ac.cumsum(2))                                 # (b,nc,q,h)
+    y_off = jnp.einsum("bcqn,bchpn,bcqh->bcqhp", Cc,
+                       hprevs.astype(Cc.dtype), state_decay)
+
+    y = (y_diag + y_off).reshape(b, s, h, p)
+    return y.astype(x.dtype), hlast
+
+
+def ssd_decode_step(state: jax.Array, x: jax.Array, dt: jax.Array, A: jax.Array,
+                    Bm: jax.Array, Cm: jax.Array):
+    """One-token recurrence.  state: (B,H,P,N); x: (B,H,P); dt: (B,H);
+    B/C: (B,N)."""
+    dec = jnp.exp(dt * A[None, :])                                      # (B,H)
+    upd = jnp.einsum("bh,bhp,bn->bhpn", dt, x, Bm)
+    state = state * dec[..., None, None] + upd
+    y = jnp.einsum("bn,bhpn->bhp", Cm, state.astype(Cm.dtype))
+    return y.astype(x.dtype), state
+
+
+# --------------------------------------------------------------------------
+# Block (norm -> in_proj -> conv1d -> SSD -> gate -> out_proj)
+# --------------------------------------------------------------------------
+
+
+def init_ssm_block(key, cfg: ArchConfig) -> Params:
+    s = cfg.ssm
+    d = cfg.d_model
+    d_in = d * s.expand
+    nheads = d_in // s.head_dim
+    dt_ = cfg.jdtype
+    ks = jax.random.split(key, 5)
+    return {
+        "norm": norm_init(d, cfg.norm, dt_),
+        # projects to [z (gate), x, B, C, dt]
+        "in_proj": dense_init(ks[0], d, 2 * d_in + 2 * s.d_state + nheads, dt_),
+        "conv": (jax.random.normal(ks[1], (s.conv_width, d_in + 2 * s.d_state))
+                 * 0.2).astype(dt_),
+        "A_log": jnp.zeros((nheads,), jnp.float32) + math.log(1.0),
+        "D": jnp.ones((nheads,), jnp.float32),
+        "dt_bias": jnp.zeros((nheads,), jnp.float32),
+        "out_proj": dense_init(ks[2], d_in, d, dt_),
+    }
+
+
+def _split_proj(cfg: ArchConfig, proj: jax.Array):
+    s = cfg.ssm
+    d_in = cfg.d_model * s.expand
+    nheads = d_in // s.head_dim
+    z, xbc, dt = jnp.split(proj, [d_in, 2 * d_in + 2 * s.d_state], axis=-1)
+    return z, xbc, dt, d_in, nheads
+
+
+def ssm_block_train(p: Params, xin: jax.Array, cfg: ArchConfig) -> jax.Array:
+    s = cfg.ssm
+    Bsz, S, _ = xin.shape
+    h = apply_norm(p["norm"], xin, cfg.norm)
+    z, xbc, dtp, d_in, nheads = _split_proj(cfg, linear(p["in_proj"], h))
+    # causal depthwise conv over (x, B, C)
+    w = p["conv"]
+    pad = jnp.pad(xbc, ((0, 0), (s.conv_width - 1, 0), (0, 0)))
+    conv = sum(pad[:, i:i + S, :] * w[i][None, None, :]
+               for i in range(s.conv_width))
+    conv = jax.nn.silu(conv)
+    x, Bm, Cm = jnp.split(conv, [d_in, d_in + s.d_state], axis=-1)
+    x = x.reshape(Bsz, S, nheads, s.head_dim)
+    dt = jax.nn.softplus(dtp.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    y, _ = ssd_chunked(x, dt, A, Bm.astype(jnp.float32), Cm.astype(jnp.float32),
+                       min(s.chunk, S))
+    y = y + x * p["D"][None, None, :, None].astype(x.dtype)
+    y = y.reshape(Bsz, S, d_in) * jax.nn.silu(z)
+    return xin + linear(p["out_proj"], y)
+
+
+def init_ssm_cache(cfg: ArchConfig, batch: int, layers: int) -> Params:
+    s = cfg.ssm
+    d_in = cfg.d_model * s.expand
+    nheads = d_in // s.head_dim
+    return {
+        "state": jnp.zeros((layers, batch, nheads, s.head_dim, s.d_state),
+                           jnp.float32),
+        "conv": jnp.zeros((layers, batch, s.conv_width - 1,
+                           d_in + 2 * s.d_state), cfg.jdtype),
+    }
+
+
+def ssm_block_decode(p: Params, xin: jax.Array, cfg: ArchConfig, *,
+                     state: jax.Array, conv_buf: jax.Array):
+    """xin: (B, 1, D).  Returns (y, state, conv_buf)."""
+    s = cfg.ssm
+    Bsz = xin.shape[0]
+    h = apply_norm(p["norm"], xin, cfg.norm)
+    z, xbc, dtp, d_in, nheads = _split_proj(cfg, linear(p["in_proj"], h))
+    xbc = xbc[:, 0]                                   # (B, d_in+2N)
+    hist = jnp.concatenate([conv_buf, xbc[:, None]], axis=1)  # (B, cw, *)
+    conv = jnp.einsum("bcw,cw->bw", hist.astype(jnp.float32),
+                      p["conv"].astype(jnp.float32))
+    conv = jax.nn.silu(conv).astype(xin.dtype)
+    conv_buf = hist[:, 1:]
+    x, Bm, Cm = jnp.split(conv, [d_in, d_in + s.d_state], axis=-1)
+    x = x.reshape(Bsz, nheads, s.head_dim)
+    dt = jax.nn.softplus(dtp[:, 0].astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    y, state = ssd_decode_step(state, x.astype(jnp.float32), dt, A,
+                               Bm.astype(jnp.float32), Cm.astype(jnp.float32))
+    y = y + x.astype(jnp.float32) * p["D"][None, :, None]
+    y = y.reshape(Bsz, 1, d_in).astype(xin.dtype) * jax.nn.silu(z)
+    return xin + linear(p["out_proj"], y), state, conv_buf

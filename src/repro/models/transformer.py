@@ -1,0 +1,435 @@
+"""Model assembly for every assigned architecture family.
+
+One entry-point pair per execution mode:
+
+* ``init_params(cfg, key)``            — parameter pytree (layer stacks are
+  *stacked over pattern groups* so the forward is a ``lax.scan`` — HLO size
+  stays O(1) in depth, which keeps 88-layer dry-runs compilable).
+* ``loss_fn(params, batch, cfg)``      — next-token CE (training cells).
+* ``prefill(params, batch, cfg)``      — full forward, last-position logits.
+* ``decode_step(params, tokens, cache, cfg)`` — one new token against the
+  cache/state (decode cells).  The cache pytree mirrors the param group
+  structure, so one ``lax.scan`` threads (params, cache) together.
+
+Families: ``dense`` (gemma/qwen/starcoder2/mistral/gpt2), ``moe`` (mixtral,
+moonshot), ``ssm`` (mamba2), ``hybrid`` (recurrentgemma rglru:rglru:attn),
+``audio`` (whisper enc-dec, frame embeddings stubbed), ``vlm`` (internvl,
+patch embeddings stubbed).
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from ..distributed.sharding import BATCH, shard_hint
+from . import rglru as rg
+from . import ssm as ssm_mod
+from .layers import (Params, apply_norm, attention_decode, attention_train,
+                     cross_attention, dense_init, embed, encode_kv, ffn_apply,
+                     init_attention, init_embed, init_ffn, init_moe, linear,
+                     moe_apply, norm_init, unembed)
+
+# --------------------------------------------------------------------------
+# Per-block init/apply
+# --------------------------------------------------------------------------
+
+
+def _init_block(key, cfg: ArchConfig, kind: str) -> Params:
+    ks = jax.random.split(key, 4)
+    dt = cfg.jdtype
+    if kind == "attn":
+        p = {"norm1": norm_init(cfg.d_model, cfg.norm, dt),
+             "attn": init_attention(ks[0], cfg),
+             "norm2": norm_init(cfg.d_model, cfg.norm, dt)}
+        p["mlp"] = init_moe(ks[1], cfg) if cfg.moe else init_ffn(ks[1], cfg)
+        return p
+    if kind == "rglru":
+        return {"rec": rg.init_rglru_block(ks[0], cfg),
+                "norm2": norm_init(cfg.d_model, cfg.norm, dt),
+                "mlp": init_ffn(ks[1], cfg)}
+    if kind == "ssm":
+        return {"ssm": ssm_mod.init_ssm_block(ks[0], cfg)}
+    if kind == "xattn":  # whisper decoder block
+        return {"norm1": norm_init(cfg.d_model, cfg.norm, dt),
+                "attn": init_attention(ks[0], cfg),
+                "norm_x": norm_init(cfg.d_model, cfg.norm, dt),
+                "xattn": init_attention(ks[1], cfg),
+                "norm2": norm_init(cfg.d_model, cfg.norm, dt),
+                "mlp": init_ffn(ks[2], cfg)}
+    raise ValueError(kind)
+
+
+def _mlp(p: Params, x: jax.Array, cfg: ArchConfig) -> jax.Array:
+    if cfg.moe:
+        return moe_apply(p, x, cfg)
+    return ffn_apply(p, x, cfg)
+
+
+def _attn_window(cfg: ArchConfig, kind: str) -> int:
+    if kind not in ("attn",):
+        return 0
+    if len(cfg.block_pattern) > 1:          # hybrid local-attn blocks
+        return cfg.local_window
+    return cfg.window
+
+
+def _block_train(p: Params, x: jax.Array, cfg: ArchConfig, kind: str,
+                 *, enc_out=None) -> jax.Array:
+    if kind == "attn":
+        h = apply_norm(p["norm1"], x, cfg.norm)
+        x = x + attention_train(p["attn"], h, cfg, causal=True,
+                                window=_attn_window(cfg, kind))
+        h = apply_norm(p["norm2"], x, cfg.norm)
+        return x + _mlp(p["mlp"], h, cfg)
+    if kind == "rglru":
+        x = rg.rglru_block_train(p["rec"], x, cfg)
+        h = apply_norm(p["norm2"], x, cfg.norm)
+        return x + ffn_apply(p["mlp"], h, cfg)
+    if kind == "ssm":
+        return ssm_mod.ssm_block_train(p["ssm"], x, cfg)
+    if kind == "xattn":
+        h = apply_norm(p["norm1"], x, cfg.norm)
+        x = x + attention_train(p["attn"], h, cfg, causal=True)
+        h = apply_norm(p["norm_x"], x, cfg.norm)
+        ekv = encode_kv(p["xattn"], enc_out, cfg)
+        x = x + cross_attention(p["xattn"], h, ekv, cfg)
+        h = apply_norm(p["norm2"], x, cfg.norm)
+        return x + ffn_apply(p["mlp"], h, cfg)
+    raise ValueError(kind)
+
+
+# --------------------------------------------------------------------------
+# Parameter assembly (stacked pattern groups)
+# --------------------------------------------------------------------------
+
+
+def _group_counts(cfg: ArchConfig) -> tuple[int, int]:
+    plen = len(cfg.block_pattern)
+    return cfg.n_layers // plen, cfg.n_layers % plen
+
+
+def init_params(cfg: ArchConfig, key) -> Params:
+    n_groups, leftover = _group_counts(cfg)
+    keys = jax.random.split(key, n_groups + leftover + 4)
+
+    def group_params(k):
+        sub = jax.random.split(k, len(cfg.block_pattern))
+        return {f"b{i}_{kind}": _init_block(sk, cfg, kind)
+                for i, (kind, sk) in enumerate(zip(cfg.block_pattern, sub))}
+
+    p: Params = {
+        "embed": init_embed(keys[-1], cfg),
+        "tail": {f"t{i}": _init_block(keys[n_groups + i], cfg, cfg.block_pattern[i])
+                 for i in range(leftover)},
+        "final_norm": norm_init(cfg.d_model, cfg.norm, cfg.jdtype),
+    }
+    if cfg.enc_dec:
+        ek = jax.random.split(keys[-3], cfg.n_enc_layers)
+        enc_blocks = [{"norm1": norm_init(cfg.d_model, cfg.norm, cfg.jdtype),
+                       "attn": init_attention(ek[i], cfg),
+                       "norm2": norm_init(cfg.d_model, cfg.norm, cfg.jdtype),
+                       "mlp": init_ffn(ek[i], cfg)}
+                      for i in range(cfg.n_enc_layers)]
+        p["encoder"] = jax.tree.map(lambda *xs: jnp.stack(xs), *enc_blocks)
+        p["enc_norm"] = norm_init(cfg.d_model, cfg.norm, cfg.jdtype)
+        dk = jax.random.split(keys[-4], cfg.n_layers)
+        dec = [_init_block(dk[i], cfg, "xattn") for i in range(cfg.n_layers)]
+        p["decoder"] = jax.tree.map(lambda *xs: jnp.stack(xs), *dec)
+        p["groups"] = {}
+    else:
+        p["groups"] = jax.tree.map(
+            lambda *xs: jnp.stack(xs),
+            *[group_params(keys[i]) for i in range(n_groups)]) if n_groups else {}
+    if not cfg.tie_embeddings:
+        p["lm_head"] = dense_init(keys[-2], cfg.d_model, cfg.padded_vocab, cfg.jdtype)
+    return p
+
+
+def param_shapes(cfg: ArchConfig) -> Any:
+    """Shape/dtype pytree without allocation (dry-run path)."""
+    return jax.eval_shape(lambda: init_params(cfg, jax.random.PRNGKey(0)))
+
+
+def param_count(params) -> int:
+    return sum(int(jnp.size(x)) for x in jax.tree.leaves(params))
+
+
+# --------------------------------------------------------------------------
+# Forward (training / prefill-scoring)
+# --------------------------------------------------------------------------
+
+
+def _encode(params: Params, frames: jax.Array, cfg: ArchConfig,
+            remat: bool) -> jax.Array:
+    def body(h, lp):
+        hh = apply_norm(lp["norm1"], h, cfg.norm)
+        h = h + attention_train(lp["attn"], hh, cfg, causal=False)
+        hh = apply_norm(lp["norm2"], h, cfg.norm)
+        return h + ffn_apply(lp["mlp"], hh, cfg), None
+
+    body = jax.checkpoint(body) if remat else body
+    h, _ = jax.lax.scan(body, frames, params["encoder"])
+    return apply_norm(params["enc_norm"], h, cfg.norm)
+
+
+# REPRO_REMAT_POLICY=dots  save matmul outputs across the remat boundary:
+# the backward replay skips re-gathering + re-computing every weight matmul
+# (one fewer FSDP all-gather sweep) at the cost of storing dot outputs.
+_REMAT_POLICY = __import__("os").environ.get("REPRO_REMAT_POLICY", "")
+
+
+def _checkpoint(fn):
+    if _REMAT_POLICY == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    return jax.checkpoint(fn)
+
+
+def _backbone(params: Params, x: jax.Array, cfg: ArchConfig, *,
+              remat: bool, enc_out=None) -> jax.Array:
+    if cfg.enc_dec:
+        def dec_body(h, lp):
+            h = shard_hint(h, BATCH, "model", None)
+            return shard_hint(_block_train(lp, h, cfg, "xattn", enc_out=enc_out),
+                              BATCH, "model", None), None
+        body = _checkpoint(dec_body) if remat else dec_body
+        x, _ = jax.lax.scan(body, x, params["decoder"])
+        return x
+
+    n_groups, leftover = _group_counts(cfg)
+
+    def group_body(h, gp):
+        # carry arrives sequence-sharded (Megatron-SP posture: the remat-
+        # saved per-layer activation is (B/dp, S/tp, D)); blocks gather the
+        # seq dim internally where attention needs it.  The barrier pins
+        # the bf16->f32 norm convert inside the loop — without it XLA
+        # hoists the convert and materializes an f32 copy of the whole
+        # saved-carry stack (2x remat memory).
+        h = jax.lax.optimization_barrier(h)
+        h = shard_hint(h, BATCH, "model", None)
+        for i, kind in enumerate(cfg.block_pattern):
+            h = _block_train(gp[f"b{i}_{kind}"], h, cfg, kind)
+        return shard_hint(h, BATCH, "model", None), None
+
+    body = _checkpoint(group_body) if remat else group_body
+    if n_groups:
+        x, _ = jax.lax.scan(body, x, params["groups"])
+    for i in range(leftover):
+        x = _block_train(params["tail"][f"t{i}"], x, cfg, cfg.block_pattern[i])
+    return x
+
+
+def forward_hidden(params: Params, batch: dict, cfg: ArchConfig,
+                   remat: bool = True) -> jax.Array:
+    """batch -> final-norm hidden states (B, S_text, d_model)."""
+    x = shard_hint(embed(params["embed"], batch["tokens"], cfg), BATCH, None, None)
+    enc_out = None
+    if cfg.enc_dec:
+        enc_out = _encode(params, batch["frames"], cfg, remat)
+    if cfg.n_patches:
+        x = jnp.concatenate([batch["patch_embeds"].astype(x.dtype), x], axis=1)
+    x = _backbone(params, x, cfg, remat=remat, enc_out=enc_out)
+    if cfg.n_patches:
+        x = x[:, cfg.n_patches:]
+    return apply_norm(params["final_norm"], x, cfg.norm)
+
+
+def forward(params: Params, batch: dict, cfg: ArchConfig,
+            remat: bool = True) -> jax.Array:
+    """batch -> logits (B, S_text, padded_vocab)."""
+    x = forward_hidden(params, batch, cfg, remat)
+    logits = unembed(params["embed"], params.get("lm_head"), x, cfg)
+    return shard_hint(logits, BATCH, None, "model")
+
+
+def _loss_chunk(s: int, target: int = 2048) -> int:
+    """Largest divisor of ``s`` not exceeding ``target``."""
+    c = min(s, target)
+    while s % c:
+        c -= 1
+    return c
+
+
+def loss_fn(params: Params, batch: dict, cfg: ArchConfig,
+            remat: bool = True, loss_chunk: int = 2048) -> jax.Array:
+    """Next-token CE with **sequence-chunked** logits: the (B, S, vocab)
+    f32 logit tensor never materializes — each chunk computes its unembed
+    matmul, reduces to per-token NLL, and is rematerialized on backward.
+    (Without this, a 150k-vocab 4k-seq step needs tens of GiB of logits —
+    the same access-count-mismatch lesson as the paper's Fig. 5, applied
+    to the loss: reduce within the chunk, emit only the accumulator.)"""
+    x = forward_hidden(params, batch, cfg, remat=remat)
+    labels = batch["labels"]
+    B, S, D = x.shape
+    c = _loss_chunk(S, loss_chunk)
+    nc = S // c
+    xs = x.reshape(B, nc, c, D).swapaxes(0, 1)          # (nc, B, c, D)
+    ls = labels.reshape(B, nc, c).swapaxes(0, 1)
+
+    @jax.checkpoint
+    def chunk_nll(carry, inp):
+        tot, cnt = carry
+        xc, lc = inp
+        logits = unembed(params["embed"], params.get("lm_head"), xc, cfg)
+        logits = shard_hint(logits, BATCH, None, "model").astype(jnp.float32)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, jnp.maximum(lc, 0)[..., None],
+                                   axis=-1)[..., 0]
+        mask = (lc >= 0).astype(jnp.float32)
+        return (tot + ((logz - gold) * mask).sum(), cnt + mask.sum()), None
+
+    (tot, cnt), _ = jax.lax.scan(chunk_nll, (jnp.zeros(()), jnp.zeros(())),
+                                 (xs, ls))
+    return tot / jnp.maximum(cnt, 1.0)
+
+
+def prefill(params: Params, batch: dict, cfg: ArchConfig) -> jax.Array:
+    """Prefill scoring: full forward, last-position logits."""
+    return forward(params, batch, cfg, remat=False)[:, -1]
+
+
+# --------------------------------------------------------------------------
+# Decode (serve_step)
+# --------------------------------------------------------------------------
+
+
+def cache_len_for(cfg: ArchConfig, seq_len: int) -> int:
+    """Ring-buffer length: windowed archs cap the KV cache at the window."""
+    if len(cfg.block_pattern) > 1 and "attn" in cfg.block_pattern:
+        return min(seq_len, cfg.local_window)
+    if cfg.window:
+        return min(seq_len, cfg.window)
+    return seq_len
+
+
+def _init_block_cache(cfg: ArchConfig, batch: int, C: int, kind: str) -> Params:
+    dt = cfg.jdtype
+    if kind in ("attn", "xattn"):
+        shape = (batch, C, cfg.n_kv_heads, cfg.hd)
+        return {"k": jnp.zeros(shape, dt), "v": jnp.zeros(shape, dt)}
+    if kind == "rglru":
+        return {"h": jnp.zeros((batch, cfg.d_model), jnp.float32),
+                "conv": jnp.zeros((batch, 3, cfg.d_model), dt)}
+    if kind == "ssm":
+        s = cfg.ssm
+        d_in = cfg.d_model * s.expand
+        nheads = d_in // s.head_dim
+        return {"state": jnp.zeros((batch, nheads, s.head_dim, s.d_state),
+                                   jnp.float32),
+                "conv": jnp.zeros((batch, s.conv_width - 1,
+                                   d_in + 2 * s.d_state), dt)}
+    raise ValueError(kind)
+
+
+def init_cache(cfg: ArchConfig, batch: int, seq_len: int) -> Params:
+    n_groups, leftover = _group_counts(cfg)
+    C = cache_len_for(cfg, seq_len)
+    cache: Params = {"pos": jnp.zeros((), jnp.int32)}
+    if cfg.enc_dec:
+        one = {"k": jnp.zeros((cfg.n_layers, batch, C, cfg.n_kv_heads, cfg.hd),
+                              cfg.jdtype)}
+        one["v"] = one["k"]
+        cache["layers"] = one
+        cache["enc_out"] = jnp.zeros((batch, cfg.enc_frames, cfg.d_model),
+                                     cfg.jdtype)
+        return cache
+    group = {f"b{i}_{kind}": _init_block_cache(cfg, batch, C, kind)
+             for i, kind in enumerate(cfg.block_pattern)}
+    if n_groups:
+        cache["groups"] = jax.tree.map(
+            lambda x: jnp.zeros((n_groups,) + x.shape, x.dtype), group)
+    cache["tail"] = {f"t{i}": _init_block_cache(cfg, batch, C,
+                                                cfg.block_pattern[i])
+                     for i in range(leftover)}
+    return cache
+
+
+def _block_decode(p: Params, x, cfg: ArchConfig, kind: str, bc: Params,
+                  pos, enc_out=None):
+    """Returns (x, updated block cache)."""
+    if kind == "attn":
+        window = _attn_window(cfg, kind)
+        h = apply_norm(p["norm1"], x, cfg.norm)
+        y, kc, vc = attention_decode(p["attn"], h, cfg, k_cache=bc["k"],
+                                     v_cache=bc["v"], pos=pos, window=window)
+        x = x + y
+        h = apply_norm(p["norm2"], x, cfg.norm)
+        return x + _mlp(p["mlp"], h, cfg), {"k": kc, "v": vc}
+    if kind == "rglru":
+        x, hs, cb = rg.rglru_block_decode(p["rec"], x, cfg, h_state=bc["h"],
+                                          conv_buf=bc["conv"])
+        h = apply_norm(p["norm2"], x, cfg.norm)
+        return x + ffn_apply(p["mlp"], h, cfg), {"h": hs, "conv": cb}
+    if kind == "ssm":
+        x, st, cb = ssm_mod.ssm_block_decode(p["ssm"], x, cfg, state=bc["state"],
+                                             conv_buf=bc["conv"])
+        return x, {"state": st, "conv": cb}
+    if kind == "xattn":
+        h = apply_norm(p["norm1"], x, cfg.norm)
+        y, kc, vc = attention_decode(p["attn"], h, cfg, k_cache=bc["k"],
+                                     v_cache=bc["v"], pos=pos, window=0)
+        x = x + y
+        h = apply_norm(p["norm_x"], x, cfg.norm)
+        ekv = encode_kv(p["xattn"], enc_out, cfg)
+        x = x + cross_attention(p["xattn"], h, ekv, cfg)
+        h = apply_norm(p["norm2"], x, cfg.norm)
+        return x + ffn_apply(p["mlp"], h, cfg), {"k": kc, "v": vc}
+    raise ValueError(kind)
+
+
+_DECODE_WSTAT = __import__("os").environ.get("REPRO_DECODE_WSTAT", "0") == "1"
+
+
+def decode_step(params: Params, tokens: jax.Array, cache: Params,
+                cfg: ArchConfig):
+    """tokens: (B,) int32.  Returns (logits (B, vocab), new cache)."""
+    pos = cache["pos"]
+    x = embed(params["embed"], tokens[:, None], cfg,
+              positions=pos[None, None] if cfg.pos == "learned" else None)
+    if _DECODE_WSTAT:
+        # §Perf H3 — weight-stationary decode: shard the hidden's model dim
+        # over `data` so FSDP-sharded weights contract locally and only the
+        # tiny (B,1,·) partial sums cross the mesh, instead of per-step
+        # whole-weight all-gathers.
+        x = shard_hint(x, None, None, "data")
+    new_cache = {"pos": pos + 1}
+
+    if cfg.enc_dec:
+        enc_out = cache["enc_out"]
+
+        def body(h, xs):
+            lp, bc = xs
+            h, up = _block_decode(lp, h, cfg, "xattn", bc, pos, enc_out)
+            return h, up
+
+        x, ups = jax.lax.scan(body, x, (params["decoder"], cache["layers"]))
+        new_cache["layers"] = ups
+        new_cache["enc_out"] = enc_out
+    else:
+        n_groups, leftover = _group_counts(cfg)
+        if n_groups:
+            def body(h, xs):
+                gp, gc = xs
+                nc = {}
+                for i, kind in enumerate(cfg.block_pattern):
+                    key = f"b{i}_{kind}"
+                    h, nc[key] = _block_decode(gp[key], h, cfg, kind, gc[key], pos)
+                return h, nc
+
+            x, new_groups = jax.lax.scan(
+                body, x, (params["groups"], cache["groups"]))
+            new_cache["groups"] = new_groups
+        new_tail = {}
+        for i in range(leftover):
+            kind = cfg.block_pattern[i]
+            x, new_tail[f"t{i}"] = _block_decode(
+                params["tail"][f"t{i}"], x, cfg, kind, cache["tail"][f"t{i}"], pos)
+        new_cache["tail"] = new_tail
+
+    x = apply_norm(params["final_norm"], x, cfg.norm)
+    logits = unembed(params["embed"], params.get("lm_head"), x[:, 0], cfg)
+    return shard_hint(logits, BATCH, "model"), new_cache

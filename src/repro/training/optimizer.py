@@ -1,0 +1,82 @@
+"""AdamW + LR schedule + global-norm clipping (no external deps).
+
+Optimizer moments are fp32 regardless of param dtype (mixed-precision
+posture: bf16 params, fp32 state, fp32 update math).  State pytrees mirror
+the param tree so the sharding rules of distributed/sharding.py apply
+leaf-for-leaf.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class OptConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_frac: float = 0.1
+
+
+def lr_at(step: jax.Array, oc: OptConfig) -> jax.Array:
+    warm = oc.lr * (step + 1) / max(oc.warmup_steps, 1)
+    prog = jnp.clip((step - oc.warmup_steps)
+                    / max(oc.total_steps - oc.warmup_steps, 1), 0.0, 1.0)
+    cos = oc.lr * (oc.min_lr_frac + (1 - oc.min_lr_frac)
+                   * 0.5 * (1 + jnp.cos(jnp.pi * prog)))
+    return jnp.where(step < oc.warmup_steps, warm, cos)
+
+
+def adamw_init(params: Any) -> dict:
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return {"m": jax.tree.map(zeros, params),
+            "v": jax.tree.map(zeros, params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def global_norm(tree: Any) -> jax.Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def clip_by_global_norm(grads: Any, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale), grads), norm
+
+
+def adamw_update(grads: Any, state: dict, params: Any, oc: OptConfig):
+    """Returns (new_params, new_state, metrics)."""
+    grads32, gnorm = clip_by_global_norm(grads, oc.clip_norm)
+    step = state["step"] + 1
+    lr = lr_at(step, oc)
+    b1c = 1.0 - oc.b1 ** step.astype(jnp.float32)
+    b2c = 1.0 - oc.b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        m2 = oc.b1 * m + (1 - oc.b1) * g
+        v2 = oc.b2 * v + (1 - oc.b2) * g * g
+        mh, vh = m2 / b1c, v2 / b2c
+        delta = mh / (jnp.sqrt(vh) + oc.eps) + oc.weight_decay * p.astype(jnp.float32)
+        p2 = p.astype(jnp.float32) - lr * delta
+        return p2.astype(p.dtype), m2, v2
+
+    out = jax.tree.map(upd, params, grads32, state["m"], state["v"])
+    new_params = jax.tree.map(lambda t: t[0], out,
+                              is_leaf=lambda t: isinstance(t, tuple))
+    new_m = jax.tree.map(lambda t: t[1], out,
+                         is_leaf=lambda t: isinstance(t, tuple))
+    new_v = jax.tree.map(lambda t: t[2], out,
+                         is_leaf=lambda t: isinstance(t, tuple))
+    return new_params, {"m": new_m, "v": new_v, "step": step}, \
+        {"grad_norm": gnorm, "lr": lr}

@@ -1,0 +1,193 @@
+"""Training step construction + fault-tolerant training driver.
+
+``build_train_step(cfg, mesh, ...)`` returns a jit-able function
+``(params, opt_state, batch) -> (params, opt_state, metrics)`` with
+
+* per-group remat (activation checkpointing) inside the layer scan,
+* optional gradient accumulation over microbatches (lax.scan — keeps the
+  HLO one-microbatch-sized and lets XLA overlap the reduce-scatter of
+  microbatch i with the backward of i+1),
+* optional int8 gradient compression with error feedback (the
+  distributed-optimization trick; see distributed/compression.py),
+* parameter/optimizer-state donation.
+
+``train(...)`` is the driver: data pipeline, async checkpointing,
+heartbeat/straggler monitoring, simulated-failure injection for tests, and
+elastic restart (restore into a smaller mesh) — DESIGN.md §5.
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from functools import partial
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..configs.base import ArchConfig
+from ..distributed import compression
+from ..distributed.sharding import batch_specs, param_specs
+from ..models import transformer as tf
+from .optimizer import OptConfig, adamw_init, adamw_update
+
+
+def build_train_step(cfg: ArchConfig, oc: OptConfig | None = None, *,
+                     accum: int = 1, remat: bool = True,
+                     compress_grads: bool = False,
+                     dp_axes: tuple[str, ...] = ()) -> Callable:
+    """The function the dry-run lowers and the trainer executes."""
+    oc = oc or OptConfig()
+
+    def loss_of(params, batch):
+        return tf.loss_fn(params, batch, cfg, remat=remat)
+
+    def train_step(params, opt_state, batch):
+        if accum > 1:
+            def micro(g_acc, mb):
+                l, g = jax.value_and_grad(loss_of)(params, mb)
+                return jax.tree.map(lambda a, b: a + b, g_acc, g), l
+
+            mbs = jax.tree.map(
+                lambda x: x.reshape((accum, x.shape[0] // accum) + x.shape[1:]),
+                batch)
+            zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            grads, losses = jax.lax.scan(micro, zeros, mbs)
+            grads = jax.tree.map(lambda g: g / accum, grads)
+            loss = losses.mean()
+        else:
+            loss, grads = jax.value_and_grad(loss_of)(params, batch)
+
+        if compress_grads and dp_axes:
+            grads, opt_state = compression.compressed_allreduce(
+                grads, opt_state, dp_axes)
+
+        params, opt_state, metrics = adamw_update(grads, opt_state, params, oc)
+        metrics["loss"] = loss
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def jit_train_step(cfg: ArchConfig, mesh, params_or_shapes, batch_like,
+                   oc: OptConfig | None = None, *, accum: int = 1,
+                   remat: bool = True, donate: bool = True):
+    """jit with explicit in/out shardings (the dry-run entry point)."""
+    pspecs = param_specs(params_or_shapes, mesh, cfg)
+    ospecs = {"m": pspecs, "v": pspecs, "step": P()}
+    bspecs = batch_specs(batch_like, mesh)
+    step = build_train_step(cfg, oc, accum=accum, remat=remat)
+    return jax.jit(
+        step,
+        in_shardings=(pspecs, ospecs, bspecs),
+        out_shardings=(pspecs, ospecs, None),
+        donate_argnums=(0, 1) if donate else (),
+    )
+
+
+# --------------------------------------------------------------------------
+# Fault-tolerant driver
+# --------------------------------------------------------------------------
+
+
+@dataclass
+class TrainReport:
+    steps_done: int = 0
+    restarts: int = 0
+    losses: list = field(default_factory=list)
+    step_times: list = field(default_factory=list)
+    straggler_flags: int = 0
+    checkpoints: list = field(default_factory=list)
+
+
+class StepTimeMonitor:
+    """EWMA step-time tracker; flags stragglers (steps ≥ k× the mean)."""
+
+    def __init__(self, k: float = 3.0, alpha: float = 0.2):
+        self.k, self.alpha, self.mean = k, alpha, None
+        self.flags = 0
+
+    def observe(self, dt: float) -> bool:
+        if self.mean is None:
+            self.mean = dt
+            return False
+        slow = dt > self.k * self.mean
+        if slow:
+            self.flags += 1
+        self.mean = (1 - self.alpha) * self.mean + self.alpha * dt
+        return slow
+
+
+class Heartbeat:
+    """Deadline monitor: ``beat()`` every step; ``expired()`` signals a
+    hang (on real fleets this triggers the coordinator's restart path)."""
+
+    def __init__(self, timeout_s: float = 300.0):
+        self.timeout_s = timeout_s
+        self.last = time.monotonic()
+
+    def beat(self) -> None:
+        self.last = time.monotonic()
+
+    def expired(self) -> bool:
+        return time.monotonic() - self.last > self.timeout_s
+
+
+def train(cfg: ArchConfig, *, steps: int, batch_fn: Callable[[int], dict],
+          checkpointer=None, checkpoint_every: int = 50,
+          oc: OptConfig | None = None, seed: int = 0, mesh=None,
+          fail_at: int | None = None, params=None, opt_state=None,
+          start_step: int = 0, remat: bool = True) -> tuple[Any, Any, TrainReport]:
+    """CPU-runnable training driver with checkpoint/restart semantics.
+
+    ``fail_at`` injects a simulated failure (raises) after that step — the
+    restart path (tests/examples) calls ``train`` again with the restored
+    state, possibly on a different mesh (elastic restart).
+    """
+    oc = oc or OptConfig()
+    report = TrainReport()
+    if params is None:
+        params = tf.init_params(cfg, jax.random.PRNGKey(seed))
+    if opt_state is None:
+        opt_state = adamw_init(params)
+
+    step_fn = jax.jit(build_train_step(cfg, oc, remat=remat),
+                      donate_argnums=(0, 1))
+    monitor, hb = StepTimeMonitor(), Heartbeat()
+
+    for step in range(start_step, steps):
+        t0 = time.perf_counter()
+        batch = batch_fn(step)
+        params, opt_state, metrics = step_fn(params, opt_state, batch)
+        loss = float(metrics["loss"])
+        dt = time.perf_counter() - t0
+        hb.beat()
+        if monitor.observe(dt):
+            report.straggler_flags += 1
+        report.losses.append(loss)
+        report.step_times.append(dt)
+        report.steps_done = step + 1
+        if checkpointer is not None and (step + 1) % checkpoint_every == 0:
+            checkpointer.save(step + 1, {"params": params, "opt": opt_state})
+            report.checkpoints.append(step + 1)
+        if fail_at is not None and step + 1 >= fail_at:
+            raise SimulatedFailure(f"injected failure at step {step + 1}")
+    return params, opt_state, report
+
+
+class SimulatedFailure(RuntimeError):
+    pass
+
+
+def resume(cfg: ArchConfig, checkpointer, *, steps: int, batch_fn,
+           seed: int = 0, shardings=None, **kw):
+    """Restore the latest checkpoint and continue (the restart path).
+    Works onto a different mesh via ``shardings`` (elastic restart)."""
+    like = {"params": tf.init_params(cfg, jax.random.PRNGKey(seed))}
+    like["opt"] = adamw_init(like["params"])
+    step, state = checkpointer.restore_latest(like, shardings)
+    return train(cfg, steps=steps, batch_fn=batch_fn,
+                 checkpointer=checkpointer, params=state["params"],
+                 opt_state=state["opt"], start_step=step, seed=seed, **kw)

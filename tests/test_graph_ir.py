@@ -1,0 +1,94 @@
+"""IR unit tests: graph construction, toposort, access signatures."""
+
+import numpy as np
+import pytest
+
+from repro.core import (Access, Buffer, DataflowGraph, Loop, Task, access_sig,
+                        arrival_order, conv2d_task, ewise_task, idx,
+                        matmul_task, pool_task)
+from repro.core.graph import GraphError
+from repro.core.patterns import index_dims, reduction_dims
+
+
+def _mini_graph():
+    g = DataflowGraph("mini")
+    g.buffer("a", (4, 4), kind="input")
+    g.buffer("b", (4, 4))
+    g.buffer("c", (4, 4), kind="output")
+    g.add_task(ewise_task("t1", "b", ["a"], (4, 4),
+                          fn=lambda env: {"b": env["a"] + 1}))
+    g.add_task(ewise_task("t2", "c", ["b"], (4, 4),
+                          fn=lambda env: {"c": env["b"] * 2}))
+    return g
+
+
+def test_toposort_and_execute():
+    g = _mini_graph()
+    order = [t.name for t in g.toposort()]
+    assert order == ["t1", "t2"]
+    out = g.execute({"a": np.zeros((4, 4))})
+    assert np.allclose(out["c"], 2.0)
+
+
+def test_cycle_detection():
+    g = DataflowGraph("cyc")
+    g.buffer("a", (2,))
+    g.buffer("b", (2,))
+    g.add_task(ewise_task("t1", "b", ["a"], (2,)))
+    g.add_task(ewise_task("t2", "a", ["b"], (2,)))
+    with pytest.raises(GraphError):
+        g.toposort()
+
+
+def test_validate_rank_mismatch():
+    g = DataflowGraph("bad")
+    g.buffer("a", (2, 2))
+    g.buffer("o", (2,))
+    t = Task("t", [Loop("i", 2)], [Access("a", (idx("i"),), False)],
+             [Access("o", (idx("i"),), True)])
+    g.add_task(t)
+    with pytest.raises(GraphError):
+        g.validate()
+
+
+def test_matmul_signature():
+    t = matmul_task("mm", "c", "a", "b", m=8, n=4, k=16)
+    w = t.writes_to("c")[0]
+    assert index_dims(t, w) == ["m", "n"]
+    assert reduction_dims(t, w) == ["k"]
+    sig = access_sig(t, w)
+    assert sig.distinct == 32 and sig.total == 8 * 4 * 16
+    assert sig.repeats
+
+
+def test_conv_window_detection():
+    t = conv2d_task("cv", "y", "x", "w", n=1, co=2, ci=3, h=8, w=8, kh=3, kw=3)
+    r = t.reads_from("x")[0]
+    sig = access_sig(t, r)
+    assert sig.window                     # overlapping stencil
+    # span of (h,1)+(kh,1): 8+3-1 = 10 per spatial dim
+    assert sig.distinct == 1 * 3 * 10 * 10
+
+
+def test_strided_pool_not_window():
+    t = pool_task("p", "y", "x", n=1, c=2, oh=4, ow=4, k=2)
+    r = t.reads_from("x")[0]
+    sig = access_sig(t, r)
+    assert not sig.window                 # stride-k windows don't overlap
+    assert sig.distinct == 1 * 2 * 8 * 8 == sig.total
+
+
+def test_arrival_order_skips_unit_trips():
+    t = ewise_task("e", "o", ["i"], (1, 4, 4), dim_names=["n", "h", "w"])
+    g = DataflowGraph("x")
+    r = t.reads_from("i")[0]
+    assert arrival_order(t, r) == (1, 2)  # n (trip 1) never varies
+
+
+def test_enclosing_override_changes_counts():
+    t = matmul_task("mm", "c", "a", "b", m=8, n=4, k=16)
+    w = t.writes_to("c")[0]
+    w.enclosing = ("m", "n")
+    sig = access_sig(t, w)
+    assert sig.total == 32 == sig.distinct
+    assert not sig.repeats

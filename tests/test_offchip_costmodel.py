@@ -1,0 +1,69 @@
+"""Off-chip transfer planning (§V-C) + cost-model property tests."""
+
+import numpy as np
+
+from repro.core import (DataflowGraph, ewise_task, graph_latency, host_manifest,
+                        matmul_task, plan_offchip, task_cost)
+from repro.core.costmodel import V5E
+from repro.core.schedule import apply_degree
+from repro.models import dataflow_models as dm
+
+
+def test_channel_balancing():
+    g = dm.vgg16(32)
+    plan = plan_offchip(g, num_channels=8)
+    assert len(plan.channel_bytes) == 8
+    # greedy largest-first keeps the busiest channel within 2x of the mean
+    mean = sum(plan.channel_bytes) / 8
+    assert max(plan.channel_bytes) <= 2.0 * mean + 1
+    assert 0.0 < plan.bandwidth_util <= 1.0
+
+
+def test_burst_padding_for_narrow_buffers():
+    g = DataflowGraph("narrow")
+    g.buffer("w", (64, 3), kind="weight")     # 3-wide innermost: short burst
+    plan = plan_offchip(g)
+    assert "w" in plan.padded_shape           # padded to lane multiple
+    assert plan.padded_shape["w"][-1] % 128 == 0
+
+
+def test_host_manifest_lists_transfers():
+    g = dm.gemm(64, 64, 64)
+    plan = plan_offchip(g)
+    text = host_manifest(g, plan)
+    assert "h2d" in text and "burst=" in text
+
+
+def test_parallel_degree_scales_compute():
+    t = matmul_task("mm", "c", "a", "b", 128, 128, 128)
+    g = DataflowGraph("g")
+    g.buffer("a", (128, 128), kind="input")
+    g.buffer("b", (128, 128), kind="weight")
+    g.buffer("c", (128, 128), kind="output")
+    g.add_task(t)
+    c1 = task_cost(g, t).compute_cycles
+    apply_degree(t, 16)
+    c16 = task_cost(g, t).compute_cycles
+    assert c16 <= c1 / 8                      # near-linear scaling
+
+
+def test_memory_bound_floor():
+    """Parallelism cannot push a task below its memory-bandwidth bound."""
+    g = DataflowGraph("mb")
+    g.buffer("x", (1024, 1024), kind="input")
+    g.buffer("o", (1024, 1024), kind="output")
+    t = ewise_task("copyish", "o", ["x"], (1024, 1024), flops_per_iter=0.1)
+    g.add_task(t)
+    base = task_cost(g, t)
+    apply_degree(t, 4096)
+    fast = task_cost(g, t)
+    assert fast.latency >= base.memory_cycles * 0.99
+
+
+def test_graph_latency_monotone_in_degree():
+    g = dm.feed_forward(64, 128)
+    lat1 = graph_latency(g, V5E).total_cycles
+    for t in g.tasks:
+        apply_degree(t, 8)
+    lat8 = graph_latency(g, V5E).total_cycles
+    assert lat8 < lat1

@@ -1,0 +1,88 @@
+"""Property-based tests (hypothesis) on compiler invariants.
+
+For arbitrary randomly-wired layer graphs:
+  1. codo_opt leaves no coarse violations;
+  2. every FIFO-classified edge is fine-violation-free;
+  3. the lowered program is numerically equal to the un-optimized oracle;
+  4. schedule degrees are legal (≤ trip, never on unsafe loops);
+  5. the final latency never exceeds the sequential baseline.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (codo_opt, coarse_violations, fine_violations, lower,
+                        verify_violation_free)
+from repro.core.reuse import parallel_safety
+from repro.models.dataflow_models import GB
+
+
+def build_random_graph(layer_plan, skips, width):
+    """An MLP-ish chain with optional residual skips (SPMC generators)."""
+    b = GB("rand")
+    x = b.load(b.input("x", (4, width)))
+    outs = [x]
+    for i, kind in enumerate(layer_plan):
+        if kind == 0:
+            h = b.fc(outs[-1], width, relu=True)
+        elif kind == 1:
+            h = b.fc(outs[-1], width)
+        else:
+            h = b.gelu(outs[-1])
+        if i in skips and b.shape[outs[-1]] == b.shape[h]:
+            h = b.add(h, outs[-1])
+        outs.append(h)
+    b.mark_output(outs[-1])
+    return b.g
+
+
+graph_strategy = st.tuples(
+    st.lists(st.integers(0, 2), min_size=1, max_size=6),
+    st.sets(st.integers(0, 5), max_size=3),
+    st.sampled_from([8, 16, 32]),
+)
+
+
+@settings(max_examples=25, deadline=None)
+@given(graph_strategy)
+def test_compiler_invariants(plan):
+    layer_plan, skips, width = plan
+    g = build_random_graph(layer_plan, skips, width)
+    g.validate()
+    compiled = codo_opt(g)
+
+    # 1 & 2: violation-free design
+    assert not coarse_violations(compiled.graph)
+    assert not verify_violation_free(compiled)
+
+    # 3: functional equivalence vs the oracle
+    rng = np.random.default_rng(0)
+    env = {buf.name: jnp.asarray(rng.standard_normal(buf.shape) * 0.1,
+                                 jnp.float32)
+           for buf in g.buffers.values() if buf.kind in ("input", "weight")}
+    got = lower(compiled, jit=False)(env)
+    want = g.execute(env)
+    for k in want:
+        np.testing.assert_allclose(np.asarray(got[k]), np.asarray(want[k]),
+                                   rtol=2e-4, atol=2e-4)
+
+    # 4: legal degrees
+    for t in compiled.graph.tasks:
+        for l in t.loops:
+            assert 1 <= l.parallel <= max(l.trip, 1)
+            if l.parallel > 1:
+                assert parallel_safety(t, l.var) != "unsafe"
+
+    # 5: never slower than sequential
+    assert compiled.final.total_cycles <= compiled.baseline.total_cycles * 1.01
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(2, 6), st.integers(1, 4))
+def test_fifo_fraction_bounds(n_layers, seed):
+    g = build_random_graph([0] * n_layers, set(), 16)
+    c = codo_opt(g)
+    assert 0.0 <= c.fifo_fraction <= 1.0
+    # pure fc/relu chains are fully streamable after rewriting
+    assert c.fifo_fraction == 1.0
