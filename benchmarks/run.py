@@ -25,6 +25,7 @@ SUITES = {
     "table4": tables.table4_dnns,
     "gpt2": tables.gpt2_eval,
     "fig10": tables.ablation,
+    "table7": tables.table7_batch,
     "fig11": tables.parallelism_sweep,
     "table8": tables.fifo_percentage,
     "micro": tables.kernel_microbench,

@@ -1,6 +1,6 @@
 """Compile ResNet-18 (Table III workload) end to end, including the
-Opt1..Opt5 ablation of Table VII and the resource/performance sweep of
-Fig. 11.
+Opt1..Opt5 ablation of Table VII, per-pass diagnostics from the pass
+manager, the compile cache, and the resource/performance sweep of Fig. 11.
 
     PYTHONPATH=src python examples/compile_resnet18.py
 """
@@ -10,7 +10,8 @@ import sys
 
 sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1] / "src"))
 
-from repro.core import CodoOptions, codo_opt  # noqa: E402
+from repro.core import (ABLATION_PRESETS, CodoOptions, CompileCache,  # noqa: E402
+                        codo_opt)
 from repro.models.dataflow_models import resnet18  # noqa: E402
 
 
@@ -19,13 +20,24 @@ def main():
     print(f"resnet18(3x32x32): {len(g.tasks)} tasks, "
           f"{len(g.buffers)} buffers")
 
-    print("\n== ablation (Table VII / Fig. 10) ==")
-    for name, opt in [("opt1", CodoOptions.opt1()), ("opt2", CodoOptions.opt2()),
-                      ("opt3", CodoOptions.opt3()), ("opt4", CodoOptions.opt4()),
-                      ("opt5", CodoOptions.opt5())]:
-        c = codo_opt(g, opt)
-        print(f"  {name}: speedup {c.speedup:9.1f}x  fifo {c.fifo_fraction:4.0%}"
+    print("\n== ablation (Table VII / Fig. 10, presets are data) ==")
+    for name in ABLATION_PRESETS:
+        c = codo_opt(g, CodoOptions.preset(name))
+        print(f"  {name} {'+'.join(ABLATION_PRESETS[name]):<42s}"
+              f" speedup {c.speedup:9.1f}x  fifo {c.fifo_fraction:4.0%}"
               f"  compile {c.compile_seconds*1e3:6.1f} ms")
+
+    print("\n== per-pass diagnostics (opt5) ==")
+    c = codo_opt(g, CodoOptions.opt5(), cache=None)
+    print(c.diagnostics.table())
+
+    print("\n== compile cache ==")
+    cache = CompileCache()
+    cold = codo_opt(resnet18(32), cache=cache)
+    warm = codo_opt(resnet18(32), cache=cache)   # fresh build, same structure
+    print(f"  cold {cold.compile_seconds*1e3:8.1f} ms")
+    print(f"  warm {warm.compile_seconds*1e3:8.1f} ms "
+          f"(hit={warm.cache_hit}, same speedup={warm.speedup == cold.speedup})")
 
     print("\n== resource/performance trade-off (Fig. 11) ==")
     for budget in (128, 256, 512, 1024, 2048):

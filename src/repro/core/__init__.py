@@ -7,8 +7,11 @@ Public API:
 """
 
 from .buffers import BufferPlan, determine_buffers, downgrade_to_pingpong
+from .cache import CacheStats, CompileCache
 from .coarse import eliminate_coarse
-from .compiler import CodoOptions, CompiledDataflow, codo_opt, verify_violation_free
+from .compiler import (BatchJob, BatchResult, CodoOptions, CompiledDataflow,
+                       ablation_jobs, codo_opt, codo_opt_batch, default_cache,
+                       default_manager, verify_violation_free)
 from .costmodel import V5E, GraphCost, HwParams, graph_latency, sequential_latency, task_cost
 from .fine import eliminate_fine
 from .graph import (FIFO, PINGPONG, Access, Buffer, DataflowGraph, Loop, Task,
@@ -17,21 +20,28 @@ from .graph import (FIFO, PINGPONG, Access, Buffer, DataflowGraph, Loop, Task,
 from .lowering import (LoweredProgram, fusion_groups, lower, register_group_kernel,
                        verify_lowering)
 from .offchip import TransferPlan, host_manifest, plan_offchip
+from .passes import (ABLATION_PRESETS, CompileDiagnostics, Pass, PassManager,
+                     PassRecord, PASS_RUN_COUNTS, default_passes)
 from .patterns import (coarse_violations, fine_violations, violation_report,
                        access_sig, arrival_order)
 from .reuse import generate_reuse_buffers, parallel_safety
 from .schedule import assign_stages, autoschedule
 
 __all__ = [
-    "Access", "Buffer", "BufferPlan", "CodoOptions", "CompiledDataflow",
-    "DataflowGraph", "FIFO", "GraphCost", "HwParams", "Loop", "LoweredProgram",
-    "PINGPONG", "Task", "TransferPlan", "V5E", "access_sig", "arrival_order",
+    "ABLATION_PRESETS", "Access", "BatchJob", "BatchResult", "Buffer",
+    "BufferPlan", "CacheStats", "CodoOptions", "CompileCache",
+    "CompileDiagnostics", "CompiledDataflow", "DataflowGraph", "FIFO",
+    "GraphCost", "HwParams", "Loop", "LoweredProgram", "PINGPONG",
+    "PASS_RUN_COUNTS", "Pass", "PassManager", "PassRecord", "Task",
+    "TransferPlan", "V5E", "ablation_jobs", "access_sig", "arrival_order",
     "assign_stages", "autoschedule", "coarse_violations", "codo_opt",
-    "conv2d_task", "copy_task", "determine_buffers", "downgrade_to_pingpong",
-    "eliminate_coarse", "eliminate_fine", "ewise_task", "fine_violations",
-    "full_index", "fusion_groups", "generate_reuse_buffers", "graph_latency",
-    "host_manifest", "idx", "lower", "matmul_task", "pad_task",
-    "parallel_safety", "plan_offchip", "pool_task", "reduce_task",
-    "register_group_kernel", "retarget_fn", "sequential_latency", "task_cost",
-    "verify_lowering", "verify_violation_free", "violation_report",
+    "codo_opt_batch", "conv2d_task", "copy_task", "default_cache",
+    "default_manager", "default_passes", "determine_buffers",
+    "downgrade_to_pingpong", "eliminate_coarse", "eliminate_fine",
+    "ewise_task", "fine_violations", "full_index", "fusion_groups",
+    "generate_reuse_buffers", "graph_latency", "host_manifest", "idx",
+    "lower", "matmul_task", "pad_task", "parallel_safety", "plan_offchip",
+    "pool_task", "reduce_task", "register_group_kernel", "retarget_fn",
+    "sequential_latency", "task_cost", "verify_lowering",
+    "verify_violation_free", "violation_report",
 ]

@@ -22,6 +22,17 @@ import numpy as np
 from .graph import FIFO, PINGPONG, DataflowGraph
 from .patterns import fine_violations_edge
 
+# Pipeline declaration consumed by passes.default_passes().  Always runs:
+# even the Opt1/Opt2 ablations need every edge classified FIFO/ping-pong
+# before the cost model can evaluate the design.
+PASS_INFO = {
+    "name": "buffers",
+    "result_attr": "buffer_plan",
+    "option_flag": None,
+    "invalidates": (),
+    "description": "communication-buffer determination (FIFO-first, §V-A)",
+}
+
 
 @dataclass
 class BufferPlan:

@@ -1,0 +1,175 @@
+"""Content-addressed compile cache for ``codo_opt``.
+
+The key is ``DataflowGraph.structural_hash()`` (everything the passes read,
+minus numeric closures) combined with ``CodoOptions.cache_key()``, so two
+independent builds of the same model under the same options hit the same
+entry — including across processes when a disk directory is configured.
+
+Two tiers:
+
+* **in-memory LRU** — stores full :class:`CompiledDataflow` results
+  (numeric ``fn`` closures included, so lowering/verification still work on
+  hits).  Both ``put`` and ``get`` clone the graph, so callers can mutate
+  results (e.g. lowering assigns fusion groups) without corrupting the
+  cache.
+* **on-disk pickle** (optional) — survives process restarts; this is what
+  makes a second ``python -m repro.core.compiler`` invocation near-free.
+  Closures aren't picklable, so disk entries store a *structural* result
+  (``Task.fn`` stripped).  Every pass decision, report, latency estimate
+  and ``verify_violation_free`` check works on such a result; only numeric
+  re-execution (``lower``/``execute``) needs a fresh compile.
+
+Knobs: ``CODO_CACHE_SIZE`` (LRU entries, default 256) and
+``CODO_CACHE_DIR`` (enables the disk tier) — read by
+:func:`repro.core.compiler.default_cache`.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import os
+import pickle
+import threading
+from collections import OrderedDict
+from dataclasses import dataclass
+from pathlib import Path
+from typing import Any
+
+
+@dataclass
+class CacheStats:
+    hits: int = 0            # in-memory hits
+    disk_hits: int = 0
+    misses: int = 0
+    stores: int = 0
+    evictions: int = 0
+    disk_errors: int = 0
+
+    def summary(self) -> str:
+        return (f"cache: {self.hits} hits, {self.disk_hits} disk hits, "
+                f"{self.misses} misses, {self.stores} stores, "
+                f"{self.evictions} evictions")
+
+
+def _clone(compiled: Any, *, strip_fns: bool = False) -> Any:
+    """Defensive copy of a CompiledDataflow: fresh graph and buffer plan
+    (``downgrade_to_pingpong`` mutates plans post-compile), plus no closures
+    for the disk tier.  The remaining reports are shared — nothing mutates
+    them after compilation."""
+    g = compiled.graph.copy()
+    if strip_fns:
+        for t in g.tasks:
+            t.fn = None
+    bp = compiled.buffer_plan
+    if bp is not None:
+        bp = dataclasses.replace(bp, impl=dict(bp.impl),
+                                 fifo_depth=dict(bp.fifo_depth),
+                                 reasons=dict(bp.reasons))
+    return dataclasses.replace(compiled, graph=g, buffer_plan=bp)
+
+
+class CompileCache:
+    """Thread-safe LRU of compile results, with an optional pickle tier."""
+
+    def __init__(self, maxsize: int = 256, disk_dir: str | Path | None = None):
+        self.maxsize = max(1, int(maxsize))
+        self.disk_dir = Path(disk_dir) if disk_dir else None
+        self.stats = CacheStats()
+        self._mem: OrderedDict[str, Any] = OrderedDict()
+        self._lock = threading.RLock()
+
+    # ---- keying ----------------------------------------------------------
+    @staticmethod
+    def key(graph: Any, options: Any) -> str:
+        return f"{graph.structural_hash()}-{options.cache_key()[:16]}"
+
+    # ---- lookup ----------------------------------------------------------
+    def _disk_path(self, key: str) -> Path | None:
+        return self.disk_dir / f"{key}.pkl" if self.disk_dir else None
+
+    def get(self, key: str) -> Any | None:
+        # Clone and unpickle outside the lock: entries are immutable once
+        # inserted (both put and get hand out clones), so a bare reference
+        # is safe to copy concurrently.
+        with self._lock:
+            entry = self._mem.get(key)
+            if entry is not None:
+                self._mem.move_to_end(key)
+                self.stats.hits += 1
+        if entry is not None:
+            return self._mark_hit(_clone(entry))
+        path = self._disk_path(key)
+        if path is not None and path.exists():
+            try:
+                entry = pickle.loads(path.read_bytes())
+            except Exception:
+                with self._lock:
+                    self.stats.disk_errors += 1
+            else:
+                # Deliberately NOT promoted into the memory tier: disk
+                # entries are fn-stripped, and the memory tier promises
+                # full results (closures included).
+                with self._lock:
+                    self.stats.disk_hits += 1
+                return self._mark_hit(_clone(entry))
+        with self._lock:
+            self.stats.misses += 1
+        return None
+
+    @staticmethod
+    def _mark_hit(compiled: Any) -> Any:
+        diag = getattr(compiled, "diagnostics", None)
+        if diag is not None:
+            compiled.diagnostics = dataclasses.replace(diag, cache_hit=True)
+        return compiled
+
+    # ---- store -----------------------------------------------------------
+    def _insert(self, key: str, entry: Any) -> None:
+        self._mem[key] = entry
+        self._mem.move_to_end(key)
+        while len(self._mem) > self.maxsize:
+            self._mem.popitem(last=False)
+            self.stats.evictions += 1
+
+    def put(self, key: str, compiled: Any) -> None:
+        # Graph copies and pickling happen before taking the lock so a
+        # batch-compile thread pool doesn't serialize on the cache.
+        entry = _clone(compiled)
+        blob = None
+        path = self._disk_path(key)
+        if path is not None:
+            try:
+                blob = pickle.dumps(_clone(compiled, strip_fns=True))
+            except Exception:
+                # Unpicklable report: the memory tier still works, so
+                # degrade silently but count it.
+                blob = None
+                with self._lock:
+                    self.stats.disk_errors += 1
+        with self._lock:
+            self._insert(key, entry)
+            self.stats.stores += 1
+        if blob is not None:
+            try:
+                path.parent.mkdir(parents=True, exist_ok=True)
+                tmp = path.with_suffix(f".{os.getpid()}.tmp")
+                tmp.write_bytes(blob)
+                tmp.replace(path)
+            except Exception:
+                with self._lock:
+                    self.stats.disk_errors += 1
+
+    # ---- maintenance -----------------------------------------------------
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._mem)
+
+    def clear(self, *, disk: bool = False) -> None:
+        with self._lock:
+            self._mem.clear()
+            if disk and self.disk_dir is not None and self.disk_dir.exists():
+                for p in self.disk_dir.glob("*.pkl"):
+                    p.unlink(missing_ok=True)
+
+
+__all__ = ["CacheStats", "CompileCache"]

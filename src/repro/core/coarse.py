@@ -27,6 +27,15 @@ from .patterns import MPMC, MPSC, SPMC, coarse_violations
 
 _MAX_ITERS = 64
 
+# Pipeline declaration consumed by passes.default_passes().
+PASS_INFO = {
+    "name": "coarse",
+    "result_attr": "coarse_report",
+    "option_flag": "coarse",
+    "invalidates": (),
+    "description": "coarse-grained violation elimination (Alg. 1, Fig. 4)",
+}
+
 
 @dataclass
 class CoarseReport:
@@ -34,6 +43,14 @@ class CoarseReport:
     fusions: list[str] = field(default_factory=list)
     merges: list[str] = field(default_factory=list)
     iterations: int = 0
+
+    def merge(self, other: "CoarseReport") -> "CoarseReport":
+        """Fold a re-run's report into this one (invalidation re-runs)."""
+        self.duplicators_inserted += other.duplicators_inserted
+        self.fusions += other.fusions
+        self.merges += other.merges
+        self.iterations += other.iterations
+        return self
 
     def summary(self) -> str:
         return (f"coarse: {len(self.duplicators_inserted)} duplicators, "

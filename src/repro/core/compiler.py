@@ -9,26 +9,46 @@ Pass order (deeply co-optimizing, matching §III):
   5. off-chip transfer management                (offchip.py)
   6. automated dataflow scheduling + inter-task  (schedule.py)
 
-Each pass can be disabled for the Opt1..Opt5 ablation of Table VII.  The
-result is a :class:`CompiledDataflow`: the transformed graph, the buffer &
-transfer plans, the schedule report, and latency estimates for the
-baseline (sequential), the ping-pong-only design and the final design —
-the numbers the benchmark tables report.
+The pipeline is driven by :class:`repro.core.passes.PassManager`: each pass
+is a named registry entry with declared invalidations, and every run emits
+a :class:`~repro.core.passes.CompileDiagnostics` (per-pass wall time +
+before/after violation census).  ``CodoOptions.preset("opt1").."opt5"``
+reconstruct the Table VII ablations from :data:`ABLATION_PRESETS` — the
+ablation grid is data, not code.
+
+Results are memoized in a content-addressed :class:`CompileCache` keyed by
+the graph's structural hash + the options, so recompiling an identical
+graph is near-free (and, with ``CODO_CACHE_DIR`` set, free across
+processes).
+
+Batch mode compiles many (config, preset) cells concurrently:
+
+    python -m repro.core.compiler --all --ablations      # full Table VII grid
+    python -m repro.core.compiler --configs gpt2-medium,mamba2-780m --opts opt5
 """
 
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+import argparse
+import dataclasses
+import hashlib
+import os
+import sys
+import time
+from concurrent.futures import ThreadPoolExecutor
+from dataclasses import dataclass
 
-from .buffers import BufferPlan, determine_buffers
-from .coarse import CoarseReport, eliminate_coarse
+from .buffers import BufferPlan
+from .cache import CompileCache
+from .coarse import CoarseReport
 from .costmodel import V5E, GraphCost, HwParams, graph_latency, sequential_latency
-from .fine import FineReport, eliminate_fine
+from .fine import FineReport
 from .graph import DataflowGraph
-from .offchip import TransferPlan, plan_offchip
+from .offchip import TransferPlan
+from .passes import ABLATION_PRESETS, CompileDiagnostics, PassManager
 from .patterns import coarse_violations, fine_violations
-from .reuse import ReuseReport, generate_reuse_buffers
-from .schedule import ScheduleReport, autoschedule
+from .reuse import ReuseReport
+from .schedule import ScheduleReport
 
 
 @dataclass
@@ -48,26 +68,73 @@ class CodoOptions:
     hbm_channels: int = 8
     hw: HwParams = V5E
 
-    # Table VII's ablation configurations.
+    # ---- pass-set presets (Table VII as data) -----------------------------
+    def pass_set(self) -> tuple[str, ...]:
+        """Names of the default-pipeline passes these options enable."""
+        return tuple(PassManager.default().active(self))
+
+    @classmethod
+    def from_passes(cls, names, **overrides) -> "CodoOptions":
+        """Options whose flags enable exactly the given pass names (plus
+        ``buffers``, which always runs).  Raises when the set is not
+        expressible — ``reuse`` and ``offchip`` share the single
+        ``communication`` flag, so one without the other is rejected
+        rather than silently widened."""
+        names = set(names)
+        known = {p.name for p in PassManager.default().passes}
+        unknown = names - known
+        if unknown:
+            raise KeyError(f"unknown passes {sorted(unknown)}; known: {sorted(known)}")
+        opts = cls(
+            coarse="coarse" in names,
+            fine="fine" in names,
+            communication=bool(names & {"reuse", "offchip"}),
+            scheduling="schedule" in names,
+            **overrides,
+        )
+        got = set(opts.pass_set())
+        want = names | {"buffers"}
+        if got != want:
+            raise ValueError(
+                f"pass set {sorted(want)} is not expressible as option flags "
+                f"(would enable {sorted(got)}); reuse/offchip are gated "
+                f"together by `communication`")
+        return opts
+
+    @classmethod
+    def preset(cls, name: str, **overrides) -> "CodoOptions":
+        """Table VII ablation preset: ``preset("opt3", budget_units=512)``."""
+        if name not in ABLATION_PRESETS:
+            raise KeyError(f"unknown preset {name!r}; known: {sorted(ABLATION_PRESETS)}")
+        return cls.from_passes(ABLATION_PRESETS[name], **overrides)
+
     @staticmethod
     def opt1() -> "CodoOptions":
-        return CodoOptions(coarse=False, fine=True, communication=False, scheduling=False)
+        return CodoOptions.preset("opt1")
 
     @staticmethod
     def opt2() -> "CodoOptions":
-        return CodoOptions(coarse=True, fine=False, communication=False, scheduling=False)
+        return CodoOptions.preset("opt2")
 
     @staticmethod
     def opt3() -> "CodoOptions":
-        return CodoOptions(coarse=True, fine=False, communication=True, scheduling=False)
+        return CodoOptions.preset("opt3")
 
     @staticmethod
     def opt4() -> "CodoOptions":
-        return CodoOptions(coarse=True, fine=True, communication=True, scheduling=False)
+        return CodoOptions.preset("opt4")
 
     @staticmethod
     def opt5() -> "CodoOptions":
-        return CodoOptions()
+        return CodoOptions.preset("opt5")
+
+    # ---- content addressing ------------------------------------------------
+    def cache_key(self) -> str:
+        """Stable hash of every option field (HwParams is a frozen dataclass,
+        so its repr is canonical)."""
+        sig = tuple((f.name, repr(getattr(self, f.name)))
+                    for f in dataclasses.fields(self))
+        return hashlib.sha256(repr(sig).encode()).hexdigest()
 
 
 @dataclass
@@ -83,6 +150,7 @@ class CompiledDataflow:
     baseline: GraphCost | None = None          # sequential, degree 1
     final: GraphCost | None = None
     compile_seconds: float = 0.0
+    diagnostics: CompileDiagnostics | None = None
 
     @property
     def speedup(self) -> float:
@@ -94,6 +162,10 @@ class CompiledDataflow:
     def fifo_fraction(self) -> float:
         return self.buffer_plan.fifo_fraction() if self.buffer_plan else 0.0
 
+    @property
+    def cache_hit(self) -> bool:
+        return bool(self.diagnostics and self.diagnostics.cache_hit)
+
     def report(self) -> str:
         lines = [f"== codo_opt({self.graph.name}) =="]
         for r in (self.coarse_report, self.fine_report, self.reuse_report,
@@ -104,46 +176,75 @@ class CompiledDataflow:
             lines.append(f"  baseline {self.baseline.total_cycles:,.0f} cyc -> "
                          f"final {self.final.total_cycles:,.0f} cyc "
                          f"({self.speedup:.1f}x, {self.fifo_fraction:.0%} FIFO)")
+        if self.diagnostics is not None:
+            lines.append("  " + self.diagnostics.summary())
         lines.append(f"  compile time {self.compile_seconds*1e3:.1f} ms")
         return "\n".join(lines)
 
 
-def codo_opt(graph: DataflowGraph, options: CodoOptions | None = None
-             ) -> CompiledDataflow:
-    import time
+# --------------------------------------------------------------------------
+# Driver
+# --------------------------------------------------------------------------
+
+_DEFAULT_MANAGER: PassManager | None = None
+_DEFAULT_CACHE: CompileCache | None = None
+_UNSET = object()
+
+
+def default_manager() -> PassManager:
+    global _DEFAULT_MANAGER
+    if _DEFAULT_MANAGER is None:
+        _DEFAULT_MANAGER = PassManager.default()
+    return _DEFAULT_MANAGER
+
+
+def default_cache() -> CompileCache:
+    """Process-wide cache; ``CODO_CACHE_SIZE``/``CODO_CACHE_DIR`` configure
+    the LRU size and the optional disk tier."""
+    global _DEFAULT_CACHE
+    if _DEFAULT_CACHE is None:
+        _DEFAULT_CACHE = CompileCache(
+            maxsize=int(os.environ.get("CODO_CACHE_SIZE", "256")),
+            disk_dir=os.environ.get("CODO_CACHE_DIR") or None)
+    return _DEFAULT_CACHE
+
+
+def codo_opt(graph: DataflowGraph, options: CodoOptions | None = None, *,
+             cache: CompileCache | None = _UNSET,
+             manager: PassManager | None = None) -> CompiledDataflow:
+    """Compile ``graph`` under ``options`` through the pass pipeline.
+
+    ``cache=None`` disables memoization for this call; any other
+    :class:`CompileCache` overrides the process default.
+    """
     t0 = time.perf_counter()
     opts = options or CodoOptions()
+    cache = default_cache() if cache is _UNSET else cache
+
+    key = ""
+    if cache is not None:
+        key = cache.key(graph, opts)
+        hit = cache.get(key)
+        if hit is not None:
+            hit.compile_seconds = time.perf_counter() - t0
+            return hit
+
     g = graph.copy()
     g.validate()
     out = CompiledDataflow(g, opts)
     out.baseline = sequential_latency(g, opts.hw)
-
-    if opts.coarse:
-        out.coarse_report = eliminate_coarse(g)
-    if opts.fine:
-        out.fine_report = eliminate_fine(g)
-    if opts.communication:
-        out.reuse_report = generate_reuse_buffers(g)
-        if opts.fine:
-            # reuse rewriting changes stream orders: re-run correctness
-            # ("reinvokes the correctness passes to avoid new violations")
-            fr2 = eliminate_fine(g)
-            out.fine_report.permutations += fr2.permutations
-            out.fine_report.reductions_rewritten += fr2.reductions_rewritten
-            out.fine_report.unresolved = fr2.unresolved
-    out.buffer_plan = determine_buffers(g)
-    if opts.communication:
-        out.transfer_plan = plan_offchip(g, opts.hbm_channels)
-    if opts.scheduling:
-        out.schedule_report = autoschedule(
-            g, out.buffer_plan, opts.hw, opts.budget_units, opts.max_degree,
-            opts.balance_n, opts.enable_up, opts.enable_dp)
+    diag = (manager or default_manager()).run(g, opts, out)
 
     # A design with surviving coarse violations cannot enter a dataflow
     # region at all — it executes sequentially (the Opt1 lesson of Fig. 10).
     sequential = bool(coarse_violations(g))
     out.final = graph_latency(g, opts.hw, out.buffer_plan, sequential=sequential)
     out.compile_seconds = time.perf_counter() - t0
+    diag.total_seconds = out.compile_seconds
+    diag.cache_key = key
+    out.diagnostics = diag
+    if cache is not None:
+        cache.put(key, out)
     return out
 
 
@@ -159,3 +260,203 @@ def verify_violation_free(compiled: CompiledDataflow) -> list[str]:
         if impl.get(v.buffer) == "fifo":
             problems.append(f"fine-on-fifo:{v.kind}:{v.buffer}")
     return problems
+
+
+# --------------------------------------------------------------------------
+# Batch driver
+# --------------------------------------------------------------------------
+
+
+@dataclass
+class BatchJob:
+    """One cell of the batch grid.  ``build`` returns a fresh graph (called
+    inside the worker so graph construction parallelizes too)."""
+
+    config: str
+    preset: str
+    build: "object"           # () -> DataflowGraph
+    options: CodoOptions
+
+
+@dataclass
+class BatchResult:
+    config: str
+    preset: str
+    compiled: CompiledDataflow | None = None
+    error: str = ""
+    seconds: float = 0.0
+
+    @property
+    def ok(self) -> bool:
+        return self.compiled is not None
+
+    @property
+    def cache_hit(self) -> bool:
+        return bool(self.compiled and self.compiled.cache_hit)
+
+    def derived(self) -> str:
+        """The per-cell metrics string shared by the CLI CSV and
+        benchmarks.tables.batch_grid_rows."""
+        if not self.ok:
+            return self.error
+        c = self.compiled
+        return (f"fifo={c.fifo_fraction:.2f};cycles={c.final.total_cycles:.4g};"
+                f"compile_ms={c.compile_seconds * 1e3:.2f};"
+                f"cached={int(self.cache_hit)}")
+
+    def csv(self) -> str:
+        if not self.ok:
+            return f"{self.config},{self.preset},error,{self.error}"
+        return f"{self.config},{self.preset},{self.compiled.speedup:.4g},{self.derived()}"
+
+
+def ablation_jobs(workloads: dict, presets=None, **option_overrides) -> list[BatchJob]:
+    """(config × preset) grid over ``workloads`` (name -> graph factory)."""
+    presets = list(presets) if presets is not None else list(ABLATION_PRESETS)
+    jobs = []
+    for cname, build in workloads.items():
+        for pname in presets:
+            jobs.append(BatchJob(cname, pname, build,
+                                 CodoOptions.preset(pname, **option_overrides)))
+    return jobs
+
+
+def codo_opt_batch(jobs, *, max_workers: int | None = None,
+                   cache: CompileCache | None = _UNSET,
+                   manager: PassManager | None = None) -> list[BatchResult]:
+    """Compile every :class:`BatchJob` concurrently (thread pool: task fns
+    are closures, so process pools can't ship them; the pipeline is pure
+    Python either way).  The shared cache dedupes identical cells."""
+    jobs = list(jobs)
+    cache = default_cache() if cache is _UNSET else cache
+
+    def one(job: BatchJob) -> BatchResult:
+        t0 = time.perf_counter()
+        res = BatchResult(job.config, job.preset)
+        try:
+            g = job.build() if callable(job.build) else job.build
+            res.compiled = codo_opt(g, job.options, cache=cache, manager=manager)
+        except Exception as e:  # keep the grid going; report per-cell
+            res.error = f"{type(e).__name__}: {e}"
+        res.seconds = time.perf_counter() - t0
+        return res
+
+    workers = max_workers or min(32, (os.cpu_count() or 4))
+    if workers <= 1 or len(jobs) <= 1:
+        return [one(j) for j in jobs]
+    with ThreadPoolExecutor(max_workers=workers) as pool:
+        return list(pool.map(one, jobs))
+
+
+def batch_workloads(seq: int = 64):
+    """The 12 batch-compile model configs: every arch config in
+    ``src/repro/configs/`` as a representative block graph, plus the
+    paper's flagship ResNet-18 CNN.  Imported lazily so ``repro.core``
+    stays importable without jax."""
+    from repro.configs import CONFIGS
+    from repro.models.dataflow_models import arch_block_graph, resnet18
+
+    workloads = {name: (lambda c=cfg: arch_block_graph(c, S=seq))
+                 for name, cfg in sorted(CONFIGS.items())}
+    workloads["resnet18"] = lambda: resnet18(32)
+    return workloads
+
+
+# --------------------------------------------------------------------------
+# CLI:  python -m repro.core.compiler --all --ablations
+# --------------------------------------------------------------------------
+
+
+def _fallback_grid(results) -> str:
+    return "\n".join(["config,preset,speedup,derived"] + [r.csv() for r in results])
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.core.compiler",
+        description="Batch-compile the model-config grid through codo-opt "
+                    "and print a Table VII-style ablation report.")
+    ap.add_argument("--all", action="store_true",
+                    help="compile every model config (default if --configs absent)")
+    ap.add_argument("--configs", default="",
+                    help="comma list of configs (see --list)")
+    ap.add_argument("--ablations", action="store_true",
+                    help="run the full opt1..opt5 grid (Table VII)")
+    ap.add_argument("--opts", default="opt5",
+                    help="comma list of presets when --ablations is not given")
+    ap.add_argument("--jobs", type=int, default=0,
+                    help="worker threads (0 = auto)")
+    ap.add_argument("--seq", type=int, default=64,
+                    help="sequence length for LM block graphs")
+    ap.add_argument("--budget", type=int, default=2048,
+                    help="scheduler budget units")
+    ap.add_argument("--cache-dir", default=os.environ.get("CODO_CACHE_DIR", ".codo_cache"),
+                    help="on-disk compile-cache directory ('' to keep memory-only)")
+    ap.add_argument("--no-cache", action="store_true", help="disable caching")
+    ap.add_argument("--clear-cache", action="store_true",
+                    help="drop existing disk-cache entries first")
+    ap.add_argument("--csv", default="", help="also write the grid to this CSV file")
+    ap.add_argument("--list", action="store_true", help="list configs and exit")
+    args = ap.parse_args(argv)
+
+    workloads = batch_workloads(seq=args.seq)
+    if args.list:
+        print("\n".join(sorted(workloads)))
+        return 0
+    if args.all and args.configs:
+        ap.error("--all and --configs are mutually exclusive")
+    if args.configs:
+        names = [c.strip() for c in args.configs.split(",") if c.strip()]
+        unknown = [n for n in names if n not in workloads]
+        if unknown:
+            ap.error(f"unknown configs {unknown}; known: {sorted(workloads)}")
+        workloads = {n: workloads[n] for n in names}
+
+    presets = (list(ABLATION_PRESETS) if args.ablations
+               else [p.strip() for p in args.opts.split(",") if p.strip()])
+    bad_presets = [p for p in presets if p not in ABLATION_PRESETS]
+    if bad_presets:
+        ap.error(f"unknown presets {bad_presets}; known: {sorted(ABLATION_PRESETS)}")
+    if not presets:
+        ap.error("no presets selected (use --ablations or --opts opt1,...)")
+
+    if args.no_cache:
+        cache = None
+    else:
+        cache = CompileCache(disk_dir=args.cache_dir or None)
+        if args.clear_cache:
+            cache.clear(disk=True)
+
+    jobs = ablation_jobs(workloads, presets, budget_units=args.budget)
+    t0 = time.perf_counter()
+    results = codo_opt_batch(jobs, max_workers=args.jobs or None, cache=cache)
+    wall = time.perf_counter() - t0
+
+    # Table VII-style report lives with the other paper tables.
+    try:
+        repo_root = os.path.dirname(os.path.dirname(os.path.dirname(
+            os.path.dirname(os.path.abspath(__file__)))))
+        if repo_root not in sys.path:
+            sys.path.insert(0, repo_root)
+        from benchmarks.tables import format_batch_grid
+        print(format_batch_grid(results))
+    except ImportError:
+        print(_fallback_grid(results))
+
+    hits = sum(1 for r in results if r.cache_hit)
+    errors = [r for r in results if not r.ok]
+    print(f"\n{len(results)} compilations ({len(workloads)} configs x "
+          f"{len(presets)} presets) in {wall:.2f} s wall; "
+          f"{hits} cache hits" + (f"; cache dir {args.cache_dir}" if cache and cache.disk_dir else ""))
+    if cache is not None:
+        print(cache.stats.summary())
+    for r in errors:
+        print(f"ERROR {r.config}/{r.preset}: {r.error}", file=sys.stderr)
+    if args.csv:
+        with open(args.csv, "w") as f:
+            f.write(_fallback_grid(results) + "\n")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

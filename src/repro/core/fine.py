@@ -30,6 +30,15 @@ from .patterns import (BROADCAST_REREAD, MULTI_WRITE, ORDER_MISMATCH,
 
 _MAX_ITERS = 200
 
+# Pipeline declaration consumed by passes.default_passes().
+PASS_INFO = {
+    "name": "fine",
+    "result_attr": "fine_report",
+    "option_flag": "fine",
+    "invalidates": (),
+    "description": "fine-grained violation elimination (Figs. 5-6)",
+}
+
 
 @dataclass
 class PermutationMap:
@@ -47,6 +56,16 @@ class FineReport:
     permutations: list[PermutationMap] = field(default_factory=list)
     unresolved: list[str] = field(default_factory=list)
     iterations: int = 0
+
+    def merge(self, other: "FineReport") -> "FineReport":
+        """Fold a re-run's report into this one.  A re-run happens when a
+        later pass (reuse) invalidates fine's guarantees; the re-run's
+        ``unresolved`` list is the authoritative final state."""
+        self.reductions_rewritten += other.reductions_rewritten
+        self.permutations += other.permutations
+        self.unresolved = other.unresolved
+        self.iterations += other.iterations
+        return self
 
     def summary(self) -> str:
         return (f"fine: {len(self.reductions_rewritten)} reductions rewritten, "

@@ -383,6 +383,47 @@ class DataflowGraph:
         g.tasks = [t.copy() for t in self.tasks]
         return g
 
+    # --- content addressing ---------------------------------------------------
+    def structural_signature(self) -> tuple:
+        """Canonical nested-tuple view of everything the compiler's passes
+        read: loop nests, accesses, buffer table, schedule state.  ``Task.fn``
+        is deliberately excluded — numeric closures don't affect any pass
+        decision, and two builds of the same model produce equal signatures
+        even though their lambdas differ.
+
+        Contract for builders: any *semantic constant* that lives only in a
+        closure (a scale factor, axpy coefficients, ...) must also appear in
+        the structure — conventionally a ``const:...`` entry in ``Task.tags``
+        — or structurally-identical graphs with different numerics would
+        collide in the compile cache."""
+
+        def acc_sig(a: Access) -> tuple:
+            return (a.buffer, a.index, a.is_write, a.enclosing, a.stream_shape)
+
+        bufs = tuple(sorted(
+            (b.name, b.shape, np.dtype(b.dtype).str, b.kind, b.impl,
+             b.fifo_depth, b.hbm_channel, b.burst_len)
+            for b in self.buffers.values()))
+        tasks = tuple(
+            (t.name,
+             tuple((l.var, l.trip, l.parallel, l.tile, l.ring) for l in t.loops),
+             tuple(acc_sig(a) for a in t.reads),
+             tuple(acc_sig(a) for a in t.writes),
+             t.op, float(t.flops_per_iter), float(t.bytes_per_iter),
+             t.fused_group, t.stage, t.reduction_rewritten,
+             tuple(sorted((k, tuple(v)) for k, v in t.reuse_buffers.items())),
+             tuple(sorted(t.tags)))
+            for t in self.tasks)
+        return (self.name, bufs, tasks)
+
+    def structural_hash(self) -> str:
+        """Stable content hash (hex) of :meth:`structural_signature` —
+        identical across processes (sha256, not the salted builtin hash), so
+        it can key an on-disk compile cache."""
+        import hashlib
+        payload = repr(self.structural_signature()).encode()
+        return hashlib.sha256(payload).hexdigest()
+
     # --- execution (oracle path) ----------------------------------------------
     def execute(self, env: dict[str, Any]) -> dict[str, Any]:
         """Run every task's ``fn`` in topo order.  Pure; used as the oracle

@@ -21,7 +21,7 @@ import jax
 import numpy as np
 
 from .compiler import CompiledDataflow
-from .graph import FIFO, DataflowGraph, Task
+from .graph import FIFO, DataflowGraph, GraphError, Task
 
 # Registry: op-pattern -> kernel factory.  kernels/__init__.py populates
 # this with Pallas implementations ("streamfuse" etc.); the generic path
@@ -96,6 +96,13 @@ def fusion_groups(graph: DataflowGraph, impl: dict[str, str]) -> list[FusionGrou
 def lower(compiled: CompiledDataflow, jit: bool = True,
           use_registered_kernels: bool = True) -> LoweredProgram:
     graph = compiled.graph
+    stripped = [t.name for t in graph.tasks if t.fn is None]
+    if stripped:
+        raise GraphError(
+            f"cannot lower {graph.name}: {len(stripped)} tasks have no numeric "
+            f"fn (e.g. {stripped[0]!r}). Disk compile-cache entries are "
+            "structural (closures are not picklable); recompile with an "
+            "in-memory cache or cache=None before lowering.")
     impl = compiled.buffer_plan.impl if compiled.buffer_plan else {}
     groups = fusion_groups(graph, impl)
 

@@ -29,6 +29,15 @@ from .graph import DataflowGraph
 LANE = 128          # TPU lane width (f32 elements)
 SUBLANE = 8
 
+# Pipeline declaration consumed by passes.default_passes().
+PASS_INFO = {
+    "name": "offchip",
+    "result_attr": "transfer_plan",
+    "option_flag": "communication",
+    "invalidates": (),
+    "description": "off-chip transfer management (§V-C: channels + bursts)",
+}
+
 
 @dataclass
 class TransferPlan:

@@ -31,6 +31,18 @@ from .patterns import STENCIL_REREAD, fine_violations
 
 _BATCH_VARS = ("n", "b")
 
+# Pipeline declaration consumed by passes.default_passes().  Stencil
+# rewriting changes stream orders, so reuse invalidates fine's guarantees:
+# the manager re-runs fine right after ("reinvokes the correctness passes
+# to avoid new violations").
+PASS_INFO = {
+    "name": "reuse",
+    "result_attr": "reuse_report",
+    "option_flag": "communication",
+    "invalidates": ("fine",),
+    "description": "violation-free reuse-buffer generation (Fig. 7)",
+}
+
 
 @dataclass
 class ReuseReport:

@@ -39,6 +39,15 @@ N_BALANCE = 2.0          # the paper's empirically-set balancing threshold
 UP_ITER_LIMIT = 32
 _POW2 = [2 ** k for k in range(16)]
 
+# Pipeline declaration consumed by passes.default_passes().
+PASS_INFO = {
+    "name": "schedule",
+    "result_attr": "schedule_report",
+    "option_flag": "scheduling",
+    "invalidates": (),
+    "description": "automated dataflow scheduling (PA/UP/DP + inter-task, §VI)",
+}
+
 
 @dataclass
 class ScheduleReport:

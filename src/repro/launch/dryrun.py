@@ -35,7 +35,8 @@ from repro.configs import ASSIGNED, SHAPES, get_config
 from repro.launch import hlo_analysis
 from repro.launch.mesh import make_production_mesh
 from repro.models import batch_spec, transformer as tf
-from repro.distributed.sharding import (batch_specs, cache_specs, param_specs)
+from repro.distributed.sharding import (as_shardings, batch_specs,
+                                        cache_specs, param_specs, use_mesh)
 from repro.training.train_loop import build_train_step
 from repro.training.optimizer import OptConfig
 from repro.serving.serve import build_prefill_step, build_serve_step
@@ -130,15 +131,19 @@ def build_cell(arch_name: str, shape_name: str, mesh):
         ospecs = {"m": pspecs, "v": pspecs, "step": P()}
         bspecs = batch_specs(bspec_tree, mesh)
         accum = int(os.environ.get("DRYRUN_ACCUM", "4"))
+        pshard, oshard, bshard = (as_shardings(x, mesh)
+                                  for x in (pspecs, ospecs, bspecs))
         fn = jax.jit(build_train_step(cfg, OptConfig(), accum=accum),
-                     in_shardings=(pspecs, ospecs, bspecs),
-                     out_shardings=(pspecs, ospecs, None),
+                     in_shardings=(pshard, oshard, bshard),
+                     out_shardings=(pshard, oshard, None),
                      donate_argnums=(0, 1))
         args = (pshapes, oshapes, bspec_tree)
     elif shape.kind == "prefill":
         bspecs = batch_specs(bspec_tree, mesh)
         fn = jax.jit(build_prefill_step(cfg),
-                     in_shardings=(pspecs, bspecs), out_shardings=None)
+                     in_shardings=(as_shardings(pspecs, mesh),
+                                   as_shardings(bspecs, mesh)),
+                     out_shardings=None)
         args = (pshapes, bspec_tree)
     else:  # decode
         from repro.distributed.sharding import sanitize_spec
@@ -148,9 +153,11 @@ def build_cell(arch_name: str, shape_name: str, mesh):
         cspecs = cache_specs(cache_shapes, mesh, cfg)
         dp = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
         tok_spec = sanitize_spec(P(dp), (shape.global_batch,), mesh)
+        pshard, tshard, cshard = (as_shardings(x, mesh)
+                                  for x in (pspecs, tok_spec, cspecs))
         fn = jax.jit(build_serve_step(cfg),
-                     in_shardings=(pspecs, tok_spec, cspecs),
-                     out_shardings=(tok_spec, None, cspecs),
+                     in_shardings=(pshard, tshard, cshard),
+                     out_shardings=(tshard, None, cshard),
                      donate_argnums=(2,))
         args = (pshapes, bspec_tree["tokens"], cache_shapes)
     return fn, args
@@ -173,7 +180,7 @@ def run_cell(arch_name: str, shape_name: str, mesh_kind: str) -> dict:
     try:
         fn, args = build_cell(arch_name, shape_name, mesh)
         t0 = time.time()
-        with jax.set_mesh(mesh):
+        with use_mesh(mesh):
             lowered = fn.lower(*args)
         t1 = time.time()
         compiled = lowered.compile()

@@ -189,6 +189,25 @@ def _checkpoint(fn):
     return jax.checkpoint(fn)
 
 
+# optimization_barrier has no differentiation rule (through jax 0.4.x), so
+# give it one: identity VJP with the barrier applied to the cotangent too —
+# the backward pass needs the same hoisting fence as the forward.
+@jax.custom_vjp
+def _diffable_barrier(x):
+    return jax.lax.optimization_barrier(x)
+
+
+def _diffable_barrier_fwd(x):
+    return _diffable_barrier(x), None
+
+
+def _diffable_barrier_bwd(_res, g):
+    return (jax.lax.optimization_barrier(g),)
+
+
+_diffable_barrier.defvjp(_diffable_barrier_fwd, _diffable_barrier_bwd)
+
+
 def _backbone(params: Params, x: jax.Array, cfg: ArchConfig, *,
               remat: bool, enc_out=None) -> jax.Array:
     if cfg.enc_dec:
@@ -209,7 +228,7 @@ def _backbone(params: Params, x: jax.Array, cfg: ArchConfig, *,
         # the bf16->f32 norm convert inside the loop — without it XLA
         # hoists the convert and materializes an f32 copy of the whole
         # saved-carry stack (2x remat memory).
-        h = jax.lax.optimization_barrier(h)
+        h = _diffable_barrier(h)
         h = shard_hint(h, BATCH, "model", None)
         for i, kind in enumerate(cfg.block_pattern):
             h = _block_train(gp[f"b{i}_{kind}"], h, cfg, kind)

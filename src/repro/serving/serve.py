@@ -20,7 +20,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..configs.base import ArchConfig
-from ..distributed.sharding import batch_specs, cache_specs, param_specs
+from ..distributed.sharding import (as_shardings, batch_specs, cache_specs,
+                                    param_specs)
 from ..models import transformer as tf
 
 
@@ -36,10 +37,14 @@ def jit_serve_step(cfg: ArchConfig, mesh, params_or_shapes, cache_like):
     pspecs = param_specs(params_or_shapes, mesh, cfg)
     cspecs = cache_specs(cache_like, mesh, cfg)
     dp = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    # NamedShardings, not bare specs: older jax.jit rejects PartitionSpec.
+    pshard, tshard, cshard = (
+        as_shardings(s, mesh)
+        for s in (pspecs, jax.sharding.PartitionSpec(dp), cspecs))
     return jax.jit(
         build_serve_step(cfg),
-        in_shardings=(pspecs, jax.sharding.PartitionSpec(dp), cspecs),
-        out_shardings=(jax.sharding.PartitionSpec(dp), None, cspecs),
+        in_shardings=(pshard, tshard, cshard),
+        out_shardings=(tshard, None, cshard),
         donate_argnums=(2,),
     )
 
@@ -54,7 +59,9 @@ def jit_prefill_step(cfg: ArchConfig, mesh, params_or_shapes, batch_like):
     pspecs = param_specs(params_or_shapes, mesh, cfg)
     bspecs = batch_specs(batch_like, mesh)
     return jax.jit(build_prefill_step(cfg),
-                   in_shardings=(pspecs, bspecs), out_shardings=None)
+                   in_shardings=(as_shardings(pspecs, mesh),
+                                 as_shardings(bspecs, mesh)),
+                   out_shardings=None)
 
 
 # --------------------------------------------------------------------------

@@ -29,7 +29,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from ..configs.base import ArchConfig
 from ..distributed import compression
-from ..distributed.sharding import batch_specs, param_specs
+from ..distributed.sharding import as_shardings, batch_specs, param_specs
 from ..models import transformer as tf
 from .optimizer import OptConfig, adamw_init, adamw_update
 
@@ -79,10 +79,13 @@ def jit_train_step(cfg: ArchConfig, mesh, params_or_shapes, batch_like,
     ospecs = {"m": pspecs, "v": pspecs, "step": P()}
     bspecs = batch_specs(batch_like, mesh)
     step = build_train_step(cfg, oc, accum=accum, remat=remat)
+    # NamedShardings, not bare specs: older jax.jit rejects PartitionSpec.
+    pshard, oshard, bshard = (as_shardings(s, mesh)
+                              for s in (pspecs, ospecs, bspecs))
     return jax.jit(
         step,
-        in_shardings=(pspecs, ospecs, bspecs),
-        out_shardings=(pspecs, ospecs, None),
+        in_shardings=(pshard, oshard, bshard),
+        out_shardings=(pshard, oshard, None),
         donate_argnums=(0, 1) if donate else (),
     )
 

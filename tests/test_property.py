@@ -10,7 +10,12 @@ For arbitrary randomly-wired layer graphs:
 
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+# Declared in requirements-dev.txt / the `dev` extra; local runs without it
+# skip instead of erroring at collection.
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import (codo_opt, coarse_violations, fine_violations, lower,
                         verify_violation_free)
