@@ -17,9 +17,12 @@ from .fine import eliminate_fine
 from .graph import (FIFO, PINGPONG, Access, Buffer, DataflowGraph, Loop, Task,
                     conv2d_task, copy_task, ewise_task, full_index, idx,
                     matmul_task, pad_task, pool_task, reduce_task, retarget_fn)
-from .lowering import (LoweredProgram, fusion_groups, lower, register_group_kernel,
+from .lowering import (LOWER_CACHE_STATS, LoweredProgram, clear_lower_cache,
+                       fusion_groups, lower, register_group_kernel,
                        verify_lowering)
 from .offchip import TransferPlan, host_manifest, plan_offchip
+from .ops import (OpSpec, UnknownOpError, materialize, op_impl, register_op,
+                  registered_ops)
 from .passes import (ABLATION_PRESETS, CompileDiagnostics, Pass, PassManager,
                      PassRecord, PASS_RUN_COUNTS, default_passes)
 from .patterns import (coarse_violations, fine_violations, violation_report,
@@ -31,17 +34,19 @@ __all__ = [
     "ABLATION_PRESETS", "Access", "BatchJob", "BatchResult", "Buffer",
     "BufferPlan", "CacheStats", "CodoOptions", "CompileCache",
     "CompileDiagnostics", "CompiledDataflow", "DataflowGraph", "FIFO",
-    "GraphCost", "HwParams", "Loop", "LoweredProgram", "PINGPONG",
-    "PASS_RUN_COUNTS", "Pass", "PassManager", "PassRecord", "Task",
-    "TransferPlan", "V5E", "ablation_jobs", "access_sig", "arrival_order",
-    "assign_stages", "autoschedule", "coarse_violations", "codo_opt",
+    "GraphCost", "HwParams", "LOWER_CACHE_STATS", "Loop", "LoweredProgram",
+    "OpSpec", "PINGPONG", "PASS_RUN_COUNTS", "Pass", "PassManager",
+    "PassRecord", "Task", "TransferPlan", "UnknownOpError", "V5E",
+    "ablation_jobs", "access_sig", "arrival_order", "assign_stages",
+    "autoschedule", "clear_lower_cache", "coarse_violations", "codo_opt",
     "codo_opt_batch", "conv2d_task", "copy_task", "default_cache",
     "default_manager", "default_passes", "determine_buffers",
     "downgrade_to_pingpong", "eliminate_coarse", "eliminate_fine",
     "ewise_task", "fine_violations", "full_index", "fusion_groups",
     "generate_reuse_buffers", "graph_latency", "host_manifest", "idx",
-    "lower", "matmul_task", "pad_task", "parallel_safety", "plan_offchip",
-    "pool_task", "reduce_task", "register_group_kernel", "retarget_fn",
+    "lower", "materialize", "matmul_task", "op_impl", "pad_task",
+    "parallel_safety", "plan_offchip", "pool_task", "reduce_task",
+    "register_group_kernel", "register_op", "registered_ops", "retarget_fn",
     "sequential_latency", "task_cost", "verify_lowering",
     "verify_violation_free", "violation_report",
 ]

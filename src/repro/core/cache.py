@@ -8,16 +8,20 @@ entry — including across processes when a disk directory is configured.
 Two tiers:
 
 * **in-memory LRU** — stores full :class:`CompiledDataflow` results
-  (numeric ``fn`` closures included, so lowering/verification still work on
-  hits).  Both ``put`` and ``get`` clone the graph, so callers can mutate
-  results (e.g. lowering assigns fusion groups) without corrupting the
-  cache.
+  (closure overrides included, so lowering/verification work on hits even
+  for ad-hoc closure-built graphs).  Both ``put`` and ``get`` clone the
+  graph, so callers can mutate results (e.g. lowering assigns fusion
+  groups) without corrupting the cache.
 * **on-disk pickle** (optional) — survives process restarts; this is what
   makes a second ``python -m repro.core.compiler`` invocation near-free.
-  Closures aren't picklable, so disk entries store a *structural* result
-  (``Task.fn`` stripped).  Every pass decision, report, latency estimate
-  and ``verify_violation_free`` check works on such a result; only numeric
-  re-execution (``lower``/``execute``) needs a fresh compile.
+  Tasks carry declarative :class:`~repro.core.ops.OpSpec` semantics —
+  plain data — so disk entries are *fully executable* after reload:
+  a cold-restart hit lowers, executes and passes ``verify_lowering``
+  without recompiling.  Only raw closure overrides (not picklable) are
+  stripped at this boundary; a reloaded closure-built task falls back to
+  a structural result (costing/reports/``verify_violation_free`` still
+  work, lowering raises).  Executable disk hits are promoted into the
+  memory tier; stripped ones are not.
 
 Knobs: ``CODO_CACHE_SIZE`` (LRU entries, default 256) and
 ``CODO_CACHE_DIR`` (enables the disk tier) — read by
@@ -44,6 +48,7 @@ class CacheStats:
     stores: int = 0
     evictions: int = 0
     disk_errors: int = 0
+    promotions: int = 0      # executable disk hits promoted to memory
 
     def summary(self) -> str:
         return (f"cache: {self.hits} hits, {self.disk_hits} disk hits, "
@@ -51,15 +56,28 @@ class CacheStats:
                 f"{self.evictions} evictions")
 
 
-def _clone(compiled: Any, *, strip_fns: bool = False) -> Any:
+def _executable(compiled: Any) -> bool:
+    """True when every task can produce a numeric fn (spec or closure) —
+    i.e. the result can be lowered and executed as-is.  A stale entry
+    whose spec kind is no longer registered counts as non-executable
+    rather than raising."""
+    try:
+        return all(t.fn is not None for t in compiled.graph.tasks)
+    except Exception:
+        return False
+
+
+def _clone(compiled: Any, *, strip_closures: bool = False) -> Any:
     """Defensive copy of a CompiledDataflow: fresh graph and buffer plan
-    (``downgrade_to_pingpong`` mutates plans post-compile), plus no closures
-    for the disk tier.  The remaining reports are shared — nothing mutates
-    them after compilation."""
+    (``downgrade_to_pingpong`` mutates plans post-compile), with closure
+    overrides dropped for pickle boundaries (``strip_closures`` — specs,
+    being plain data, always survive).  The remaining reports are shared —
+    nothing mutates them after compilation."""
     g = compiled.graph.copy()
-    if strip_fns:
+    if strip_closures:
         for t in g.tasks:
-            t.fn = None
+            if t.fn_is_closure:
+                t.fn = None
     bp = compiled.buffer_plan
     if bp is not None:
         bp = dataclasses.replace(bp, impl=dict(bp.impl),
@@ -106,11 +124,15 @@ class CompileCache:
                 with self._lock:
                     self.stats.disk_errors += 1
             else:
-                # Deliberately NOT promoted into the memory tier: disk
-                # entries are fn-stripped, and the memory tier promises
-                # full results (closures included).
+                # Declarative entries are fully executable after reload and
+                # earn promotion into the memory tier.  Closure-built
+                # entries came back stripped; promoting those would poison
+                # the memory tier's promise of full results.
                 with self._lock:
                     self.stats.disk_hits += 1
+                    if _executable(entry):
+                        self._insert(key, entry)
+                        self.stats.promotions += 1
                 return self._mark_hit(_clone(entry))
         with self._lock:
             self.stats.misses += 1
@@ -139,7 +161,7 @@ class CompileCache:
         path = self._disk_path(key)
         if path is not None:
             try:
-                blob = pickle.dumps(_clone(compiled, strip_fns=True))
+                blob = pickle.dumps(_clone(compiled, strip_closures=True))
             except Exception:
                 # Unpicklable report: the memory tier still works, so
                 # degrade silently but count it.

@@ -13,16 +13,20 @@ consumer.  This pass rewrites the graph until that invariant holds:
 * **MPMC** (Fig. 4c): fuse/merge the producers first, then the remaining
   SPMC is handled by duplication on the next fixpoint iteration.
 
-All rewrites keep ``Task.fn`` numerics intact via env-aliasing shims
-(:func:`repro.core.graph.retarget_fn`).
+All rewrites keep numeric semantics intact declaratively: duplicators are
+``OpSpec("dup")`` nodes, fused producers are ``OpSpec("fused")`` composites
+of the producers' specs, and consumer rewires are pure-data operand renames
+(:meth:`repro.core.graph.Task.retarget`).  Tasks carrying raw closures fall
+back to the legacy env-aliasing shims — correct, but such graphs lose
+executability at pickle boundaries (disk cache, process pools).
 """
 
 from __future__ import annotations
 
 from dataclasses import dataclass, field
 
-from .graph import (Access, Buffer, DataflowGraph, Loop, Task, full_index,
-                    retarget_fn)
+from .graph import Access, Buffer, DataflowGraph, Loop, Task, full_index
+from .ops import OpSpec
 from .patterns import MPMC, MPSC, SPMC, coarse_violations
 
 _MAX_ITERS = 64
@@ -92,9 +96,6 @@ def _insert_duplicator(graph: DataflowGraph, buffer: str, report: CoarseReport) 
         graph.add_buffer(Buffer(dup_name, buf.shape, buf.dtype, "intermediate"))
         copies.append((c, dup_name))
 
-    def dup_fn(env, _src=buffer, _dsts=tuple(d for (_c, d) in copies)):
-        return {d: env[_src] for d in _dsts}
-
     node = Task(
         name=f"dup_{buffer}",
         loops=loops,
@@ -102,18 +103,18 @@ def _insert_duplicator(graph: DataflowGraph, buffer: str, report: CoarseReport) 
         writes=[Access(d, full_index(dims), True) for (_c, d) in copies],
         op="copy",
         flops_per_iter=0.0,
-        fn=dup_fn,
+        spec=OpSpec("dup", (buffer,), tuple(d for (_c, d) in copies)),
     )
     node.tags.add("coarse-duplicator")
     graph.add_task(node)
     report.duplicators_inserted.append(node.name)
 
-    # Rewire each consumer to its private copy.
+    # Rewire each consumer to its private copy (pure data rename).
     for c, dup_name in copies:
         for a in c.reads:
             if a.buffer == buffer:
                 a.buffer = dup_name
-        c.fn = retarget_fn(c.fn, {buffer: dup_name}) if c.fn else None
+        c.retarget({buffer: dup_name})
 
 
 # --------------------------------------------------------------------------
@@ -147,16 +148,23 @@ def _fuse_producers(graph: DataflowGraph, buffer: str, report: CoarseReport) -> 
 
     last = producers[-1]
     name = f"fuse_{buffer}"
-    fns = [t.fn for t in producers]
 
-    def fused_fn(env, _fns=tuple(fns)):
-        out: dict = {}
-        scope = dict(env)
-        for f in _fns:
-            r = f(scope)
-            scope.update(r)
-            out.update(r)
-        return out
+    # Declarative fusion when every producer is spec-carrying; otherwise a
+    # closure composition (which strips at pickle boundaries).
+    fused_spec = fused_fn = None
+    if all(t.spec is not None and not t.fn_is_closure for t in producers):
+        fused_spec = OpSpec("fused", parts=tuple(t.spec for t in producers))
+    else:
+        fns = tuple(t.fn for t in producers)
+
+        def fused_fn(env, _fns=fns):
+            out: dict = {}
+            scope = dict(env)
+            for f in _fns:
+                r = f(scope)
+                scope.update(r)
+                out.update(r)
+            return out
 
     # Representative loop nest: the last writer's (the merge target).  Reads
     # are the union of all producers' reads minus the fused buffer itself.
@@ -185,6 +193,7 @@ def _fuse_producers(graph: DataflowGraph, buffer: str, report: CoarseReport) -> 
         op=last.op,
         flops_per_iter=sum(t.flops for t in producers) / max(1, last.total_iters),
         fn=fused_fn,
+        spec=fused_spec,
     )
     fused.tags.add("coarse-fused")
     if not fusable:

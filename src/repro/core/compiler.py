@@ -21,9 +21,12 @@ the graph's structural hash + the options, so recompiling an identical
 graph is near-free (and, with ``CODO_CACHE_DIR`` set, free across
 processes).
 
-Batch mode compiles many (config, preset) cells concurrently:
+Batch mode compiles many (config, preset) cells concurrently — with worker
+*processes* by default on the CLI (tasks are declarative OpSpec records,
+so jobs and results pickle across the pool; workers share the disk cache
+tier), or threads via ``codo_opt_batch(..., executor="thread")``:
 
-    python -m repro.core.compiler --all --ablations      # full Table VII grid
+    python -m repro.core.compiler --all --ablations --jobs 4   # Table VII grid
     python -m repro.core.compiler --configs gpt2-medium,mamba2-780m --opts opt5
 """
 
@@ -31,15 +34,18 @@ from __future__ import annotations
 
 import argparse
 import dataclasses
+import functools
 import hashlib
+import multiprocessing
 import os
+import pickle
 import sys
 import time
-from concurrent.futures import ThreadPoolExecutor
+from concurrent.futures import ProcessPoolExecutor, ThreadPoolExecutor
 from dataclasses import dataclass
 
 from .buffers import BufferPlan
-from .cache import CompileCache
+from .cache import CompileCache, _clone
 from .coarse import CoarseReport
 from .costmodel import V5E, GraphCost, HwParams, graph_latency, sequential_latency
 from .fine import FineReport
@@ -321,44 +327,123 @@ def ablation_jobs(workloads: dict, presets=None, **option_overrides) -> list[Bat
     return jobs
 
 
+def _run_job(job: BatchJob, cache, manager) -> BatchResult:
+    """One cell: build the graph (inside the worker, so construction
+    parallelizes too) and compile it."""
+    t0 = time.perf_counter()
+    res = BatchResult(job.config, job.preset)
+    try:
+        g = job.build() if callable(job.build) else job.build
+        res.compiled = codo_opt(g, job.options, cache=cache, manager=manager)
+    except Exception as e:  # keep the grid going; report per-cell
+        res.error = f"{type(e).__name__}: {e}"
+    res.seconds = time.perf_counter() - t0
+    return res
+
+
+# ---- process-pool plumbing -------------------------------------------------
+# Each worker owns a private memory-tier cache; all workers share the disk
+# tier (if any), so a warm grid is served from disk in every process.
+
+_WORKER_CACHE: CompileCache | None = None
+
+
+def _init_batch_worker(disk_dir: str | None, use_cache: bool) -> None:
+    global _WORKER_CACHE
+    _WORKER_CACHE = CompileCache(disk_dir=disk_dir) if use_cache else None
+
+
+def _run_job_in_worker(job: BatchJob) -> BatchResult:
+    res = _run_job(job, _WORKER_CACHE, None)
+    if res.compiled is not None:
+        # Results cross the pipe back to the parent: closure overrides (if
+        # any survived a closure-built job) cannot; specs can.
+        res.compiled = _clone(res.compiled, strip_closures=True)
+    return res
+
+
+def _mp_context():
+    """Start method for the batch pool: ``CODO_MP_START`` overrides, else
+    fork where available.  Fork is safe here even with jax imported in the
+    parent (jax warns about forking a threaded process) because workers
+    only build and compile graphs — both jax-free since task numerics are
+    declarative specs — and it avoids spawn's per-worker re-import cost
+    (~5 s) and spawn's requirement of an importable ``__main__``.  Set
+    ``CODO_MP_START=spawn`` if a worker ever needs to *execute* jax."""
+    method = os.environ.get("CODO_MP_START")
+    if not method:
+        methods = multiprocessing.get_all_start_methods()
+        method = "fork" if "fork" in methods else "spawn"
+    return multiprocessing.get_context(method)
+
+
 def codo_opt_batch(jobs, *, max_workers: int | None = None,
                    cache: CompileCache | None = _UNSET,
-                   manager: PassManager | None = None) -> list[BatchResult]:
-    """Compile every :class:`BatchJob` concurrently (thread pool: task fns
-    are closures, so process pools can't ship them; the pipeline is pure
-    Python either way).  The shared cache dedupes identical cells."""
+                   manager: PassManager | None = None,
+                   executor: str = "thread") -> list[BatchResult]:
+    """Compile every :class:`BatchJob` concurrently.
+
+    ``executor="thread"`` (default) shares one in-process cache across a
+    thread pool — the pipeline is pure Python, so threads mostly serialize
+    on the GIL but tolerate arbitrary (closure) jobs.  ``executor="process"``
+    fans out over a :class:`ProcessPoolExecutor` for real parallelism:
+    jobs must pickle (declarative graphs / module-level builders — see
+    :func:`batch_workloads`), a custom ``manager`` cannot ship, and workers
+    share only the disk cache tier of ``cache``.
+    """
     jobs = list(jobs)
     cache = default_cache() if cache is _UNSET else cache
-
-    def one(job: BatchJob) -> BatchResult:
-        t0 = time.perf_counter()
-        res = BatchResult(job.config, job.preset)
-        try:
-            g = job.build() if callable(job.build) else job.build
-            res.compiled = codo_opt(g, job.options, cache=cache, manager=manager)
-        except Exception as e:  # keep the grid going; report per-cell
-            res.error = f"{type(e).__name__}: {e}"
-        res.seconds = time.perf_counter() - t0
-        return res
-
     workers = max_workers or min(32, (os.cpu_count() or 4))
+    if executor not in ("thread", "process"):
+        raise ValueError(f"unknown executor {executor!r}: thread|process")
+
+    if executor == "process" and workers > 1 and len(jobs) > 1:
+        if manager is not None:
+            raise ValueError("executor='process' cannot ship a custom "
+                             "PassManager; workers use the default pipeline")
+        try:
+            pickle.dumps(jobs)
+        except Exception as e:
+            raise ValueError(
+                "executor='process' requires picklable jobs (declarative "
+                "specs + module-level graph builders, e.g. batch_workloads); "
+                f"use executor='thread' for closure jobs ({e})") from e
+        disk_dir = (str(cache.disk_dir)
+                    if cache is not None and cache.disk_dir else None)
+        with ProcessPoolExecutor(
+                max_workers=min(workers, len(jobs)), mp_context=_mp_context(),
+                initializer=_init_batch_worker,
+                initargs=(disk_dir, cache is not None)) as pool:
+            return list(pool.map(_run_job_in_worker, jobs))
+
     if workers <= 1 or len(jobs) <= 1:
-        return [one(j) for j in jobs]
+        return [_run_job(j, cache, manager) for j in jobs]
     with ThreadPoolExecutor(max_workers=workers) as pool:
-        return list(pool.map(one, jobs))
+        return list(pool.map(lambda j: _run_job(j, cache, manager), jobs))
+
+
+def _resnet18_workload():
+    from repro.models.dataflow_models import resnet18
+    return resnet18(32)
+
+
+def _arch_workload(cfg, seq: int):
+    from repro.models.dataflow_models import arch_block_graph
+    return arch_block_graph(cfg, S=seq)
 
 
 def batch_workloads(seq: int = 64):
     """The 12 batch-compile model configs: every arch config in
     ``src/repro/configs/`` as a representative block graph, plus the
     paper's flagship ResNet-18 CNN.  Imported lazily so ``repro.core``
-    stays importable without jax."""
+    stays importable without jax.  Factories are ``functools.partial`` of
+    module-level builders — picklable, so the grid ships to worker
+    processes."""
     from repro.configs import CONFIGS
-    from repro.models.dataflow_models import arch_block_graph, resnet18
 
-    workloads = {name: (lambda c=cfg: arch_block_graph(c, S=seq))
+    workloads = {name: functools.partial(_arch_workload, cfg, seq)
                  for name, cfg in sorted(CONFIGS.items())}
-    workloads["resnet18"] = lambda: resnet18(32)
+    workloads["resnet18"] = _resnet18_workload
     return workloads
 
 
@@ -385,7 +470,12 @@ def main(argv=None) -> int:
     ap.add_argument("--opts", default="opt5",
                     help="comma list of presets when --ablations is not given")
     ap.add_argument("--jobs", type=int, default=0,
-                    help="worker threads (0 = auto)")
+                    help="worker processes (0 = auto)")
+    ap.add_argument("--executor", choices=("process", "thread"),
+                    default="process",
+                    help="batch executor: worker processes (default; real "
+                         "parallelism, shared disk cache) or in-process "
+                         "threads")
     ap.add_argument("--seq", type=int, default=64,
                     help="sequence length for LM block graphs")
     ap.add_argument("--budget", type=int, default=2048,
@@ -429,7 +519,8 @@ def main(argv=None) -> int:
 
     jobs = ablation_jobs(workloads, presets, budget_units=args.budget)
     t0 = time.perf_counter()
-    results = codo_opt_batch(jobs, max_workers=args.jobs or None, cache=cache)
+    results = codo_opt_batch(jobs, max_workers=args.jobs or None, cache=cache,
+                             executor=args.executor)
     wall = time.perf_counter() - t0
 
     # Table VII-style report lives with the other paper tables.
@@ -449,7 +540,14 @@ def main(argv=None) -> int:
           f"{len(presets)} presets) in {wall:.2f} s wall; "
           f"{hits} cache hits" + (f"; cache dir {args.cache_dir}" if cache and cache.disk_dir else ""))
     if cache is not None:
-        print(cache.stats.summary())
+        if args.executor == "process":
+            # Worker processes own the cache stats; the parent only sees
+            # the per-cell hit flags aggregated above.
+            print(f"cache: per-worker memory tiers"
+                  + (f", shared disk tier at {cache.disk_dir}"
+                     if cache.disk_dir else ""))
+        else:
+            print(cache.stats.summary())
     for r in errors:
         print(f"ERROR {r.config}/{r.preset}: {r.error}", file=sys.stderr)
     if args.csv:

@@ -9,9 +9,14 @@ class CODO targets: "affine programs with constant loop bounds" (§VII-A).
 The IR is deliberately *schedule-carrying*: passes mutate loop order,
 access enclosing-sets, parallel degrees and buffer implementations in place
 of the C++ source rewrites the paper performs on MLIR.  Numeric semantics
-live separately in ``Task.fn`` (a pure-jnp implementation of the whole op),
-so every pass is semantics-preserving by construction and correctness is
-checked by executing the lowered program against the un-optimized oracle.
+live separately in ``Task.spec`` — a declarative, picklable
+:class:`~repro.core.ops.OpSpec` record from which ``Task.fn`` (the pure-jnp
+implementation of the whole op) is derived on demand — so every pass is
+semantics-preserving by construction and correctness is checked by
+executing the lowered program against the un-optimized oracle.  Raw
+closures are still accepted (``Task(..., fn=lambda env: ...)``) for ad-hoc
+graphs, but they cannot cross pickle boundaries (disk cache, process
+pools); see ``repro/core/ops.py`` for the registry contract.
 
 Two IR features carry the paper's fine-grained machinery:
 
@@ -34,6 +39,8 @@ from dataclasses import dataclass, field
 from typing import Any, Callable, Sequence
 
 import numpy as np
+
+from .ops import OpSpec, materialize
 
 # --------------------------------------------------------------------------
 # Loops and accesses
@@ -141,11 +148,17 @@ class Buffer:
 class Task:
     """A computational node: one loop nest with reads/writes.
 
-    ``fn`` implements the op numerically: ``fn(env) -> {buf: array}`` where
-    ``env`` maps buffer names to arrays.  Passes never change numeric
-    semantics — they change the *schedule metadata* that the cost model and
-    lowering consume (when an access is retargeted to a duplicated buffer,
-    ``fn`` is wrapped with an env-aliasing shim, see coarse.py).
+    Numeric semantics: ``fn(env) -> {buf: array}`` (``env`` maps buffer
+    names to arrays) is a *derived property*.  The durable representation
+    is ``spec`` — a declarative :class:`~repro.core.ops.OpSpec` the op
+    registry materializes into a jnp callable on demand — which survives
+    pickling (disk compile cache, process-pool batch compiles).  A raw
+    closure passed as ``fn=`` takes precedence but is stripped at every
+    pickle boundary.  Passes never change numeric semantics — they change
+    the *schedule metadata* that the cost model and lowering consume (when
+    an access is retargeted to a duplicated buffer, :meth:`retarget`
+    renames the spec's operands — pure data — or wraps a closure with an
+    env-aliasing shim, see coarse.py).
     """
 
     name: str
@@ -155,7 +168,8 @@ class Task:
     op: str = "generic"            # conv | matmul | ewise | pad | pool | norm | softmax ...
     flops_per_iter: float = 1.0
     bytes_per_iter: float = 0.0    # extra non-edge traffic per innermost iteration
-    fn: Callable[[dict], dict] | None = None
+    fn: Callable[[dict], dict] | None = None   # closure override (see property below)
+    spec: OpSpec | None = None     # declarative numeric semantics (picklable)
     # --- schedule state -----------------------------------------------------
     fused_group: int = -1          # fusion-group id assigned by lowering
     stage: int = -1                # pipeline stage (pipeline.py)
@@ -215,15 +229,55 @@ class Task:
         enc = set(a.enclosing)
         return [l.var for l in self.loops if l.var in enc]
 
+    # --- numeric semantics ----------------------------------------------------
+    @property
+    def fn_is_closure(self) -> bool:
+        """True when a raw closure override is attached (not picklable)."""
+        return self._fn is not None
+
+    def retarget(self, alias: dict[str, str]) -> None:
+        """Rename the numeric semantics' buffer operands (old -> new).
+
+        With a declarative spec this is a pure data rename; a closure
+        override is wrapped with the :func:`retarget_fn` env-aliasing shim.
+        """
+        if self.spec is not None:
+            self.spec = self.spec.renamed(alias)
+        if self._fn is not None:
+            self._fn = retarget_fn(self._fn, alias)
+
     def copy(self) -> "Task":
         return dataclasses.replace(
             self,
             loops=[l.copy() for l in self.loops],
             reads=[a.copy() for a in self.reads],
             writes=[a.copy() for a in self.writes],
+            fn=self._fn,
+            spec=self.spec.copy() if self.spec is not None else None,
             reuse_buffers=dict(self.reuse_buffers),
             tags=set(self.tags),
         )
+
+
+def _task_fn_get(self: Task) -> Callable[[dict], dict] | None:
+    """``Task.fn``: the closure override if set, else the registry
+    materialization of ``spec``, else None."""
+    if self._fn is not None:
+        return self._fn
+    if self.spec is not None:
+        return materialize(self.spec)
+    return None
+
+
+def _task_fn_set(self: Task, value: Callable[[dict], dict] | None) -> None:
+    self._fn = value
+
+
+# ``fn`` is a derived property: the dataclass-generated __init__ still
+# accepts ``fn=`` (its assignment routes through the setter into ``_fn``),
+# so closure-based construction keeps working, while spec-carrying tasks
+# re-derive their callable after any pickle round-trip.
+Task.fn = property(_task_fn_get, _task_fn_set)
 
 
 def retarget_fn(fn: Callable[[dict], dict], alias: dict[str, str]) -> Callable[[dict], dict]:
@@ -386,16 +440,18 @@ class DataflowGraph:
     # --- content addressing ---------------------------------------------------
     def structural_signature(self) -> tuple:
         """Canonical nested-tuple view of everything the compiler's passes
-        read: loop nests, accesses, buffer table, schedule state.  ``Task.fn``
-        is deliberately excluded — numeric closures don't affect any pass
-        decision, and two builds of the same model produce equal signatures
-        even though their lambdas differ.
+        read: loop nests, accesses, buffer table, schedule state — plus each
+        task's declarative ``spec`` (kind, operands, attrs).  Closure
+        ``fn`` overrides are deliberately excluded — closures don't affect
+        any pass decision, and two builds of the same model produce equal
+        signatures even though their lambdas differ.
 
-        Contract for builders: any *semantic constant* that lives only in a
-        closure (a scale factor, axpy coefficients, ...) must also appear in
-        the structure — conventionally a ``const:...`` entry in ``Task.tags``
-        — or structurally-identical graphs with different numerics would
-        collide in the compile cache."""
+        Spec-carrying tasks are fully covered: semantic constants live in
+        ``OpSpec.attrs``, which enters the signature, so graphs differing
+        only in (say) a scale factor never collide in the compile cache.
+        Contract for closure-based builders: any semantic constant that
+        lives *only* in a closure must also appear in the structure —
+        conventionally a ``const:...`` entry in ``Task.tags``."""
 
         def acc_sig(a: Access) -> tuple:
             return (a.buffer, a.index, a.is_write, a.enclosing, a.stream_shape)
@@ -412,7 +468,8 @@ class DataflowGraph:
              t.op, float(t.flops_per_iter), float(t.bytes_per_iter),
              t.fused_group, t.stage, t.reduction_rewritten,
              tuple(sorted((k, tuple(v)) for k, v in t.reuse_buffers.items())),
-             tuple(sorted(t.tags)))
+             tuple(sorted(t.tags)),
+             t.spec.signature() if t.spec is not None else None)
             for t in self.tasks)
         return (self.name, bufs, tasks)
 
@@ -430,9 +487,12 @@ class DataflowGraph:
         and as the body the lowering jit-compiles."""
         env = dict(env)
         for t in self.toposort():
-            if t.fn is None:
-                raise GraphError(f"{t.name}: no numeric fn attached")
-            out = t.fn(env)
+            fn = t.fn
+            if fn is None:
+                raise GraphError(
+                    f"{t.name}: no numeric semantics attached (neither a "
+                    f"declarative spec nor a closure fn)")
+            out = fn(env)
             env.update(out)
         return {b.name: env[b.name] for b in self.outputs()}
 
@@ -471,12 +531,14 @@ def ewise_task(
     op: str = "ewise",
     flops_per_iter: float = 1.0,
     dim_names: Sequence[str] | None = None,
+    spec: OpSpec | None = None,
 ) -> Task:
     dims = list(dim_names) if dim_names else [f"i{k}" for k in range(len(shape))]
     loops = [Loop(d, int(s)) for d, s in zip(dims, shape)]
     reads = [Access(b, full_index(dims), False) for b in ins]
     writes = [Access(out, full_index(dims), True)]
-    return Task(name, loops, reads, writes, op=op, flops_per_iter=flops_per_iter, fn=fn)
+    return Task(name, loops, reads, writes, op=op, flops_per_iter=flops_per_iter,
+                fn=fn, spec=spec)
 
 
 def matmul_task(
@@ -489,6 +551,7 @@ def matmul_task(
     k: int,
     fn: Callable[[dict], dict] | None = None,
     batch: int = 0,
+    spec: OpSpec | None = None,
 ) -> Task:
     """out[m,n] += lhs[m,k] * rhs[k,n]; the write sits inside the k
     reduction — the canonical access-count-mismatch producer Fig. 5
@@ -504,7 +567,8 @@ def matmul_task(
     r_idx += [idx("k"), idx("n")]
     reads = [Access(lhs, tuple(l_idx), False), Access(rhs, tuple(r_idx), False)]
     writes = [Access(out, tuple(out_idx), True)]  # enclosed by k: violation
-    return Task(name, loops, reads, writes, op="matmul", flops_per_iter=2.0, fn=fn)
+    return Task(name, loops, reads, writes, op="matmul", flops_per_iter=2.0,
+                fn=fn, spec=spec)
 
 
 def conv2d_task(
@@ -521,6 +585,7 @@ def conv2d_task(
     kw: int,
     fn: Callable[[dict], dict] | None = None,
     stride: int = 1,
+    spec: OpSpec | None = None,
 ) -> Task:
     """NCHW conv over a pre-padded input of ((h-1)*stride+kh, ...)."""
     loops = [Loop("n", n), Loop("co", co), Loop("h", h), Loop("w", w),
@@ -531,7 +596,8 @@ def conv2d_task(
         Access(weight, (idx("co"), idx("ci"), idx("kh"), idx("kw")), False),
     ]
     writes = [Access(out, (idx("n"), idx("co"), idx("h"), idx("w")), True)]
-    return Task(name, loops, reads, writes, op="conv", flops_per_iter=2.0, fn=fn)
+    return Task(name, loops, reads, writes, op="conv", flops_per_iter=2.0,
+                fn=fn, spec=spec)
 
 
 def pad_task(
@@ -544,6 +610,7 @@ def pad_task(
     w: int,
     pad: int,
     fn: Callable[[dict], dict] | None = None,
+    spec: OpSpec | None = None,
 ) -> Task:
     """Zero-pad: writes (h+2p, w+2p).  Written in the paper's
     motivating-example loop order (c, h, w) — a deliberate order mismatch
@@ -551,7 +618,8 @@ def pad_task(
     loops = [Loop("n", n), Loop("c", c), Loop("h", h + 2 * pad), Loop("w", w + 2 * pad)]
     reads = [Access(inp, full_index(["n", "c", "h", "w"]), False)]
     writes = [Access(out, full_index(["n", "c", "h", "w"]), True)]
-    return Task(name, loops, reads, writes, op="pad", flops_per_iter=0.0, fn=fn)
+    return Task(name, loops, reads, writes, op="pad", flops_per_iter=0.0,
+                fn=fn, spec=spec)
 
 
 def pool_task(
@@ -565,6 +633,7 @@ def pool_task(
     k: int,
     fn: Callable[[dict], dict] | None = None,
     op: str = "pool",
+    spec: OpSpec | None = None,
 ) -> Task:
     """k×k pool with stride k: the Fig. 5 reduction producer (write inside
     the window loops) plus a windowed read."""
@@ -573,7 +642,8 @@ def pool_task(
     reads = [Access(inp, (idx("n"), idx("c"), idx(("oh", k), "kh"), idx(("ow", k), "kw")),
                     False)]
     writes = [Access(out, (idx("n"), idx("c"), idx("oh"), idx("ow")), True)]
-    return Task(name, loops, reads, writes, op=op, flops_per_iter=1.0, fn=fn)
+    return Task(name, loops, reads, writes, op=op, flops_per_iter=1.0,
+                fn=fn, spec=spec)
 
 
 def reduce_task(
@@ -585,6 +655,7 @@ def reduce_task(
     fn: Callable[[dict], dict] | None = None,
     op: str = "reduce",
     dim_names: Sequence[str] | None = None,
+    spec: OpSpec | None = None,
 ) -> Task:
     """Generic reduction keeping dims ``keep`` of ``shape``."""
     dims = list(dim_names) if dim_names else [f"r{k}" for k in range(len(shape))]
@@ -592,9 +663,12 @@ def reduce_task(
     reads = [Access(inp, full_index(dims), False)]
     out_idx = tuple(idx(dims[i]) for i in keep)
     writes = [Access(out, out_idx, True)]
-    return Task(name, loops, reads, writes, op=op, flops_per_iter=1.0, fn=fn)
+    return Task(name, loops, reads, writes, op=op, flops_per_iter=1.0,
+                fn=fn, spec=spec)
 
 
 def copy_task(name: str, out: str, inp: str, shape: Sequence[int],
-              fn: Callable[[dict], dict] | None = None) -> Task:
-    return ewise_task(name, out, [inp], shape, fn=fn, op="copy", flops_per_iter=0.0)
+              fn: Callable[[dict], dict] | None = None,
+              spec: OpSpec | None = None) -> Task:
+    return ewise_task(name, out, [inp], shape, fn=fn, op="copy",
+                      flops_per_iter=0.0, spec=spec)

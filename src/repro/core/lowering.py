@@ -10,10 +10,23 @@ HBM, double-buffered by the consumer's grid pipeline.
 This file is the analogue of the paper's HLS-C++ code generation (§VII-C);
 functional equivalence against the un-optimized program is checked the
 same way the paper's testbench does — by executing both and comparing.
+
+Lowering results are memoized like compiles: keyed on the compiled graph's
+``structural_hash()`` — which covers the fusion decisions (buffer impls,
+fused-group ids) — plus the lowering flags and the kernel-registry epoch.
+Re-lowering a structurally identical design (e.g. a disk-cache hit in a
+fresh ``CompiledDataflow``) reuses the already-built (and, under jit, the
+already-traced) program.  The same content-addressing contract as the
+compile cache applies: graphs with equal structural hashes must have equal
+numerics (automatic for spec-carrying tasks, the ``const:`` tag convention
+for closure-built ones).
 """
 
 from __future__ import annotations
 
+import os
+import threading
+from collections import OrderedDict
 from dataclasses import dataclass, field
 from typing import Any, Callable
 
@@ -22,16 +35,24 @@ import numpy as np
 
 from .compiler import CompiledDataflow
 from .graph import FIFO, DataflowGraph, GraphError, Task
+from .ops import registry_epoch as _ops_epoch
 
 # Registry: op-pattern -> kernel factory.  kernels/__init__.py populates
 # this with Pallas implementations ("streamfuse" etc.); the generic path
 # composes the tasks' jnp fns and lets XLA fuse.
 _KERNEL_REGISTRY: dict[tuple[str, ...], Callable[..., Callable]] = {}
 
+# Epoch bumps on every kernel registration: memoized lowerings from before
+# a registration must not serve afterwards (the group->kernel routing
+# could differ).
+_REGISTRY_EPOCH = 0
+
 
 def register_group_kernel(pattern: tuple[str, ...],
                           factory: Callable[..., Callable]) -> None:
+    global _REGISTRY_EPOCH
     _KERNEL_REGISTRY[pattern] = factory
+    _REGISTRY_EPOCH += 1
 
 
 @dataclass
@@ -93,16 +114,55 @@ def fusion_groups(graph: DataflowGraph, impl: dict[str, str]) -> list[FusionGrou
     return groups
 
 
+# Memoized lowerings: structural key -> LoweredProgram (LRU).
+_LOWER_CACHE: OrderedDict[tuple, LoweredProgram] = OrderedDict()
+_LOWER_LOCK = threading.Lock()
+LOWER_CACHE_STATS = {"hits": 0, "misses": 0}
+
+
+def _lower_cache_size() -> int:
+    return max(1, int(os.environ.get("CODO_LOWER_CACHE_SIZE", "64")))
+
+
+def clear_lower_cache() -> None:
+    with _LOWER_LOCK:
+        _LOWER_CACHE.clear()
+        LOWER_CACHE_STATS.update(hits=0, misses=0)
+
+
 def lower(compiled: CompiledDataflow, jit: bool = True,
-          use_registered_kernels: bool = True) -> LoweredProgram:
+          use_registered_kernels: bool = True, *,
+          memo: bool = True) -> LoweredProgram:
     graph = compiled.graph
     stripped = [t.name for t in graph.tasks if t.fn is None]
     if stripped:
         raise GraphError(
             f"cannot lower {graph.name}: {len(stripped)} tasks have no numeric "
-            f"fn (e.g. {stripped[0]!r}). Disk compile-cache entries are "
-            "structural (closures are not picklable); recompile with an "
-            "in-memory cache or cache=None before lowering.")
+            f"semantics (e.g. {stripped[0]!r}). These tasks were built from "
+            "raw closures (not picklable), so their disk compile-cache entry "
+            "is structural-only; build graphs with declarative OpSpecs "
+            "(repro.core.ops) for executable cache entries, or recompile "
+            "with an in-memory cache / cache=None before lowering.")
+    # Key covers fusion decisions (via the structural hash), both kernel
+    # registries (group kernels AND op impls — re-registering either must
+    # not serve programs built from the old implementations), and flags.
+    key = (graph.structural_hash(), bool(jit), bool(use_registered_kernels),
+           _REGISTRY_EPOCH, _ops_epoch())
+    if memo:
+        with _LOWER_LOCK:
+            hit = _LOWER_CACHE.get(key)
+            if hit is not None:
+                _LOWER_CACHE.move_to_end(key)
+                LOWER_CACHE_STATS["hits"] += 1
+        if hit is not None:
+            # Mirror the cached fusion decisions onto the caller's graph so
+            # post-lowering introspection (fused_group ids) behaves as if
+            # the lowering had run, then share the built program.
+            for g in hit.groups:
+                for n in g.tasks:
+                    graph.task(n).fused_group = g.gid
+            return LoweredProgram(graph, hit.groups, hit.fn,
+                                  list(hit.materialized))
     impl = compiled.buffer_plan.impl if compiled.buffer_plan else {}
     groups = fusion_groups(graph, impl)
 
@@ -140,7 +200,15 @@ def lower(compiled: CompiledDataflow, jit: bool = True,
         return {k: scope[k] for k in outputs}
 
     fn = jax.jit(program) if jit else program
-    return LoweredProgram(graph, groups, fn, materialized)
+    out = LoweredProgram(graph, groups, fn, materialized)
+    if memo:
+        with _LOWER_LOCK:
+            LOWER_CACHE_STATS["misses"] += 1
+            _LOWER_CACHE[key] = out
+            _LOWER_CACHE.move_to_end(key)
+            while len(_LOWER_CACHE) > _lower_cache_size():
+                _LOWER_CACHE.popitem(last=False)
+    return out
 
 
 def oracle_outputs(source_graph: DataflowGraph, env: dict) -> dict:

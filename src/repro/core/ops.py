@@ -1,0 +1,339 @@
+"""Declarative op registry: ``Task`` numerics as data, not closures.
+
+Historically every :class:`~repro.core.graph.Task` carried its numeric
+semantics as an opaque Python closure (``fn(env) -> {buf: array}``).  That
+worked, but closures are not picklable, so
+
+* on-disk compile-cache entries came back *stripped* — a cold-restart hit
+  could be costed and verified but never lowered or executed, and
+* the batch ablation driver was confined to thread pools — a ``Task``
+  could not cross a process boundary.
+
+This module replaces closures with an :class:`OpSpec` — a plain-data
+record of *which* op a task computes (operand buffer names, output buffer
+names, and attributes like stride/padding/axis) — plus a registry that
+materializes the matching jnp implementation on demand.  ``Task.fn`` is
+now a derived property: tasks that carry a spec re-derive their callable
+after a pickle round-trip, in any process.
+
+OpSpec fields
+-------------
+
+``kind``
+    Registry key naming the implementation (``"conv2d"``, ``"matmul"``,
+    ``"relu"``, ...).  Distinct from ``Task.op``, which is the *pattern
+    class* the passes reason about (a ``"conv2d"`` and a ``"dwconv2d"``
+    spec are both ``op="conv"`` tasks).
+``ins``
+    Operand buffer names, positional.  ``env[ins[i]]`` is the i-th input
+    array at execution time.
+``outs``
+    Output buffer names.  The implementation returns ``{out: array}`` for
+    every name in ``outs``.
+``attrs``
+    Plain-data attributes (ints, floats, bools, strings, tuples thereof):
+    stride, padding, reduction axes, scale factors...  Attributes are part
+    of :meth:`signature` and therefore of
+    ``DataflowGraph.structural_signature()`` — a semantic constant that
+    lives in an attr automatically keys the compile cache, so two graphs
+    differing only in, say, a scale factor never collide.
+``parts``
+    Sub-specs for the composite ``"fused"`` kind (the coarse pass merges
+    multi-producer violations by fusing producers; the fused node's
+    semantics are the parts run in sequence).
+
+Pickling contract
+-----------------
+
+An ``OpSpec`` must contain only plain data: strings, numbers, bools, and
+(nested) tuples/dicts of those, plus child ``OpSpec`` records in
+``parts``.  Never close over arrays, modules, or callables — the whole
+point is that ``pickle.dumps(spec)`` round-trips across interpreters and
+that :meth:`signature` is a stable content address.  Implementations
+(registered callables) stay in *code*, keyed by ``kind``: unpickling a
+spec in a fresh process finds the implementation in the registry of that
+process, so ships of spec'd graphs between processes only require both
+sides to import the same version of this module.
+
+Registering a new op
+--------------------
+
+.. code-block:: python
+
+    from repro.core.ops import OpSpec, register_op
+
+    @register_op("axpy")
+    def _axpy(spec, env):
+        import jax.numpy as jnp  # lazy: keep repro.core importable sans jax
+        a = spec.attrs.get("a", 1.0)
+        x, y = (env[b] for b in spec.ins)
+        return {spec.outs[0]: a * x + y}
+
+    # builders then attach: Task(..., spec=OpSpec("axpy", (x, y), (out,),
+    #                                             {"a": 2.0}))
+
+Implementations take ``(spec, env)`` and return a dict mapping *every*
+name in ``spec.outs`` to its array.  jax imports belong *inside* the
+implementation body — graph construction and the whole compile pipeline
+must stay importable (and process-pool-spawnable) without pulling in jax.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Any, Callable
+
+# --------------------------------------------------------------------------
+# Spec
+# --------------------------------------------------------------------------
+
+
+class UnknownOpError(KeyError):
+    """Raised when a spec names a kind with no registered implementation."""
+
+
+def _plain(value: Any) -> Any:
+    """Canonical plain-data view of an attr value (lists -> tuples)."""
+    if isinstance(value, (list, tuple)):
+        return tuple(_plain(v) for v in value)
+    return value
+
+
+@dataclass
+class OpSpec:
+    """Declarative numeric semantics of one task — see the module docstring
+    for the field-by-field contract."""
+
+    kind: str
+    ins: tuple[str, ...] = ()
+    outs: tuple[str, ...] = ()
+    attrs: dict[str, Any] = field(default_factory=dict)
+    parts: tuple["OpSpec", ...] = ()
+
+    def __post_init__(self):
+        self.ins = tuple(self.ins)
+        self.outs = tuple(self.outs)
+        self.parts = tuple(self.parts)
+        self.attrs = {k: _plain(v) for k, v in dict(self.attrs).items()}
+
+    # ---- data plumbing ---------------------------------------------------
+    def renamed(self, alias: dict[str, str]) -> "OpSpec":
+        """Pure-data buffer rename: every operand/output name found in
+        ``alias`` maps old -> new, recursively through ``parts``.  This is
+        the declarative replacement for ``retarget_fn``'s env-aliasing
+        closure shim."""
+        return OpSpec(
+            self.kind,
+            tuple(alias.get(b, b) for b in self.ins),
+            tuple(alias.get(b, b) for b in self.outs),
+            dict(self.attrs),
+            tuple(p.renamed(alias) for p in self.parts),
+        )
+
+    def copy(self) -> "OpSpec":
+        return dataclasses.replace(
+            self, attrs=dict(self.attrs),
+            parts=tuple(p.copy() for p in self.parts))
+
+    def buffers(self) -> set[str]:
+        out = set(self.ins) | set(self.outs)
+        for p in self.parts:
+            out |= p.buffers()
+        return out
+
+    # ---- content addressing ----------------------------------------------
+    def signature(self) -> tuple:
+        """Canonical nested-tuple view: feeds
+        ``DataflowGraph.structural_signature()`` so op semantics —
+        including attr constants — key the compile cache."""
+        return (self.kind, self.ins, self.outs,
+                tuple(sorted((k, repr(v)) for k, v in self.attrs.items())),
+                tuple(p.signature() for p in self.parts))
+
+
+# --------------------------------------------------------------------------
+# Registry
+# --------------------------------------------------------------------------
+
+# kind -> implementation(spec, env) -> {out buffer: array}
+_REGISTRY: dict[str, Callable[[OpSpec, dict], dict]] = {}
+
+# Bumped on every registration so memoized *materialized* programs (e.g.
+# the lower() cache) can detect that an implementation changed underneath
+# them and rebuild instead of serving stale numerics.
+_EPOCH = 0
+
+
+def registry_epoch() -> int:
+    return _EPOCH
+
+
+def register_op(kind: str):
+    """Decorator: register ``fn(spec, env) -> {out: array}`` under ``kind``.
+    Re-registration replaces (kernels may override reference impls)."""
+
+    def deco(fn: Callable[[OpSpec, dict], dict]):
+        global _EPOCH
+        _REGISTRY[kind] = fn
+        _EPOCH += 1
+        return fn
+
+    return deco
+
+
+def registered_ops() -> list[str]:
+    return sorted(_REGISTRY)
+
+
+def op_impl(kind: str) -> Callable[[OpSpec, dict], dict]:
+    try:
+        return _REGISTRY[kind]
+    except KeyError:
+        raise UnknownOpError(
+            f"no implementation registered for op kind {kind!r}; "
+            f"registered: {registered_ops()}") from None
+
+
+def materialize(spec: OpSpec) -> Callable[[dict], dict]:
+    """Build the executable ``env -> {out: array}`` callable for ``spec``.
+
+    Raises :class:`UnknownOpError` eagerly (at materialization, not first
+    call) so a stale spec fails loudly when a cache entry is reloaded."""
+    impl = op_impl(spec.kind)
+
+    def fn(env: dict) -> dict:
+        return impl(spec, env)
+
+    fn.spec = spec  # introspection/debugging: which spec produced this fn
+    return fn
+
+
+# --------------------------------------------------------------------------
+# Reference implementations (lazy jax imports: the registry itself — and
+# everything that builds or compiles graphs — must import without jax).
+# --------------------------------------------------------------------------
+
+
+@register_op("identity")
+def _identity(spec: OpSpec, env: dict) -> dict:
+    return {spec.outs[0]: env[spec.ins[0]]}
+
+
+@register_op("dup")
+def _dup(spec: OpSpec, env: dict) -> dict:
+    """Coarse-pass duplicator: one private stream copy per consumer."""
+    src = env[spec.ins[0]]
+    return {o: src for o in spec.outs}
+
+
+@register_op("fused")
+def _fused(spec: OpSpec, env: dict) -> dict:
+    """Coarse-pass producer fusion: run ``parts`` in order, each seeing the
+    accumulated scope (earlier writes staged and merged, per Fig. 4b)."""
+    out: dict = {}
+    scope = dict(env)
+    for part in spec.parts:
+        r = materialize(part)(scope)
+        scope.update(r)
+        out.update(r)
+    return out
+
+
+@register_op("pad2d")
+def _pad2d(spec: OpSpec, env: dict) -> dict:
+    import jax.numpy as jnp
+    p = int(spec.attrs["pad"])
+    return {spec.outs[0]: jnp.pad(env[spec.ins[0]],
+                                  ((0, 0), (0, 0), (p, p), (p, p)))}
+
+
+@register_op("conv2d")
+def _conv2d(spec: OpSpec, env: dict) -> dict:
+    import jax
+    s = int(spec.attrs.get("stride", 1))
+    g = int(spec.attrs.get("groups", 1))
+    y = jax.lax.conv_general_dilated(
+        env[spec.ins[0]], env[spec.ins[1]], (s, s), "VALID",
+        dimension_numbers=("NCHW", "OIHW", "NCHW"), feature_group_count=g)
+    return {spec.outs[0]: y}
+
+
+@register_op("relu")
+def _relu(spec: OpSpec, env: dict) -> dict:
+    import jax.numpy as jnp
+    return {spec.outs[0]: jnp.maximum(env[spec.ins[0]], 0)}
+
+
+@register_op("gelu")
+def _gelu(spec: OpSpec, env: dict) -> dict:
+    import jax
+    return {spec.outs[0]: jax.nn.gelu(env[spec.ins[0]])}
+
+
+@register_op("add")
+def _add(spec: OpSpec, env: dict) -> dict:
+    return {spec.outs[0]: env[spec.ins[0]] + env[spec.ins[1]]}
+
+
+@register_op("vadd")
+def _vadd(spec: OpSpec, env: dict) -> dict:
+    a = float(spec.attrs.get("alpha", 1.0))
+    b = float(spec.attrs.get("beta", 1.0))
+    return {spec.outs[0]: a * env[spec.ins[0]] + b * env[spec.ins[1]]}
+
+
+@register_op("scale")
+def _scale(spec: OpSpec, env: dict) -> dict:
+    return {spec.outs[0]: env[spec.ins[0]] * float(spec.attrs["s"])}
+
+
+@register_op("softmax")
+def _softmax(spec: OpSpec, env: dict) -> dict:
+    import jax
+    axis = int(spec.attrs.get("axis", -1))
+    return {spec.outs[0]: jax.nn.softmax(env[spec.ins[0]], axis)}
+
+
+@register_op("matmul")
+def _matmul(spec: OpSpec, env: dict) -> dict:
+    return {spec.outs[0]: env[spec.ins[0]] @ env[spec.ins[1]]}
+
+
+@register_op("mv")
+def _mv(spec: OpSpec, env: dict) -> dict:
+    A = env[spec.ins[0]]
+    if spec.attrs.get("trans", False):
+        A = A.T
+    return {spec.outs[0]: A @ env[spec.ins[1]]}
+
+
+@register_op("transpose")
+def _transpose(spec: OpSpec, env: dict) -> dict:
+    return {spec.outs[0]: env[spec.ins[0]].T}
+
+
+@register_op("maxpool2d")
+def _maxpool2d(spec: OpSpec, env: dict) -> dict:
+    import jax
+    import jax.numpy as jnp
+    k = int(spec.attrs["k"])
+    y = jax.lax.reduce_window(env[spec.ins[0]], -jnp.inf, jax.lax.max,
+                              (1, 1, k, k), (1, 1, k, k), "VALID")
+    return {spec.outs[0]: y}
+
+
+@register_op("mean")
+def _mean(spec: OpSpec, env: dict) -> dict:
+    axes = tuple(int(a) for a in spec.attrs["axes"])
+    return {spec.outs[0]: env[spec.ins[0]].mean(axis=axes)}
+
+
+@register_op("reshape")
+def _reshape(spec: OpSpec, env: dict) -> dict:
+    shape = tuple(int(s) for s in spec.attrs["shape"])
+    return {spec.outs[0]: env[spec.ins[0]].reshape(shape)}
+
+
+__all__ = ["OpSpec", "UnknownOpError", "materialize", "op_impl",
+           "register_op", "registered_ops"]

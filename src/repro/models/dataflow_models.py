@@ -1,8 +1,13 @@
 """Paper-benchmark workloads as CODO dataflow graphs (§VIII).
 
 Every workload the paper evaluates is built here as a :class:`DataflowGraph`
-of affine tasks with attached jnp semantics, so the compiler runs on the
-*same* graphs the paper compiles:
+of affine tasks with *declarative* numeric semantics — each task carries an
+:class:`~repro.core.ops.OpSpec` (op kind + operand names + plain-data
+attrs) that the op registry materializes into jnp on demand — so the
+compiler runs on the *same* graphs the paper compiles, and every compiled
+design is a portable artifact: graphs built here survive the disk compile
+cache and process-pool batch compiles fully executable.  Building graphs
+does not import jax; only executing them does.
 
 * Table II kernels: atax, gesummv, gemm, mvt, 3mm, residual-mlp,
   autoencoder, residual-block, dws-conv block, 3-layer conv, feed-forward,
@@ -22,13 +27,12 @@ from __future__ import annotations
 import math
 from typing import Sequence
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
 from ..core.graph import (Access, DataflowGraph, Loop, Task, conv2d_task,
                           ewise_task, full_index, idx, matmul_task, pad_task,
                           pool_task)
+from ..core.ops import OpSpec
 
 # --------------------------------------------------------------------------
 # Builder
@@ -36,7 +40,7 @@ from ..core.graph import (Access, DataflowGraph, Loop, Task, conv2d_task,
 
 
 class GB:
-    """Graph-builder: tracks shapes, emits tasks with jnp semantics."""
+    """Graph-builder: tracks shapes, emits tasks with declarative specs."""
 
     def __init__(self, name: str):
         self.g = DataflowGraph(name)
@@ -68,8 +72,7 @@ class GB:
         out = self.buf(self.fresh("pad"), (n, c, h + 2 * p, w + 2 * p))
         self.g.add_task(pad_task(
             self.fresh("padding"), out, x, n, c, h, w, p,
-            fn=lambda env, _x=x, _o=out, _p=p: {
-                _o: jnp.pad(env[_x], ((0, 0), (0, 0), (_p, _p), (_p, _p)))}))
+            spec=OpSpec("pad2d", (x,), (out,), {"pad": p})))
         return out
 
     def conv(self, x: str, co: int, k: int, stride: int = 1, pad: int = -1,
@@ -86,12 +89,8 @@ class GB:
                             (co_eff, 1 if depthwise else ci, k, k))
         out = self.buf(self.fresh("conv"), (n, co_eff, oh, ow))
 
-        def conv_fn(env, _x=x, _w=wname, _o=out, _s=stride, _g=groups):
-            y = jax.lax.conv_general_dilated(
-                env[_x], env[_w], (_s, _s), "VALID",
-                dimension_numbers=("NCHW", "OIHW", "NCHW"),
-                feature_group_count=_g)
-            return {_o: y}
+        conv_spec = OpSpec("conv2d", (x, wname), (out,),
+                           {"stride": stride, "groups": groups})
 
         if depthwise:
             t = Task(self.fresh("dwconv"),
@@ -104,12 +103,12 @@ class GB:
                                    False)],
                      writes=[Access(out, (idx("n"), idx("c"), idx("h"),
                                           idx("w")), True)],
-                     op="conv", flops_per_iter=2.0, fn=conv_fn)
+                     op="conv", flops_per_iter=2.0, spec=conv_spec)
             self.g.add_task(t)
         else:
             self.g.add_task(conv2d_task(self.fresh("conv2d"), out, x, wname,
                                         n, co_eff, ci, oh, ow, k, k,
-                                        fn=conv_fn, stride=stride))
+                                        spec=conv_spec, stride=stride))
         if relu:
             out = self.relu(out)
         return out
@@ -120,8 +119,7 @@ class GB:
         dims = ["n", "c", "h", "w"][:len(shp)] if len(shp) == 4 else None
         self.g.add_task(ewise_task(
             self.fresh("relu_t"), out, [x], shp, op="ewise",
-            fn=lambda env, _x=x, _o=out: {_o: jnp.maximum(env[_x], 0)},
-            dim_names=dims))
+            spec=OpSpec("relu", (x,), (out,)), dim_names=dims))
         return out
 
     def gelu(self, x: str) -> str:
@@ -129,7 +127,7 @@ class GB:
         out = self.buf(self.fresh("gelu"), shp)
         self.g.add_task(ewise_task(
             self.fresh("gelu_t"), out, [x], shp, op="ewise", flops_per_iter=8.0,
-            fn=lambda env, _x=x, _o=out: {_o: jax.nn.gelu(env[_x])}))
+            spec=OpSpec("gelu", (x,), (out,))))
         return out
 
     def add(self, a: str, b: str) -> str:
@@ -138,8 +136,7 @@ class GB:
         dims = ["n", "c", "h", "w"][:len(shp)] if len(shp) == 4 else None
         self.g.add_task(ewise_task(
             self.fresh("add_t"), out, [a, b], shp, op="ewise",
-            fn=lambda env, _a=a, _b=b, _o=out: {_o: env[_a] + env[_b]},
-            dim_names=dims))
+            spec=OpSpec("add", (a, b), (out,)), dim_names=dims))
         return out
 
     def maxpool(self, x: str, k: int) -> str:
@@ -148,10 +145,7 @@ class GB:
         out = self.buf(self.fresh("pool"), (n, c, oh, ow))
         self.g.add_task(pool_task(
             self.fresh("maxpool"), out, x, n, c, oh, ow, k,
-            fn=lambda env, _x=x, _o=out, _k=k: {
-                _o: jax.lax.reduce_window(env[_x], -jnp.inf, jax.lax.max,
-                                          (1, 1, _k, _k), (1, 1, _k, _k),
-                                          "VALID")}))
+            spec=OpSpec("maxpool2d", (x,), (out,), {"k": k})))
         return out
 
     def global_avgpool(self, x: str) -> str:
@@ -162,7 +156,7 @@ class GB:
                  reads=[Access(x, full_index(["n", "c", "h", "w"]), False)],
                  writes=[Access(out, (idx("n"), idx("c")), True)],
                  op="pool", flops_per_iter=1.0,
-                 fn=lambda env, _x=x, _o=out: {_o: env[_x].mean(axis=(2, 3))})
+                 spec=OpSpec("mean", (x,), (out,), {"axes": (2, 3)}))
         self.g.add_task(t)
         return out
 
@@ -175,8 +169,7 @@ class GB:
                  writes=[Access(out, (idx("n"),
                                       idx(("c", h * w), ("h", w), "w")), True)],
                  op="copy", flops_per_iter=0.0,
-                 fn=lambda env, _x=x, _o=out, _n=n: {
-                     _o: env[_x].reshape(_n, -1)})
+                 spec=OpSpec("reshape", (x,), (out,), {"shape": (n, -1)}))
         self.g.add_task(t)
         return out
 
@@ -190,7 +183,7 @@ class GB:
         out = self.buf(self.fresh("fc"), (m, nname))
         self.g.add_task(matmul_task(
             self.fresh("fc_t"), out, x, wname, m, nname, k,
-            fn=lambda env, _x=x, _w=wname, _o=out: {_o: env[_x] @ env[_w]}))
+            spec=OpSpec("matmul", (x, wname), (out,))))
         if relu:
             out = self.relu(out)
         return out
@@ -202,7 +195,7 @@ class GB:
         out = self.buf(self.fresh("mm"), (m, n))
         self.g.add_task(matmul_task(
             self.fresh("mm_t"), out, a, b, m, n, k,
-            fn=lambda env, _a=a, _b=b, _o=out: {_o: env[_a] @ env[_b]}))
+            spec=OpSpec("matmul", (a, b), (out,))))
         return out
 
     def transpose(self, x: str) -> str:
@@ -213,7 +206,7 @@ class GB:
                  reads=[Access(x, (idx("i"), idx("j")), False)],
                  writes=[Access(out, (idx("j"), idx("i")), True)],
                  op="copy", flops_per_iter=0.0,
-                 fn=lambda env, _x=x, _o=out: {_o: env[_x].T})
+                 spec=OpSpec("transpose", (x,), (out,)))
         self.g.add_task(t)
         return out
 
@@ -223,20 +216,18 @@ class GB:
         self.g.add_task(ewise_task(
             self.fresh("softmax_t"), out, [x], shp, op="softmax",
             flops_per_iter=5.0,
-            fn=lambda env, _x=x, _o=out: {_o: jax.nn.softmax(env[_x], -1)}))
+            spec=OpSpec("softmax", (x,), (out,), {"axis": -1})))
         return out
 
     def scale(self, x: str, s: float) -> str:
         shp = self.shape[x]
         out = self.buf(self.fresh("scale"), shp)
-        t = ewise_task(
+        # The scale factor is an OpSpec attr — plain data that enters
+        # structural_signature(), so graphs differing only in `s` key the
+        # compile cache apart (no const: tag needed, unlike closures).
+        self.g.add_task(ewise_task(
             self.fresh("scale_t"), out, [x], shp, op="ewise",
-            fn=lambda env, _x=x, _o=out, _s=s: {_o: env[_x] * _s})
-        # Semantic constants that live only in the closure must also be
-        # structural (tags enter structural_signature), or two graphs
-        # differing only in `s` would collide in the compile cache.
-        t.tags.add(f"const:scale:{float(s)!r}")
-        self.g.add_task(t)
+            spec=OpSpec("scale", (x,), (out,), {"s": float(s)})))
         return out
 
     def mv(self, A: str, x: str, trans: bool = False) -> str:
@@ -251,8 +242,7 @@ class GB:
                  reads=[Access(A, a_idx, False), Access(x, (idx("k"),), False)],
                  writes=[Access(out, (idx("m"),), True)],
                  op="matmul", flops_per_iter=2.0,
-                 fn=lambda env, _A=A, _x=x, _o=out, _t=trans: {
-                     _o: (env[_A].T if _t else env[_A]) @ env[_x]})
+                 spec=OpSpec("mv", (A, x), (out,), {"trans": bool(trans)}))
         self.g.add_task(t)
         return out
 
@@ -265,19 +255,17 @@ class GB:
         dims = ["n", "c", "h", "w"][:len(shp)] if len(shp) == 4 else None
         self.g.add_task(ewise_task(
             self.fresh("load_t"), out, [x], shp, op="copy", flops_per_iter=0.0,
-            fn=lambda env, _x=x, _o=out: {_o: env[_x]}, dim_names=dims))
+            spec=OpSpec("identity", (x,), (out,)), dim_names=dims))
         return out
 
     def vadd(self, a: str, b: str, alpha: float = 1.0, beta: float = 1.0) -> str:
         shp = self.shape[a]
         out = self.buf(self.fresh("vadd"), shp)
-        t = ewise_task(
+        # alpha/beta are structural via OpSpec.attrs (see scale()).
+        self.g.add_task(ewise_task(
             self.fresh("vadd_t"), out, [a, b], shp, op="ewise",
-            fn=lambda env, _a=a, _b=b, _o=out, _al=alpha, _be=beta: {
-                _o: _al * env[_a] + _be * env[_b]})
-        # closure constants -> structure (see scale(); compile-cache keying)
-        t.tags.add(f"const:vadd:{float(alpha)!r}:{float(beta)!r}")
-        self.g.add_task(t)
+            spec=OpSpec("vadd", (a, b), (out,),
+                        {"alpha": float(alpha), "beta": float(beta)})))
         return out
 
 
@@ -637,6 +625,8 @@ DNN_BENCHES = {
 def random_inputs(graph: DataflowGraph, seed: int = 0) -> dict:
     """Fan-in-normalized random inputs/weights: deep CNN oracles stay O(1)
     in magnitude so fp32 comparisons remain meaningful."""
+    import jax.numpy as jnp  # lazy: graph building stays jax-free
+
     rng = np.random.default_rng(seed)
     env = {}
     for buf in graph.buffers.values():

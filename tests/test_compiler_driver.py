@@ -111,9 +111,9 @@ def test_structural_hash_sensitive_to_structure():
     assert g1.structural_hash() != g2.structural_hash()
 
 
-def test_structural_hash_sees_closure_constants():
-    # scale/vadd factors live in closures; the const: tag must keep graphs
-    # with different numerics from colliding in the cache
+def test_structural_hash_sees_semantic_constants():
+    # scale factors are OpSpec attrs — structural data — so graphs with
+    # different numerics never collide in the cache
     from repro.models.dataflow_models import GB
 
     def build(s):
@@ -124,6 +124,23 @@ def test_structural_hash_sees_closure_constants():
 
     assert build(0.5).structural_hash() != build(0.25).structural_hash()
     assert build(0.5).structural_hash() == build(0.5).structural_hash()
+
+
+def test_structural_hash_sees_closure_const_tags():
+    # closure-built tasks keep the legacy contract: constants surface via
+    # const: tags (specs are absent, so tags are the only structural trace)
+    from repro.core import DataflowGraph, ewise_task
+
+    def build(s):
+        g = DataflowGraph("g")
+        g.buffer("x", (4,), kind="input")
+        g.buffer("o", (4,), kind="output")
+        t = ewise_task("t", "o", ["x"], (4,), fn=lambda e, _s=s: {"o": e["x"] * _s})
+        t.tags.add(f"const:scale:{s!r}")
+        g.add_task(t)
+        return g
+
+    assert build(0.5).structural_hash() != build(0.25).structural_hash()
 
 
 def test_options_cache_key_sensitive():
@@ -179,7 +196,7 @@ def test_cache_lru_eviction():
     assert not c.cache_hit
 
 
-def test_disk_cache_cross_instance(tmp_path):
+def test_disk_cache_cross_instance_is_executable(tmp_path):
     d = tmp_path / "cc"
     c1 = codo_opt(small_graph(), cache=CompileCache(disk_dir=d))
     assert list(d.glob("*.pkl")), "no disk entry written"
@@ -190,25 +207,45 @@ def test_disk_cache_cross_instance(tmp_path):
     assert dict(PASS_RUN_COUNTS) == counts
     assert c2.cache_hit and cache2.stats.disk_hits == 1
     assert c2.speedup == c1.speedup
-    # disk entries are structural: fns stripped, but invariants verifiable
-    assert all(t.fn is None for t in c2.graph.tasks)
+    # declarative disk entries reload fully executable: every task re-derives
+    # its fn from its OpSpec, and the lowered program matches the oracle
+    assert all(t.fn is not None for t in c2.graph.tasks)
+    assert all(not t.fn_is_closure for t in c2.graph.tasks)
     assert not verify_violation_free(c2)
-    # the fn-stripped disk entry must NOT poison the memory tier: a fresh
-    # compile via put() keeps closures, and disk hits bypass _mem
+    from repro.core import verify_lowering
+    src = small_graph()
+    verify_lowering(src, c2, dm.random_inputs(src), rtol=3e-4, atol=3e-4)
+    # executable entries are promoted into the memory tier
     c3 = codo_opt(small_graph(), cache=cache2)
-    assert c3.cache_hit and cache2.stats.disk_hits == 2
-    assert len(cache2) == 0
+    assert c3.cache_hit
+    assert cache2.stats.promotions == 1 and cache2.stats.hits == 1
+    assert len(cache2) == 1
 
 
-def test_disk_hit_lowering_raises_clear_error(tmp_path):
-    from repro.core import lower
+def test_closure_disk_entry_stripped_and_raises_on_lower(tmp_path):
+    # closure-built graphs keep the old behavior: disk entries are
+    # structural-only, lowering raises a clear error, and they are NOT
+    # promoted into the memory tier
+    from repro.core import DataflowGraph, ewise_task, lower
     from repro.core.graph import GraphError
+
+    def build():
+        g = DataflowGraph("closure_g")
+        g.buffer("x", (8,), kind="input")
+        g.buffer("o", (8,), kind="output")
+        g.add_task(ewise_task("t", "o", ["x"], (8,),
+                              fn=lambda e: {"o": e["x"] * 2}))
+        return g
+
     d = tmp_path / "cc"
-    codo_opt(small_graph(), cache=CompileCache(disk_dir=d))
-    c = codo_opt(small_graph(), cache=CompileCache(disk_dir=d))
+    codo_opt(build(), cache=CompileCache(disk_dir=d))
+    cache2 = CompileCache(disk_dir=d)
+    c = codo_opt(build(), cache=cache2)
     assert c.cache_hit
+    assert all(t.fn is None for t in c.graph.tasks)
     with pytest.raises(GraphError, match="no numeric"):
         lower(c)
+    assert cache2.stats.promotions == 0 and len(cache2) == 0
 
 
 def test_cache_returns_isolated_buffer_plans():
@@ -257,6 +294,57 @@ def test_batch_driver_grid_and_cache():
     # (opt1 keeps coarse violations by design — the Fig. 10 lesson)
     assert all(not verify_violation_free(r.compiled)
                for r in again if r.preset == "opt5")
+
+
+def test_batch_driver_process_pool(tmp_path):
+    """The Table VII grid fans out over worker processes: jobs pickle,
+    results come back executable, and a second grid is served from the
+    shared disk tier."""
+    from repro.core.compiler import batch_workloads
+
+    wl = batch_workloads(seq=8)
+    sub = {k: wl[k] for k in ("gpt2-medium", "mamba2-780m")}
+    jobs = ablation_jobs(sub, presets=["opt1", "opt5"], budget_units=64)
+    cache = CompileCache(disk_dir=tmp_path / "cc")
+    results = codo_opt_batch(jobs, cache=cache, max_workers=2,
+                             executor="process")
+    assert len(results) == 4 and all(r.ok for r in results), \
+        [r.error for r in results]
+    assert not any(r.cache_hit for r in results)
+    # results crossed a process boundary and are still executable
+    assert all(t.fn is not None
+               for r in results for t in r.compiled.graph.tasks)
+    again = codo_opt_batch(jobs, cache=CompileCache(disk_dir=tmp_path / "cc"),
+                           max_workers=2, executor="process")
+    assert all(r.cache_hit for r in again)
+
+
+def test_batch_process_pool_rejects_unpicklable_jobs():
+    jobs = ablation_jobs({"gesummv": lambda: dm.gesummv(24)},
+                         presets=["opt5"], budget_units=64)
+    jobs = jobs * 2  # need >1 job to engage the pool
+    with pytest.raises(ValueError, match="picklable"):
+        codo_opt_batch(jobs, cache=None, max_workers=2, executor="process")
+
+
+def test_lower_memoization_structural():
+    from repro.core import LOWER_CACHE_STATS, clear_lower_cache, lower
+
+    clear_lower_cache()
+    c1 = codo_opt(small_graph(), cache=None)
+    p1 = lower(c1, jit=False)
+    # structurally identical fresh compile reuses the built program
+    c2 = codo_opt(small_graph(), cache=None)
+    p2 = lower(c2, jit=False)
+    assert LOWER_CACHE_STATS["hits"] == 1
+    assert p2.fn is p1.fn
+    # the hit mirrors fusion decisions onto the caller's graph
+    assert [t.fused_group for t in c2.graph.tasks] == \
+        [t.fused_group for t in c1.graph.tasks]
+    env = dm.random_inputs(small_graph())
+    import numpy as np
+    for k, v in p1(env).items():
+        np.testing.assert_allclose(np.asarray(v), np.asarray(p2(env)[k]))
 
 
 def test_batch_driver_reports_cell_errors():

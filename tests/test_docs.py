@@ -1,0 +1,26 @@
+"""Docs stay executable: run every ```python block in the README and the
+architecture walkthrough (the same check the CI docs job performs via
+tools/check_docs.py)."""
+
+import pathlib
+import sys
+
+import pytest
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+sys.path.insert(0, str(ROOT / "tools"))
+
+from check_docs import check_file, extract_blocks  # noqa: E402
+
+DOCS = [ROOT / "README.md", ROOT / "docs" / "architecture.md"]
+
+
+def test_docs_exist_and_have_python_blocks():
+    for doc in DOCS:
+        assert doc.exists(), doc
+        assert extract_blocks(doc.read_text()), f"{doc} has no python blocks"
+
+
+@pytest.mark.parametrize("doc", DOCS, ids=lambda p: p.name)
+def test_doc_code_blocks_execute(doc):
+    assert check_file(doc) == 0

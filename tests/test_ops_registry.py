@@ -1,0 +1,171 @@
+"""Declarative op-registry tests: OpSpec data plumbing, materialization,
+registration, rename-vs-retarget equivalence, and pickling."""
+
+import pickle
+
+import numpy as np
+import pytest
+
+from repro.core import DataflowGraph, OpSpec, UnknownOpError, ewise_task
+from repro.core.ops import materialize, register_op, registered_ops
+
+
+def test_registry_covers_builder_vocabulary():
+    need = {"identity", "dup", "fused", "pad2d", "conv2d", "relu", "gelu",
+            "add", "vadd", "scale", "softmax", "matmul", "mv", "transpose",
+            "maxpool2d", "mean", "reshape"}
+    assert need <= set(registered_ops())
+
+
+def test_unknown_kind_raises_eagerly():
+    with pytest.raises(UnknownOpError, match="registered"):
+        materialize(OpSpec("no-such-op", ("x",), ("o",)))
+
+
+def test_materialize_basic_ops():
+    x = np.arange(6.0, dtype=np.float32).reshape(2, 3)
+    out = materialize(OpSpec("scale", ("x",), ("o",), {"s": 2.0}))({"x": x})
+    np.testing.assert_allclose(np.asarray(out["o"]), x * 2.0)
+    out = materialize(OpSpec("vadd", ("a", "b"), ("o",),
+                             {"alpha": 2.0, "beta": 3.0}))({"a": x, "b": x})
+    np.testing.assert_allclose(np.asarray(out["o"]), 5.0 * x)
+    out = materialize(OpSpec("transpose", ("x",), ("o",)))({"x": x})
+    assert np.asarray(out["o"]).shape == (3, 2)
+
+
+def test_dup_and_fused_composition():
+    x = np.ones((4,), np.float32)
+    dup = materialize(OpSpec("dup", ("x",), ("a", "b")))({"x": x})
+    assert set(dup) == {"a", "b"}
+    fused = OpSpec("fused", parts=(
+        OpSpec("scale", ("x",), ("y",), {"s": 3.0}),
+        OpSpec("add", ("y", "x"), ("o",)),
+    ))
+    out = materialize(fused)({"x": x})
+    np.testing.assert_allclose(np.asarray(out["o"]), 4.0 * np.ones(4))
+    assert "y" in out  # staged intermediate is surfaced like the closure did
+
+
+def test_renamed_is_pure_and_recursive():
+    spec = OpSpec("fused", parts=(
+        OpSpec("scale", ("x",), ("y",), {"s": 3.0}),
+        OpSpec("add", ("y", "x"), ("o",)),
+    ))
+    r = spec.renamed({"x": "x2", "o": "o2"})
+    assert spec.parts[0].ins == ("x",), "rename must not mutate the original"
+    assert r.parts[0].ins == ("x2",) and r.parts[1].outs == ("o2",)
+    out = materialize(r)({"x2": np.ones(3, np.float32)})
+    np.testing.assert_allclose(np.asarray(out["o2"]), 4.0 * np.ones(3))
+
+
+def test_signature_covers_attrs_and_parts():
+    a = OpSpec("scale", ("x",), ("o",), {"s": 1.5})
+    b = OpSpec("scale", ("x",), ("o",), {"s": 2.5})
+    assert a.signature() != b.signature()
+    assert a.signature() == OpSpec("scale", ("x",), ("o",), {"s": 1.5}).signature()
+    f1 = OpSpec("fused", parts=(a,))
+    f2 = OpSpec("fused", parts=(b,))
+    assert f1.signature() != f2.signature()
+
+
+def test_register_op_and_task_derivation():
+    @register_op("test-axpy")
+    def _axpy(spec, env):
+        return {spec.outs[0]: spec.attrs["a"] * env[spec.ins[0]] + env[spec.ins[1]]}
+
+    t = ewise_task("t", "o", ["x", "y"], (3,),
+                   spec=OpSpec("test-axpy", ("x", "y"), ("o",), {"a": 2.0}))
+    assert not t.fn_is_closure
+    env = {"x": np.ones(3), "y": np.zeros(3)}
+    np.testing.assert_allclose(t.fn(env)["o"], 2.0 * np.ones(3))
+    # closure override wins over the spec
+    t.fn = lambda e: {"o": e["x"] * 0}
+    assert t.fn_is_closure
+    np.testing.assert_allclose(t.fn(env)["o"], np.zeros(3))
+    t.fn = None
+    np.testing.assert_allclose(t.fn(env)["o"], 2.0 * np.ones(3))
+
+
+def test_spec_task_pickles_and_reexecutes():
+    t = ewise_task("t", "o", ["x"], (4,),
+                   spec=OpSpec("scale", ("x",), ("o",), {"s": 3.0}))
+    t2 = pickle.loads(pickle.dumps(t))
+    np.testing.assert_allclose(t2.fn({"x": np.ones(4)})["o"], 3.0 * np.ones(4))
+
+
+def test_graph_execute_via_specs_without_closures():
+    g = DataflowGraph("g")
+    g.buffer("x", (4,), kind="input")
+    g.buffer("h", (4,))
+    g.buffer("o", (4,), kind="output")
+    g.add_task(ewise_task("s", "h", ["x"], (4,),
+                          spec=OpSpec("scale", ("x",), ("h",), {"s": 2.0})))
+    g.add_task(ewise_task("a", "o", ["h", "x"], (4,),
+                          spec=OpSpec("add", ("h", "x"), ("o",))))
+    out = g.execute({"x": np.ones(4, np.float32)})
+    np.testing.assert_allclose(np.asarray(out["o"]), 3.0 * np.ones(4))
+
+
+def test_task_retarget_spec_vs_closure():
+    from repro.core import retarget_fn
+
+    spec_t = ewise_task("s", "o", ["x"], (4,),
+                        spec=OpSpec("scale", ("x",), ("o",), {"s": 2.0}))
+    spec_t.retarget({"x": "x2"})
+    assert spec_t.spec.ins == ("x2",)
+    np.testing.assert_allclose(spec_t.fn({"x2": np.ones(4)})["o"], 2 * np.ones(4))
+
+    clos_t = ewise_task("c", "o", ["x"], (4,), fn=lambda e: {"o": e["x"] * 2})
+    clos_t.retarget({"x": "x2", "o": "o2"})
+    out = clos_t.fn({"x2": np.ones(4)})
+    np.testing.assert_allclose(out["o2"], 2 * np.ones(4))
+    assert retarget_fn is not None  # legacy shim stays exported
+
+
+def test_reregistration_invalidates_memoized_lowerings():
+    """register_op re-registration bumps the ops epoch, so lower()'s memo
+    must rebuild instead of serving programs built from the old impl."""
+    from repro.core import clear_lower_cache, codo_opt, lower
+    from repro.core.ops import op_impl
+
+    kind = "test-epoch-op"
+
+    @register_op(kind)
+    def _v1(spec, env):
+        return {spec.outs[0]: env[spec.ins[0]] * 2.0}
+
+    def build():
+        g = DataflowGraph("epoch_g")
+        g.buffer("x", (4,), kind="input")
+        g.buffer("o", (4,), kind="output")
+        g.add_task(ewise_task("t", "o", ["x"], (4,),
+                              spec=OpSpec(kind, ("x",), ("o",))))
+        return g
+
+    clear_lower_cache()
+    env = {"x": np.ones(4, np.float32)}
+    out1 = lower(codo_opt(build(), cache=None), jit=False)(env)
+    np.testing.assert_allclose(out1["o"], 2.0 * np.ones(4))
+
+    @register_op(kind)
+    def _v2(spec, env):
+        return {spec.outs[0]: env[spec.ins[0]] * 5.0}
+
+    assert op_impl(kind) is _v2
+    out2 = lower(codo_opt(build(), cache=None), jit=False)(env)
+    np.testing.assert_allclose(out2["o"], 5.0 * np.ones(4),
+                               err_msg="stale memoized lowering served")
+
+
+def test_coarse_rewrites_stay_declarative():
+    """Duplicators and fused producers emitted by the coarse pass must be
+    spec-carrying when the inputs are (no closures sneak back in)."""
+    from repro.core import codo_opt
+    from repro.models import dataflow_models as dm
+
+    c = codo_opt(dm.residual_block(1, 8, 12), cache=None)
+    dup = [t for t in c.graph.tasks if "coarse-duplicator" in t.tags]
+    assert dup and all(t.spec is not None and t.spec.kind == "dup" for t in dup)
+    assert all(not t.fn_is_closure for t in c.graph.tasks)
+    # Task objects of the compiled result pickle as-is
+    pickle.dumps(c.graph.tasks)

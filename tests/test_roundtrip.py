@@ -1,0 +1,94 @@
+"""Cold-restart round-trip: compiled designs are portable artifacts.
+
+Compiles in this process with a disk cache, then starts a *fresh
+interpreter* (subprocess) that reloads the entry from disk, lowers it,
+executes it, and checks the outputs against the un-optimized oracle —
+the end-to-end property the declarative op registry exists to provide.
+"""
+
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+
+from repro.core import CompileCache, CodoOptions, codo_opt
+from repro.models import dataflow_models as dm
+
+_SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def _fresh_interpreter(code: str) -> subprocess.CompletedProcess:
+    env = dict(os.environ, JAX_PLATFORMS="cpu",
+               PYTHONPATH=_SRC + os.pathsep + os.environ.get("PYTHONPATH", ""))
+    return subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                          capture_output=True, text=True, timeout=600, env=env)
+
+
+def test_cold_restart_disk_hit_lowers_executes_and_verifies(tmp_path):
+    cache_dir = tmp_path / "cc"
+    opts = CodoOptions(budget_units=64)
+    c = codo_opt(dm.residual_block(1, 8, 12),
+                 opts, cache=CompileCache(disk_dir=cache_dir))
+    assert not c.cache_hit and list(cache_dir.glob("*.pkl"))
+
+    proc = _fresh_interpreter(f"""
+        from repro.core import (CompileCache, CodoOptions, codo_opt, lower,
+                                verify_lowering)
+        from repro.core.passes import PASS_RUN_COUNTS
+        from repro.models import dataflow_models as dm
+
+        src = dm.residual_block(1, 8, 12)
+        cache = CompileCache(disk_dir={str(cache_dir)!r})
+        c = codo_opt(src, CodoOptions(budget_units=64), cache=cache)
+        assert c.cache_hit, "fresh interpreter must hit the disk tier"
+        assert cache.stats.disk_hits == 1
+        assert not PASS_RUN_COUNTS, "disk hit must not run any pass"
+        assert all(t.fn is not None for t in c.graph.tasks), "stripped fns"
+        assert all(not t.fn_is_closure for t in c.graph.tasks)
+
+        # the reloaded design lowers, executes, and matches the oracle
+        env = dm.random_inputs(src)
+        low = lower(c, jit=False)
+        out = low(env)
+        assert set(out) == {{b.name for b in c.graph.outputs()}}
+        verify_lowering(src, c, env, rtol=3e-4, atol=3e-4)
+        print("COLD_RESTART_OK", c.speedup)
+    """)
+    assert proc.returncode == 0, proc.stderr
+    assert "COLD_RESTART_OK" in proc.stdout
+    # same design, same estimate across interpreters
+    reported = float(proc.stdout.split("COLD_RESTART_OK")[1].split()[0])
+    np.testing.assert_allclose(reported, c.speedup, rtol=1e-9)
+
+
+def test_cold_restart_batch_grid_round_trips(tmp_path):
+    """The batch CLI analogue: a warm second interpreter serves the whole
+    (config × preset) sub-grid from disk and the entries stay executable."""
+    from repro.core.compiler import ablation_jobs, batch_workloads, codo_opt_batch
+
+    cache_dir = tmp_path / "cc"
+    wl = batch_workloads(seq=8)
+    sub = {k: wl[k] for k in ("gpt2-medium",)}
+    jobs = ablation_jobs(sub, presets=["opt2", "opt5"], budget_units=64)
+    res = codo_opt_batch(jobs, cache=CompileCache(disk_dir=cache_dir),
+                         max_workers=1)
+    assert all(r.ok and not r.cache_hit for r in res)
+
+    proc = _fresh_interpreter(f"""
+        from repro.core import CompileCache
+        from repro.core.compiler import (ablation_jobs, batch_workloads,
+                                         codo_opt_batch)
+        wl = batch_workloads(seq=8)
+        jobs = ablation_jobs({{"gpt2-medium": wl["gpt2-medium"]}},
+                             presets=["opt2", "opt5"], budget_units=64)
+        res = codo_opt_batch(jobs, cache=CompileCache(disk_dir={str(cache_dir)!r}),
+                             max_workers=1)
+        assert all(r.ok and r.cache_hit for r in res), [r.error for r in res]
+        assert all(t.fn is not None
+                   for r in res for t in r.compiled.graph.tasks)
+        print("BATCH_RELOAD_OK")
+    """)
+    assert proc.returncode == 0, proc.stderr
+    assert "BATCH_RELOAD_OK" in proc.stdout

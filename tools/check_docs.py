@@ -1,0 +1,83 @@
+#!/usr/bin/env python
+"""Execute every fenced ```python code block in the given markdown files.
+
+    PYTHONPATH=src python tools/check_docs.py README.md docs/architecture.md
+
+Blocks in one file run top to bottom in a single shared namespace, so a
+document can build up an example across sections (exactly how a reader
+would follow it).  A block whose first line is ``# doc: skip`` is parsed
+(compiled) but not executed — for snippets that need unavailable hardware
+or external state.  Any exception fails the check with the offending file
+and block number, which makes this the CI gate that keeps the docs from
+drifting away from the API.
+"""
+
+from __future__ import annotations
+
+import pathlib
+import sys
+import traceback
+
+# Self-sufficient: doc blocks import repro.* regardless of PYTHONPATH.
+_SRC = str(pathlib.Path(__file__).resolve().parents[1] / "src")
+if _SRC not in sys.path:
+    sys.path.insert(0, _SRC)
+
+
+def extract_blocks(text: str) -> list[tuple[int, str]]:
+    """(starting line number, source) for every ```python fenced block.
+    Fences indented inside lists are supported: the fence's indentation is
+    stripped from every block line."""
+    blocks = []
+    lines = text.splitlines()
+    i = 0
+    while i < len(lines):
+        if lines[i].strip() == "```python":
+            indent = len(lines[i]) - len(lines[i].lstrip())
+            start = i + 1
+            j = start
+            while j < len(lines) and lines[j].strip() != "```":
+                j += 1
+            body = [ln[indent:] if ln[:indent].isspace() or not ln[:indent]
+                    else ln for ln in lines[start:j]]
+            blocks.append((start + 1, "\n".join(body)))
+            i = j + 1
+        else:
+            i += 1
+    return blocks
+
+
+def check_file(path: pathlib.Path) -> int:
+    text = path.read_text()
+    blocks = extract_blocks(text)
+    namespace: dict = {"__name__": f"doccheck_{path.stem}"}
+    failures = 0
+    for k, (lineno, src) in enumerate(blocks, 1):
+        skip = src.lstrip().startswith("# doc: skip")
+        try:
+            code = compile(src, f"{path}:block{k}(line {lineno})", "exec")
+            if not skip:
+                exec(code, namespace)
+        except Exception:
+            failures += 1
+            print(f"FAIL {path} block {k} (line {lineno}):", file=sys.stderr)
+            traceback.print_exc()
+        else:
+            print(f"ok   {path} block {k} (line {lineno})"
+                  + (" [compile-only]" if skip else ""))
+    print(f"{path}: {len(blocks)} python blocks, {failures} failures")
+    return failures
+
+
+def main(argv: list[str]) -> int:
+    if not argv:
+        print("usage: check_docs.py FILE.md [FILE.md ...]", file=sys.stderr)
+        return 2
+    total = 0
+    for name in argv:
+        total += check_file(pathlib.Path(name))
+    return 1 if total else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))
