@@ -1,14 +1,17 @@
 """Benchmark harness — one function per paper table/figure plus the
 roofline report.  Prints ``name,value,derived`` CSV and writes
-results/bench/*.csv.
+results/bench/*.csv; ``--json`` additionally collects every suite into
+one machine-readable document (what the nightly CI job uploads).
 
     PYTHONPATH=src python -m benchmarks.run              # everything
     PYTHONPATH=src python -m benchmarks.run --only table2,roofline
+    PYTHONPATH=src python -m benchmarks.run --json results/bench/bench.json
 """
 
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 import time
 from pathlib import Path
@@ -55,10 +58,13 @@ def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="all",
                     help=f"comma list of {sorted(SUITES)} + roofline")
+    ap.add_argument("--json", default="", metavar="PATH",
+                    help="also write every suite's rows to one JSON file")
     args = ap.parse_args(argv)
     wanted = None if args.only == "all" else set(args.only.split(","))
 
     OUT.mkdir(parents=True, exist_ok=True)
+    report: dict[str, object] = {}
     print("name,value,derived")
     for name, fn in SUITES.items():
         if wanted is not None and name not in wanted:
@@ -70,9 +76,20 @@ def main(argv=None) -> None:
                                          + "\n".join(lines) + "\n")
         for line in lines:
             print(line)
-        print(f"{name}/elapsed_s,{time.time() - t0:.2f},")
+        elapsed = time.time() - t0
+        print(f"{name}/elapsed_s,{elapsed:.2f},")
+        report[name] = {
+            "elapsed_s": round(elapsed, 3),
+            "rows": [{"name": r.name, "value": r.value, "derived": r.derived}
+                     for r in rows],
+        }
     if wanted is None or "roofline" in wanted:
         run_roofline()
+    if args.json:
+        path = Path(args.json)
+        path.parent.mkdir(parents=True, exist_ok=True)
+        path.write_text(json.dumps(report, indent=2, sort_keys=True) + "\n")
+        print(f"wrote {path} ({len(report)} suites)", file=sys.stderr)
 
 
 if __name__ == "__main__":

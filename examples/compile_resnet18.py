@@ -5,6 +5,7 @@ the resource/performance sweep of Fig. 11.
 
     PYTHONPATH=src python examples/compile_resnet18.py
     PYTHONPATH=src python examples/compile_resnet18.py --cache-dir /tmp/codo_cache
+    PYTHONPATH=src python examples/compile_resnet18.py --artifact /tmp/resnet18.json
 
 ResNet-18 is built from declarative op specs (``repro.core.ops``), so with
 ``--cache-dir`` the script proves the portable-artifact property: a fresh
@@ -20,7 +21,8 @@ import sys
 sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1] / "src"))
 
 from repro.core import (ABLATION_PRESETS, CodoOptions, CompileCache,  # noqa: E402
-                        codo_opt, lower)
+                        artifact_summary, codo_opt, export_artifact,
+                        import_artifact, lower)
 from repro.models.dataflow_models import random_inputs, resnet18  # noqa: E402
 
 
@@ -28,6 +30,9 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--cache-dir", default="",
                     help="disk compile-cache dir for the cold-restart demo")
+    ap.add_argument("--artifact", default="",
+                    help="export/import the opt5 design as a versioned JSON "
+                         "artifact at this path (docs/artifact_format.md)")
     args = ap.parse_args()
 
     g = resnet18(32)
@@ -65,6 +70,20 @@ def main():
         low = lower(reloaded, jit=False)
         out = low(random_inputs(resnet18(32)))
         print(f"  reloaded design executed: outputs {sorted(out)} ✓")
+
+    if args.artifact:
+        print(f"\n== portable artifact ({args.artifact}) ==")
+        export_artifact(c, args.artifact)
+        print(artifact_summary(args.artifact))
+        imported = import_artifact(args.artifact)
+        low = lower(imported, jit=False)
+        out = low(random_inputs(resnet18(32)))
+        print(f"  imported design executed: outputs {sorted(out)} ✓")
+        print("  CLI equivalents:")
+        print("    python -m repro.core.compiler --configs resnet18 "
+              "--opts opt5 --export artifacts/")
+        print(f"    python -m repro.core.compiler --import-artifact {args.artifact}")
+        print(f"    python -m repro.launch.serve --artifact {args.artifact}")
 
     print("\n== resource/performance trade-off (Fig. 11) ==")
     for budget in (128, 256, 512, 1024, 2048):

@@ -15,6 +15,12 @@ op registry provides: the compile is written to an on-disk cache, reloaded
 through a *fresh* cache instance (the in-process analogue of a new
 interpreter — run the script twice to see a true cold restart), and the
 reloaded design is lowered and executed without recompiling.
+
+With ``--artifact PATH`` it exports the compiled design as a versioned
+JSON artifact (docs/artifact_format.md), re-imports it, and verifies the
+imported design end to end — the same flow as the compiler CLI's
+``--export`` / ``--import-artifact`` verbs and ``repro.launch.serve
+--artifact``.
 """
 
 import argparse
@@ -23,8 +29,9 @@ import sys
 
 sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1] / "src"))
 
-from repro.core import (CompileCache, codo_opt, lower, verify_lowering,  # noqa: E402
-                        violation_report)
+from repro.core import (CompileCache, artifact_summary, codo_opt,  # noqa: E402
+                        export_artifact, import_artifact, lower,
+                        verify_lowering, violation_report)
 from repro.kernels import register_all  # noqa: E402
 from repro.models.dataflow_models import GB, random_inputs  # noqa: E402
 
@@ -42,6 +49,9 @@ def main():
     ap.add_argument("--cache-dir", default="",
                     help="disk compile-cache dir: demonstrates that a "
                          "reloaded (cold-restart) compile still executes")
+    ap.add_argument("--artifact", default="",
+                    help="also export/import the design as a versioned "
+                         "JSON artifact at this path")
     args = ap.parse_args()
 
     register_all()                     # route fusion groups to Pallas kernels
@@ -66,6 +76,20 @@ def main():
     env = random_inputs(g)
     verify_lowering(g, compiled, env)
     print("\nnumerics verified against the unoptimized oracle ✓")
+
+    if args.artifact:
+        print(f"\n== portable artifact (JSON at {args.artifact}) ==")
+        export_artifact(compiled, args.artifact)
+        print(artifact_summary(args.artifact))
+        imported = import_artifact(args.artifact)
+        assert (imported.graph.structural_hash()
+                == compiled.graph.structural_hash())
+        verify_lowering(build_motivating(), imported, env)
+        print("  imported design lowered, executed, and verified ✓")
+        print("  CLI equivalents:")
+        print("    python -m repro.core.compiler --import-artifact "
+              f"{args.artifact}")
+        print(f"    python -m repro.launch.serve --artifact {args.artifact}")
 
     if args.cache_dir:
         print(f"\n== cold-restart demo (disk cache at {args.cache_dir}) ==")

@@ -6,6 +6,9 @@ Public API:
                             graph_latency, autoschedule)
 """
 
+from .artifact import (SCHEMA_VERSION, ArtifactError, ArtifactWarning,
+                       artifact_summary, export_artifact, import_artifact,
+                       validate_artifact)
 from .buffers import BufferPlan, determine_buffers, downgrade_to_pingpong
 from .cache import CacheStats, CompileCache
 from .coarse import eliminate_coarse
@@ -18,8 +21,8 @@ from .graph import (FIFO, PINGPONG, Access, Buffer, DataflowGraph, Loop, Task,
                     conv2d_task, copy_task, ewise_task, full_index, idx,
                     matmul_task, pad_task, pool_task, reduce_task, retarget_fn)
 from .lowering import (LOWER_CACHE_STATS, LoweredProgram, clear_lower_cache,
-                       fusion_groups, lower, register_group_kernel,
-                       verify_lowering)
+                       fusion_groups, lower, lower_artifact,
+                       register_group_kernel, verify_lowering)
 from .offchip import TransferPlan, host_manifest, plan_offchip
 from .ops import (OpSpec, UnknownOpError, materialize, op_impl, register_op,
                   registered_ops)
@@ -31,22 +34,26 @@ from .reuse import generate_reuse_buffers, parallel_safety
 from .schedule import assign_stages, autoschedule
 
 __all__ = [
-    "ABLATION_PRESETS", "Access", "BatchJob", "BatchResult", "Buffer",
+    "ABLATION_PRESETS", "Access", "ArtifactError", "ArtifactWarning",
+    "BatchJob", "BatchResult", "Buffer",
     "BufferPlan", "CacheStats", "CodoOptions", "CompileCache",
     "CompileDiagnostics", "CompiledDataflow", "DataflowGraph", "FIFO",
     "GraphCost", "HwParams", "LOWER_CACHE_STATS", "Loop", "LoweredProgram",
     "OpSpec", "PINGPONG", "PASS_RUN_COUNTS", "Pass", "PassManager",
-    "PassRecord", "Task", "TransferPlan", "UnknownOpError", "V5E",
-    "ablation_jobs", "access_sig", "arrival_order", "assign_stages",
+    "PassRecord", "SCHEMA_VERSION", "Task", "TransferPlan", "UnknownOpError",
+    "V5E",
+    "ablation_jobs", "access_sig", "arrival_order", "artifact_summary",
+    "assign_stages",
     "autoschedule", "clear_lower_cache", "coarse_violations", "codo_opt",
     "codo_opt_batch", "conv2d_task", "copy_task", "default_cache",
     "default_manager", "default_passes", "determine_buffers",
     "downgrade_to_pingpong", "eliminate_coarse", "eliminate_fine",
-    "ewise_task", "fine_violations", "full_index", "fusion_groups",
-    "generate_reuse_buffers", "graph_latency", "host_manifest", "idx",
-    "lower", "materialize", "matmul_task", "op_impl", "pad_task",
+    "ewise_task", "export_artifact", "fine_violations", "full_index",
+    "fusion_groups", "generate_reuse_buffers", "graph_latency",
+    "host_manifest", "idx", "import_artifact", "lower", "lower_artifact",
+    "materialize", "matmul_task", "op_impl", "pad_task",
     "parallel_safety", "plan_offchip", "pool_task", "reduce_task",
     "register_group_kernel", "register_op", "registered_ops", "retarget_fn",
-    "sequential_latency", "task_cost", "verify_lowering",
-    "verify_violation_free", "violation_report",
+    "sequential_latency", "task_cost", "validate_artifact",
+    "verify_lowering", "verify_violation_free", "violation_report",
 ]

@@ -1,0 +1,618 @@
+"""Portable compiled-design artifacts: versioned JSON export/import.
+
+The paper's flow ends in a *product*: a violation-free graph plus a
+schedule and data-movement plan handed to downstream tooling.  This module
+makes that product a language-neutral, versioned JSON document —
+:func:`export_artifact` serializes a :class:`~repro.core.compiler.
+CompiledDataflow` and :func:`import_artifact` reconstructs a fully
+*executable* one (it lowers, executes, and passes ``verify_lowering``) in
+any process, including non-Python consumers reading the JSON directly.
+
+The field-by-field format contract lives in ``docs/artifact_format.md``
+(every example block there is executed by ``tools/check_docs.py`` in CI,
+so the spec cannot drift from this implementation).  In short, a document
+contains:
+
+``schema_version``     format version, ``"<major>.<minor>"``
+``graph``              topology: buffers (shape/dtype/kind/impl) + tasks
+                       (loop nests, accesses, declarative ``OpSpec``s)
+``options``            the :class:`CodoOptions` the design was compiled under
+``buffer_plan``        FIFO/ping-pong decision per internal edge
+``transfer_plan``      HBM channel + burst assignment
+``schedule``           parallel degrees + stage latencies (§VI report)
+``fusion``             FIFO-connected fusion groups (derived, cross-checked)
+``cost``               baseline/final cost-model summary
+``diagnostics``        per-pass timing + violation census
+``integrity``          the graph's ``structural_hash`` at export time
+
+Compatibility policy
+--------------------
+
+* **Unknown fields warn** (forward compatible): a newer writer may add
+  fields; readers ignore them with a :class:`ArtifactWarning`.
+* **Version mismatch fails**: a different *major* version raises
+  :class:`ArtifactError`; a newer *minor* version warns and proceeds.
+* **Corruption fails loudly**: validation reports every problem with its
+  JSON path, and the reconstructed graph must hash to the recorded
+  ``integrity.structural_hash`` (disable with ``check_integrity=False``
+  for deliberately hand-edited artifacts).
+
+Everything here is importable without jax — export/import are pure data
+transforms; only lowering/executing the imported design needs jax.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import warnings
+from pathlib import Path
+from typing import Any
+
+from .buffers import BufferPlan
+from .compiler import CodoOptions, CompiledDataflow
+from .costmodel import GraphCost, HwParams, graph_latency, sequential_latency
+from .graph import FIFO, PINGPONG, UNDECIDED, DataflowGraph, GraphError
+from .offchip import TransferPlan
+from .ops import OpSpec, op_impl, registered_ops
+from .passes import CompileDiagnostics
+from .patterns import coarse_violations
+from .schedule import ScheduleReport
+
+SCHEMA_VERSION = "1.0"
+
+# Tool identifier recorded in `generator`; consumers should key behaviour
+# on `schema_version`, never on this string.
+GENERATOR = "codo-repro"
+
+
+class ArtifactError(ValueError):
+    """A document failed validation, version, or integrity checks.  The
+    message lists every problem with its JSON path."""
+
+
+class ArtifactWarning(UserWarning):
+    """Forward-compat warnings: unknown fields, newer minor versions,
+    cost-model drift."""
+
+
+def _warn(msg: str) -> None:
+    warnings.warn(msg, ArtifactWarning, stacklevel=3)
+
+
+# --------------------------------------------------------------------------
+# Export
+# --------------------------------------------------------------------------
+
+
+def _fifo_groups(graph: DataflowGraph, impl: dict[str, str]) -> list[list[str]]:
+    """Maximal FIFO-connected task sets in topo order — the fusion decision
+    the artifact records.  Mirrors ``lowering.fusion_groups`` but stays
+    jax-free and does not mutate ``fused_group`` ids."""
+    parent = {t.name: t.name for t in graph.tasks}
+
+    def find(x: str) -> str:
+        while parent[x] != x:
+            parent[x] = parent[parent[x]]
+            x = parent[x]
+        return x
+
+    for p, buf, c in graph.internal_edges():
+        if impl.get(buf) == FIFO:
+            parent[find(p.name)] = find(c.name)
+
+    order = [t.name for t in graph.toposort()]
+    by_root: dict[str, list[str]] = {}
+    for n in order:
+        by_root.setdefault(find(n), []).append(n)
+    pos = {n: i for i, n in enumerate(order)}
+    return sorted(by_root.values(), key=lambda names: pos[names[0]])
+
+
+def export_artifact(compiled: CompiledDataflow,
+                    path: str | Path | None = None) -> dict:
+    """Serialize a compiled design to the versioned JSON artifact format.
+
+    Returns the document as a dict; when ``path`` is given, also writes it
+    as canonical JSON (sorted keys, 2-space indent).  Raises
+    :class:`ArtifactError` for closure-built tasks — closures cannot
+    serialize; build graphs with declarative ``OpSpec``s (``repro.core.
+    ops``) so the artifact stays executable after import.
+    """
+    g = compiled.graph
+    closures = [t.name for t in g.tasks if t.fn_is_closure]
+    if closures:
+        raise ArtifactError(
+            f"cannot export {g.name!r}: tasks {closures[:3]} carry raw "
+            "closure numerics, which do not serialize. Attach declarative "
+            "OpSpecs (repro.core.ops) instead — see docs/artifact_format.md.")
+    missing = [t.name for t in g.tasks if t.spec is None]
+    if missing:
+        raise ArtifactError(
+            f"cannot export {g.name!r}: tasks {missing[:3]} have no "
+            "numeric semantics (no OpSpec); the imported design could "
+            "never execute. Attach specs at graph construction.")
+
+    impl = compiled.buffer_plan.impl if compiled.buffer_plan else {}
+    doc: dict[str, Any] = {
+        "schema_version": SCHEMA_VERSION,
+        "generator": GENERATOR,
+        "graph": g.to_dict(),
+        "options": compiled.options.to_dict(),
+        "buffer_plan": (compiled.buffer_plan.to_dict()
+                        if compiled.buffer_plan else None),
+        "transfer_plan": (compiled.transfer_plan.to_dict()
+                          if compiled.transfer_plan else None),
+        "schedule": (compiled.schedule_report.to_dict()
+                     if compiled.schedule_report else None),
+        "fusion": {"groups": _fifo_groups(g, impl)},
+        "cost": {
+            "baseline_cycles": (compiled.baseline.total_cycles
+                                if compiled.baseline else None),
+            "final_cycles": (compiled.final.total_cycles
+                             if compiled.final else None),
+            "speedup": compiled.speedup,
+            "fifo_fraction": compiled.fifo_fraction,
+            "bottleneck": (compiled.final.bottleneck
+                           if compiled.final else None),
+            "units": compiled.final.units if compiled.final else None,
+        },
+        "diagnostics": (compiled.diagnostics.to_dict()
+                        if compiled.diagnostics else None),
+        "integrity": {"structural_hash": g.structural_hash()},
+    }
+    if path is not None:
+        Path(path).write_text(dumps(doc))
+    return doc
+
+
+def dumps(doc: dict) -> str:
+    """Canonical JSON text of an artifact document."""
+    return json.dumps(doc, indent=2, sort_keys=True) + "\n"
+
+
+# --------------------------------------------------------------------------
+# Validation
+# --------------------------------------------------------------------------
+
+_NUM = (int, float)
+_OPT_STR = (str, type(None))
+
+# Field tables: name -> (accepted types, required).  ``None`` types means
+# any JSON value (checked by a dedicated validator instead).
+_TOP_FIELDS = {
+    "schema_version": ((str,), True),
+    "generator": ((str,), False),
+    "graph": ((dict,), True),
+    "options": ((dict,), True),
+    "buffer_plan": ((dict, type(None)), False),
+    "transfer_plan": ((dict, type(None)), False),
+    "schedule": ((dict, type(None)), False),
+    "fusion": ((dict, type(None)), False),
+    "cost": ((dict, type(None)), False),
+    "diagnostics": ((dict, type(None)), False),
+    "integrity": ((dict, type(None)), False),
+}
+
+_GRAPH_FIELDS = {
+    "name": ((str,), True),
+    "buffers": ((list,), True),
+    "tasks": ((list,), True),
+}
+
+_BUFFER_FIELDS = {
+    "name": ((str,), True),
+    "shape": ((list,), True),
+    "dtype": ((str,), True),
+    "kind": ((str,), True),
+    "impl": ((str,), False),
+    "fifo_depth": (_NUM, False),
+    "hbm_channel": (_NUM, False),
+    "burst_len": (_NUM, False),
+}
+
+_TASK_FIELDS = {
+    "name": ((str,), True),
+    "loops": ((list,), True),
+    "reads": ((list,), True),
+    "writes": ((list,), True),
+    "op": ((str,), False),
+    "flops_per_iter": (_NUM, False),
+    "bytes_per_iter": (_NUM, False),
+    "fused_group": (_NUM, False),
+    "stage": (_NUM, False),
+    "reduction_rewritten": ((bool,), False),
+    "reuse_buffers": ((dict,), False),
+    "tags": ((list,), False),
+    "spec": ((dict, type(None)), False),
+}
+
+_LOOP_FIELDS = {
+    "var": ((str,), True),
+    "trip": (_NUM, True),
+    "parallel": (_NUM, False),
+    "tile": (_NUM, False),
+    "ring": ((str,), False),
+}
+
+_ACCESS_FIELDS = {
+    "buffer": ((str,), True),
+    "index": ((list,), True),
+    "is_write": ((bool,), True),
+    "enclosing": ((list, type(None)), False),
+    "stream_shape": ((list, type(None)), False),
+}
+
+_SPEC_FIELDS = {
+    "kind": ((str,), True),
+    "ins": ((list,), False),
+    "outs": ((list,), False),
+    "attrs": ((dict,), False),
+    "parts": ((list,), False),
+}
+
+_COST_FIELDS = {
+    "baseline_cycles": (_NUM + (type(None),), False),
+    "final_cycles": (_NUM + (type(None),), False),
+    "speedup": (_NUM, False),
+    "fifo_fraction": (_NUM, False),
+    "bottleneck": (_OPT_STR, False),
+    "units": (_NUM + (type(None),), False),
+}
+
+_INTEGRITY_FIELDS = {
+    "structural_hash": ((str,), False),
+}
+
+# Known option/hw field names: unknown entries warn and are dropped on
+# import (same forward-compat stance as everywhere else in the document —
+# the cost cross-check flags any semantic consequence).
+_OPTIONS_KNOWN = {f.name for f in dataclasses.fields(CodoOptions)}
+_HW_KNOWN = {f.name for f in dataclasses.fields(HwParams)}
+
+_BUFFER_KINDS = ("input", "weight", "intermediate", "output")
+_IMPLS = (FIFO, PINGPONG, UNDECIDED)
+
+
+def _check_fields(doc: dict, path: str, fields: dict,
+                  errors: list[str], notes: list[str]) -> None:
+    for name, (types, required) in fields.items():
+        if name not in doc:
+            if required:
+                errors.append(f"{path}.{name}: missing required field")
+            continue
+        v = doc[name]
+        if not isinstance(v, types):
+            want = "|".join(t.__name__ for t in types)
+            errors.append(f"{path}.{name}: expected {want}, "
+                          f"got {type(v).__name__}")
+    for k in doc:
+        if k not in fields:
+            notes.append(f"{path}.{k}: unknown field (ignored — written by a "
+                         "newer schema minor version?)")
+
+
+def _check_spec(doc: dict, path: str, errors: list[str],
+                notes: list[str]) -> None:
+    _check_fields(doc, path, _SPEC_FIELDS, errors, notes)
+    for i, part in enumerate(doc.get("parts", ()) or ()):
+        if isinstance(part, dict):
+            _check_spec(part, f"{path}.parts[{i}]", errors, notes)
+        else:
+            errors.append(f"{path}.parts[{i}]: expected object, "
+                          f"got {type(part).__name__}")
+
+
+def _check_graph(doc: dict, errors: list[str], notes: list[str]) -> None:
+    _check_fields(doc, "graph", _GRAPH_FIELDS, errors, notes)
+    buf_names = set()
+    for i, b in enumerate(doc.get("buffers") or ()):
+        p = f"graph.buffers[{i}]"
+        if not isinstance(b, dict):
+            errors.append(f"{p}: expected object, got {type(b).__name__}")
+            continue
+        _check_fields(b, p, _BUFFER_FIELDS, errors, notes)
+        name = b.get("name")
+        if name in buf_names:
+            errors.append(f"{p}.name: duplicate buffer {name!r}")
+        buf_names.add(name)
+        if b.get("kind") not in (None,) + _BUFFER_KINDS:
+            errors.append(f"{p}.kind: {b['kind']!r} not one of {_BUFFER_KINDS}")
+        if b.get("impl") not in (None,) + _IMPLS:
+            errors.append(f"{p}.impl: {b['impl']!r} not one of {_IMPLS}")
+    task_names = set()
+    for i, t in enumerate(doc.get("tasks") or ()):
+        p = f"graph.tasks[{i}]"
+        if not isinstance(t, dict):
+            errors.append(f"{p}: expected object, got {type(t).__name__}")
+            continue
+        _check_fields(t, p, _TASK_FIELDS, errors, notes)
+        name = t.get("name")
+        if name in task_names:
+            errors.append(f"{p}.name: duplicate task {name!r}")
+        task_names.add(name)
+        for j, l in enumerate(t.get("loops") or ()):
+            if isinstance(l, dict):
+                _check_fields(l, f"{p}.loops[{j}]", _LOOP_FIELDS, errors, notes)
+            else:
+                errors.append(f"{p}.loops[{j}]: expected object, "
+                              f"got {type(l).__name__}")
+        for side in ("reads", "writes"):
+            for j, a in enumerate(t.get(side) or ()):
+                q = f"{p}.{side}[{j}]"
+                if not isinstance(a, dict):
+                    errors.append(f"{q}: expected object, "
+                                  f"got {type(a).__name__}")
+                    continue
+                _check_fields(a, q, _ACCESS_FIELDS, errors, notes)
+                if (isinstance(a.get("buffer"), str)
+                        and a["buffer"] not in buf_names):
+                    errors.append(f"{q}.buffer: {a['buffer']!r} is not a "
+                                  "declared graph buffer")
+        spec = t.get("spec")
+        if isinstance(spec, dict):
+            _check_spec(spec, f"{p}.spec", errors, notes)
+
+
+def _parse_version(v: str) -> tuple[int, int]:
+    try:
+        major, minor = v.split(".")
+        return int(major), int(minor)
+    except Exception:
+        raise ArtifactError(
+            f"schema_version: {v!r} is not '<major>.<minor>'") from None
+
+
+def validate_artifact(doc: Any) -> list[str]:
+    """Strict structural validation of an artifact document.
+
+    Returns the list of forward-compat notes (unknown fields — the caller
+    decides whether to warn).  Raises :class:`ArtifactError` naming every
+    hard problem with its JSON path: missing/ill-typed fields, duplicate
+    names, dangling buffer references, bad enum values, or an incompatible
+    ``schema_version`` major.
+    """
+    if not isinstance(doc, dict):
+        raise ArtifactError(
+            f"artifact root: expected a JSON object, got "
+            f"{type(doc).__name__} — is this file an exported artifact?")
+    errors: list[str] = []
+    notes: list[str] = []
+    _check_fields(doc, "artifact", _TOP_FIELDS, errors, notes)
+
+    version = doc.get("schema_version")
+    if isinstance(version, str):
+        major, minor = _parse_version(version)
+        ours = _parse_version(SCHEMA_VERSION)
+        if major != ours[0]:
+            errors.append(
+                f"schema_version: artifact is v{version}, this reader "
+                f"understands v{SCHEMA_VERSION} (same major only) — "
+                "re-export with a matching codo version")
+        elif (major, minor) > ours:
+            notes.append(
+                f"schema_version: artifact v{version} is newer than this "
+                f"reader (v{SCHEMA_VERSION}); unknown fields are ignored")
+
+    if isinstance(doc.get("graph"), dict):
+        _check_graph(doc["graph"], errors, notes)
+    if isinstance(doc.get("cost"), dict):
+        _check_fields(doc["cost"], "cost", _COST_FIELDS, errors, notes)
+    if isinstance(doc.get("integrity"), dict):
+        _check_fields(doc["integrity"], "integrity", _INTEGRITY_FIELDS,
+                      errors, notes)
+    opts = doc.get("options")
+    if isinstance(opts, dict):
+        for k in set(opts) - _OPTIONS_KNOWN:
+            notes.append(f"options.{k}: unknown field (ignored — forward-"
+                         "compat; the cost cross-check flags semantic drift)")
+        hw = opts.get("hw")
+        if isinstance(hw, dict):
+            for k in set(hw) - _HW_KNOWN:
+                notes.append(f"options.hw.{k}: unknown field (ignored — "
+                             "forward-compat)")
+    plan = doc.get("buffer_plan")
+    if isinstance(plan, dict):
+        buf_names = {b.get("name") for b in
+                     (doc.get("graph") or {}).get("buffers") or ()
+                     if isinstance(b, dict)}
+        for name, impl in (plan.get("impl") or {}).items():
+            if name not in buf_names:
+                errors.append(f"buffer_plan.impl.{name}: not a graph buffer")
+            if impl not in _IMPLS:
+                errors.append(f"buffer_plan.impl.{name}: {impl!r} not one "
+                              f"of {_IMPLS}")
+    if errors:
+        raise ArtifactError(
+            "invalid artifact (%d problem%s):\n  " %
+            (len(errors), "s" if len(errors) != 1 else "")
+            + "\n  ".join(errors))
+    return notes
+
+
+# --------------------------------------------------------------------------
+# Import
+# --------------------------------------------------------------------------
+
+
+def _load(source: str | Path | dict) -> dict:
+    if isinstance(source, dict):
+        return source
+    path = Path(source)
+    try:
+        text = path.read_text()
+    except OSError as e:
+        raise ArtifactError(f"cannot read artifact {path}: {e}") from e
+    try:
+        return json.loads(text)
+    except json.JSONDecodeError as e:
+        raise ArtifactError(
+            f"{path} is not valid JSON (line {e.lineno}: {e.msg}) — "
+            "artifact truncated or corrupted?") from e
+
+
+def _check_ops_registered(spec: OpSpec, task: str) -> None:
+    try:
+        op_impl(spec.kind)
+    except KeyError:
+        raise ArtifactError(
+            f"task {task!r}: op kind {spec.kind!r} has no registered "
+            f"implementation (registered: {registered_ops()}). Import the "
+            "module that registers it (e.g. repro.kernels.register_all()) "
+            "before import_artifact, or register_op yours.") from None
+    for part in spec.parts:
+        _check_ops_registered(part, task)
+
+
+def import_artifact(source: str | Path | dict, *,
+                    check_integrity: bool = True) -> CompiledDataflow:
+    """Reconstruct an executable :class:`CompiledDataflow` from an artifact.
+
+    ``source`` is a path to a JSON file or an already-parsed document.
+    The result lowers, executes, and verifies like a freshly compiled
+    design — every task re-derives its numerics from its ``OpSpec``
+    through the op registry of *this* process.
+
+    Validation is strict (see :func:`validate_artifact`); unknown fields
+    and version-minor skew emit :class:`ArtifactWarning`.  With
+    ``check_integrity`` (default), the reconstructed graph must hash to
+    the recorded ``integrity.structural_hash`` — pass ``False`` to accept
+    deliberately hand-edited artifacts.
+    """
+    doc = _load(source)
+    for note in validate_artifact(doc):
+        _warn(note)
+
+    try:
+        graph = DataflowGraph.from_dict(doc["graph"])
+    except GraphError as e:
+        raise ArtifactError(f"graph does not reconstruct: {e}") from e
+    for t in graph.tasks:
+        if t.spec is not None:
+            _check_ops_registered(t.spec, t.name)
+
+    recorded = (doc.get("integrity") or {}).get("structural_hash")
+    if check_integrity and recorded:
+        got = graph.structural_hash()
+        if got != recorded:
+            raise ArtifactError(
+                f"integrity check failed: reconstructed graph hashes to "
+                f"{got[:16]}…, artifact records {recorded[:16]}… — the "
+                "document was modified after export (pass "
+                "check_integrity=False to import an edited artifact).")
+
+    # Unknown option/hw fields were noted by validate_artifact; drop them
+    # here so forward-compat documents reconstruct (known fields still
+    # apply and the cost cross-check below flags semantic drift).
+    opts_doc = {k: v for k, v in doc["options"].items()
+                if k in _OPTIONS_KNOWN}
+    if isinstance(opts_doc.get("hw"), dict):
+        opts_doc["hw"] = {k: v for k, v in opts_doc["hw"].items()
+                          if k in _HW_KNOWN}
+    try:
+        options = CodoOptions.from_dict(opts_doc)
+    except (KeyError, TypeError) as e:
+        raise ArtifactError(f"options do not reconstruct: {e}") from e
+
+    def _section(name: str, ctor, payload):
+        if not payload:
+            return None
+        try:
+            return ctor(payload)
+        except (KeyError, TypeError, ValueError) as e:
+            raise ArtifactError(
+                f"{name} does not reconstruct ({type(e).__name__}: {e}) — "
+                "corrupted values?") from e
+
+    out = CompiledDataflow(
+        graph, options,
+        buffer_plan=_section("buffer_plan", BufferPlan.from_dict,
+                             doc.get("buffer_plan")),
+        transfer_plan=_section("transfer_plan", TransferPlan.from_dict,
+                               doc.get("transfer_plan")),
+        schedule_report=_section("schedule", ScheduleReport.from_dict,
+                                 doc.get("schedule")),
+        diagnostics=_section("diagnostics", CompileDiagnostics.from_dict,
+                             doc.get("diagnostics")),
+    )
+
+    # Fusion cross-check: the groups are derivable from graph + plan, so a
+    # stored section that disagrees means the document is inconsistent.
+    stored = (doc.get("fusion") or {}).get("groups")
+    impl = out.buffer_plan.impl if out.buffer_plan else {}
+    if stored is not None:
+        derived = _fifo_groups(graph, impl)
+        if [list(g) for g in stored] != derived:
+            raise ArtifactError(
+                "fusion.groups disagree with the groups derived from the "
+                "graph + buffer_plan — artifact edited inconsistently? "
+                f"(stored {len(stored)} groups, derived {len(derived)})")
+
+    # The final cost is recomputed (the model is deterministic pure Python
+    # over the stored graph); the recorded summary cross-checks for
+    # cost-model drift across versions.  The *baseline* measured the
+    # pre-optimization source graph, which the artifact does not carry
+    # (passes insert duplicators and rewrite accesses), so it is restored
+    # from the recorded cycles — falling back to the optimized graph's
+    # sequential latency when the optional `cost` section is absent.
+    sequential = bool(coarse_violations(graph))
+    out.final = graph_latency(graph, options.hw, out.buffer_plan,
+                              sequential=sequential)
+    cost = doc.get("cost") or {}
+    base = cost.get("baseline_cycles")
+    if base is not None:
+        out.baseline = GraphCost(
+            total_cycles=float(base), start={}, finish={}, costs={},
+            bottleneck="", units=0, vmem_bytes=0,
+            seconds=float(base) / options.hw.clock_hz)
+    else:
+        out.baseline = sequential_latency(graph, options.hw)
+    recorded_final = cost.get("final_cycles")
+    if recorded_final is not None and out.final.total_cycles:
+        drift = abs(recorded_final - out.final.total_cycles) \
+            / max(out.final.total_cycles, 1.0)
+        if drift > 1e-6:
+            _warn(f"cost-model drift: artifact records "
+                  f"{recorded_final:,.0f} final cycles, this version "
+                  f"computes {out.final.total_cycles:,.0f} "
+                  f"({drift:.1%}) — exported by a different codo version?")
+    return out
+
+
+# --------------------------------------------------------------------------
+# Inspection
+# --------------------------------------------------------------------------
+
+
+def artifact_summary(source: str | Path | dict) -> str:
+    """One-paragraph human summary of an artifact (used by the CLI's
+    ``--import-artifact`` verb and handy in notebooks)."""
+    doc = _load(source)
+    g = doc.get("graph") or {}
+    cost = doc.get("cost") or {}
+    plan = doc.get("buffer_plan") or {}
+    impl = plan.get("impl") or {}
+    fifo = sum(1 for v in impl.values() if v == FIFO)
+    groups = (doc.get("fusion") or {}).get("groups") or []
+    lines = [
+        f"artifact {g.get('name', '?')} (schema v{doc.get('schema_version')})",
+        f"  {len(g.get('tasks') or ())} tasks, "
+        f"{len(g.get('buffers') or ())} buffers; "
+        f"{fifo}/{len(impl)} internal edges FIFO; "
+        f"{len(groups)} fusion groups",
+    ]
+    if cost.get("final_cycles") is not None:
+        lines.append(
+            f"  cost: {cost['final_cycles']:,.0f} cycles "
+            f"({cost.get('speedup', 1.0):.1f}x vs sequential), "
+            f"bottleneck={cost.get('bottleneck')}")
+    sched = doc.get("schedule") or {}
+    if sched:
+        lines.append(f"  schedule: units={sched.get('units_used')}, "
+                     f"{len(sched.get('degrees') or {})} tasks scheduled")
+    return "\n".join(lines)
+
+
+__all__ = ["SCHEMA_VERSION", "ArtifactError", "ArtifactWarning",
+           "artifact_summary", "dumps", "export_artifact", "import_artifact",
+           "validate_artifact"]

@@ -56,6 +56,21 @@ class BufferPlan:
                 f"({self.fifo_fraction():.0%} FIFO), vmem={self.vmem_bytes}B "
                 f"hbm={self.hbm_bytes}B")
 
+    # ---- JSON serialization (docs/artifact_format.md `buffer_plan`) ------
+    def to_dict(self) -> dict:
+        return {"impl": dict(self.impl), "fifo_depth": dict(self.fifo_depth),
+                "reasons": dict(self.reasons), "vmem_bytes": self.vmem_bytes,
+                "hbm_bytes": self.hbm_bytes}
+
+    @classmethod
+    def from_dict(cls, doc: dict) -> "BufferPlan":
+        return cls(impl=dict(doc.get("impl", {})),
+                   fifo_depth={k: int(v)
+                               for k, v in doc.get("fifo_depth", {}).items()},
+                   reasons=dict(doc.get("reasons", {})),
+                   vmem_bytes=int(doc.get("vmem_bytes", 0)),
+                   hbm_bytes=int(doc.get("hbm_bytes", 0)))
+
 
 def _fifo_depth(graph: DataflowGraph, buffer: str) -> int:
     """In-flight elements between producer emit and consumer consume.

@@ -28,6 +28,16 @@ tier), or threads via ``codo_opt_batch(..., executor="thread")``:
 
     python -m repro.core.compiler --all --ablations --jobs 4   # Table VII grid
     python -m repro.core.compiler --configs gpt2-medium,mamba2-780m --opts opt5
+
+Compiled designs are portable: ``--export DIR`` writes every grid cell as
+a versioned JSON artifact (docs/artifact_format.md), and
+``--import-artifact PATH`` reconstructs an executable design from one —
+no recompile, any process.  ``--profile`` prints the per-pass timing
+table aggregated from each compile's :class:`CompileDiagnostics`:
+
+    python -m repro.core.compiler --configs gpt2-medium --export artifacts/
+    python -m repro.core.compiler --import-artifact artifacts/gpt2-medium-opt5.json
+    python -m repro.core.compiler --all --ablations --profile
 """
 
 from __future__ import annotations
@@ -142,6 +152,24 @@ class CodoOptions:
                     for f in dataclasses.fields(self))
         return hashlib.sha256(repr(sig).encode()).hexdigest()
 
+    # ---- JSON serialization (docs/artifact_format.md `options`) -----------
+    def to_dict(self) -> dict:
+        out = {f.name: getattr(self, f.name) for f in dataclasses.fields(self)
+               if f.name != "hw"}
+        out["hw"] = dataclasses.asdict(self.hw)
+        return out
+
+    @classmethod
+    def from_dict(cls, doc: dict) -> "CodoOptions":
+        doc = dict(doc)
+        hw = doc.pop("hw", None)
+        known = {f.name for f in dataclasses.fields(cls)}
+        unknown = set(doc) - known
+        if unknown:
+            raise KeyError(f"unknown CodoOptions fields {sorted(unknown)}; "
+                           f"known: {sorted(known)}")
+        return cls(**doc, hw=HwParams(**hw) if hw is not None else V5E)
+
 
 @dataclass
 class CompiledDataflow:
@@ -206,7 +234,8 @@ def default_manager() -> PassManager:
 
 def default_cache() -> CompileCache:
     """Process-wide cache; ``CODO_CACHE_SIZE``/``CODO_CACHE_DIR`` configure
-    the LRU size and the optional disk tier."""
+    the LRU size and the optional disk tier (``CODO_CACHE_JSON=1`` mirrors
+    disk entries as inspectable JSON artifacts)."""
     global _DEFAULT_CACHE
     if _DEFAULT_CACHE is None:
         _DEFAULT_CACHE = CompileCache(
@@ -348,9 +377,11 @@ def _run_job(job: BatchJob, cache, manager) -> BatchResult:
 _WORKER_CACHE: CompileCache | None = None
 
 
-def _init_batch_worker(disk_dir: str | None, use_cache: bool) -> None:
+def _init_batch_worker(disk_dir: str | None, use_cache: bool,
+                       json_mirror: bool = False) -> None:
     global _WORKER_CACHE
-    _WORKER_CACHE = CompileCache(disk_dir=disk_dir) if use_cache else None
+    _WORKER_CACHE = (CompileCache(disk_dir=disk_dir, json_mirror=json_mirror)
+                     if use_cache else None)
 
 
 def _run_job_in_worker(job: BatchJob) -> BatchResult:
@@ -413,7 +444,8 @@ def codo_opt_batch(jobs, *, max_workers: int | None = None,
         with ProcessPoolExecutor(
                 max_workers=min(workers, len(jobs)), mp_context=_mp_context(),
                 initializer=_init_batch_worker,
-                initargs=(disk_dir, cache is not None)) as pool:
+                initargs=(disk_dir, cache is not None,
+                          bool(cache is not None and cache.json_mirror))) as pool:
             return list(pool.map(_run_job_in_worker, jobs))
 
     if workers <= 1 or len(jobs) <= 1:
@@ -445,6 +477,38 @@ def batch_workloads(seq: int = 64):
                  for name, cfg in sorted(CONFIGS.items())}
     workloads["resnet18"] = _resnet18_workload
     return workloads
+
+
+# --------------------------------------------------------------------------
+# Pass profile (CLI --profile)
+# --------------------------------------------------------------------------
+
+
+def profile_table(diagnostics) -> str:
+    """Aggregate per-pass timing across many :class:`CompileDiagnostics`
+    into the ``--profile`` table: calls, total/mean wall time, and share
+    of all pass time.  Cache hits carry no pass records and are skipped."""
+    totals: dict[str, float] = {}
+    calls: dict[str, int] = {}
+    compiles = 0
+    for d in diagnostics:
+        if d is None or d.cache_hit or not d.records:
+            continue
+        compiles += 1
+        for r in d.records:
+            totals[r.name] = totals.get(r.name, 0.0) + r.seconds
+            calls[r.name] = calls.get(r.name, 0) + 1
+    if not totals:
+        return "profile: no pass records (every compile was a cache hit)"
+    grand = sum(totals.values())
+    lines = [f"-- pass profile: {compiles} compiles, "
+             f"{grand * 1e3:.1f} ms in passes --",
+             f"  {'pass':<10s} {'calls':>5s} {'total ms':>10s} "
+             f"{'mean ms':>9s} {'share':>6s}"]
+    for name, tot in sorted(totals.items(), key=lambda kv: -kv[1]):
+        lines.append(f"  {name:<10s} {calls[name]:>5d} {tot * 1e3:>10.2f} "
+                     f"{tot / calls[name] * 1e3:>9.2f} {tot / grand:>6.1%}")
+    return "\n".join(lines)
 
 
 # --------------------------------------------------------------------------
@@ -487,7 +551,25 @@ def main(argv=None) -> int:
                     help="drop existing disk-cache entries first")
     ap.add_argument("--csv", default="", help="also write the grid to this CSV file")
     ap.add_argument("--list", action="store_true", help="list configs and exit")
+    ap.add_argument("--profile", action="store_true",
+                    help="print the per-pass timing table aggregated from "
+                         "CompileDiagnostics")
+    ap.add_argument("--export", default="", metavar="DIR",
+                    help="export every compiled cell as a versioned JSON "
+                         "artifact to DIR (docs/artifact_format.md)")
+    ap.add_argument("--import-artifact", default="", metavar="PATH",
+                    help="import one exported artifact, print its report, "
+                         "and exit (ignores the grid options)")
     args = ap.parse_args(argv)
+
+    if args.import_artifact:
+        from .artifact import artifact_summary, import_artifact
+        compiled = import_artifact(args.import_artifact)
+        print(artifact_summary(args.import_artifact))
+        print(compiled.report())
+        if args.profile and compiled.diagnostics is not None:
+            print(compiled.diagnostics.table())
+        return 0
 
     workloads = batch_workloads(seq=args.seq)
     if args.list:
@@ -550,6 +632,24 @@ def main(argv=None) -> int:
             print(cache.stats.summary())
     for r in errors:
         print(f"ERROR {r.config}/{r.preset}: {r.error}", file=sys.stderr)
+    if args.profile:
+        print()
+        print(profile_table(r.compiled.diagnostics for r in results if r.ok))
+    if args.export:
+        from .artifact import export_artifact
+        os.makedirs(args.export, exist_ok=True)
+        exported = 0
+        for r in results:
+            if not r.ok:
+                continue
+            try:
+                export_artifact(r.compiled, os.path.join(
+                    args.export, f"{r.config}-{r.preset}.json"))
+                exported += 1
+            except Exception as e:
+                print(f"EXPORT FAIL {r.config}/{r.preset}: {e}",
+                      file=sys.stderr)
+        print(f"exported {exported}/{len(results)} artifacts to {args.export}")
     if args.csv:
         with open(args.csv, "w") as f:
             f.write(_fallback_grid(results) + "\n")

@@ -280,6 +280,105 @@ def _task_fn_set(self: Task, value: Callable[[dict], dict] | None) -> None:
 Task.fn = property(_task_fn_get, _task_fn_set)
 
 
+# --------------------------------------------------------------------------
+# JSON views (docs/artifact_format.md).  Index expressions serialize as
+# [[var, stride], ...] per array dim; None distinguishes "unset" from an
+# empty tuple for ``enclosing``/``stream_shape``.
+# --------------------------------------------------------------------------
+
+
+def _index_to_json(index: tuple[IndexExpr, ...]) -> list:
+    return [[[v, s] for (v, s) in dim] for dim in index]
+
+
+def _index_from_json(doc) -> tuple[IndexExpr, ...]:
+    return tuple(tuple((str(v), int(s)) for (v, s) in dim) for dim in doc)
+
+
+def _access_to_dict(a: Access) -> dict:
+    return {
+        "buffer": a.buffer,
+        "index": _index_to_json(a.index),
+        "is_write": a.is_write,
+        "enclosing": None if a.enclosing is None else list(a.enclosing),
+        "stream_shape": None if a.stream_shape is None else list(a.stream_shape),
+    }
+
+
+def _access_from_dict(doc: dict) -> Access:
+    enc = doc.get("enclosing")
+    ss = doc.get("stream_shape")
+    return Access(
+        buffer=doc["buffer"],
+        index=_index_from_json(doc["index"]),
+        is_write=bool(doc["is_write"]),
+        enclosing=None if enc is None else tuple(str(v) for v in enc),
+        stream_shape=None if ss is None else tuple(int(s) for s in ss),
+    )
+
+
+def _buffer_to_dict(b: Buffer) -> dict:
+    return {
+        "name": b.name, "shape": list(b.shape),
+        "dtype": np.dtype(b.dtype).name, "kind": b.kind, "impl": b.impl,
+        "fifo_depth": b.fifo_depth, "hbm_channel": b.hbm_channel,
+        "burst_len": b.burst_len,
+    }
+
+
+def _buffer_from_dict(doc: dict) -> Buffer:
+    return Buffer(
+        name=doc["name"], shape=tuple(int(s) for s in doc["shape"]),
+        dtype=np.dtype(doc.get("dtype", "float32")),
+        kind=doc.get("kind", "intermediate"),
+        impl=doc.get("impl", UNDECIDED),
+        fifo_depth=int(doc.get("fifo_depth", 0)),
+        hbm_channel=int(doc.get("hbm_channel", -1)),
+        burst_len=int(doc.get("burst_len", 0)),
+    )
+
+
+def _task_to_dict(t: Task) -> dict:
+    return {
+        "name": t.name,
+        "loops": [{"var": l.var, "trip": l.trip, "parallel": l.parallel,
+                   "tile": l.tile, "ring": l.ring} for l in t.loops],
+        "reads": [_access_to_dict(a) for a in t.reads],
+        "writes": [_access_to_dict(a) for a in t.writes],
+        "op": t.op,
+        "flops_per_iter": t.flops_per_iter,
+        "bytes_per_iter": t.bytes_per_iter,
+        "fused_group": t.fused_group,
+        "stage": t.stage,
+        "reduction_rewritten": t.reduction_rewritten,
+        "reuse_buffers": {k: list(v) for k, v in t.reuse_buffers.items()},
+        "tags": sorted(t.tags),
+        "spec": t.spec.to_dict() if t.spec is not None else None,
+    }
+
+
+def _task_from_dict(doc: dict) -> Task:
+    spec = doc.get("spec")
+    return Task(
+        name=doc["name"],
+        loops=[Loop(l["var"], int(l["trip"]), int(l.get("parallel", 1)),
+                    int(l.get("tile", 0)), l.get("ring", "free"))
+               for l in doc["loops"]],
+        reads=[_access_from_dict(a) for a in doc.get("reads", ())],
+        writes=[_access_from_dict(a) for a in doc.get("writes", ())],
+        op=doc.get("op", "generic"),
+        flops_per_iter=float(doc.get("flops_per_iter", 1.0)),
+        bytes_per_iter=float(doc.get("bytes_per_iter", 0.0)),
+        spec=None if spec is None else OpSpec.from_dict(spec),
+        fused_group=int(doc.get("fused_group", -1)),
+        stage=int(doc.get("stage", -1)),
+        reduction_rewritten=bool(doc.get("reduction_rewritten", False)),
+        reuse_buffers={k: tuple(int(s) for s in v)
+                       for k, v in doc.get("reuse_buffers", {}).items()},
+        tags=set(doc.get("tags", ())),
+    )
+
+
 def retarget_fn(fn: Callable[[dict], dict], alias: dict[str, str]) -> Callable[[dict], dict]:
     """Wrap a task fn so that buffer renames stay numerically transparent.
 
@@ -435,6 +534,30 @@ class DataflowGraph:
         g = DataflowGraph(self.name)
         g.buffers = {k: v.copy() for k, v in self.buffers.items()}
         g.tasks = [t.copy() for t in self.tasks]
+        return g
+
+    # --- JSON serialization ---------------------------------------------------
+    # The graph side of the portable-artifact format: a language-neutral
+    # dict covering everything ``structural_signature()`` covers (so a
+    # round-trip preserves the structural hash) *except* closure ``fn``
+    # overrides, which cannot serialize — spec-carrying graphs round-trip
+    # executable.  Versioning/validation live in ``repro.core.artifact``;
+    # the field-by-field contract is docs/artifact_format.md.
+    def to_dict(self) -> dict:
+        return {
+            "name": self.name,
+            "buffers": [_buffer_to_dict(b) for b in self.buffers.values()],
+            "tasks": [_task_to_dict(t) for t in self.tasks],
+        }
+
+    @classmethod
+    def from_dict(cls, doc: dict) -> "DataflowGraph":
+        g = cls(doc["name"])
+        for b in doc.get("buffers", ()):
+            g.add_buffer(_buffer_from_dict(b))
+        for t in doc.get("tasks", ()):
+            g.add_task(_task_from_dict(t))
+        g.validate()
         return g
 
     # --- content addressing ---------------------------------------------------

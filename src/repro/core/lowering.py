@@ -211,6 +211,20 @@ def lower(compiled: CompiledDataflow, jit: bool = True,
     return out
 
 
+def lower_artifact(source, *, jit: bool = True,
+                   use_registered_kernels: bool = True, memo: bool = True,
+                   check_integrity: bool = True) -> LoweredProgram:
+    """One-step path from an exported JSON artifact (a file path or parsed
+    document — see docs/artifact_format.md) to an executable program:
+    ``import_artifact`` + :func:`lower`.  The artifact must have been
+    exported from a spec-carrying design; op kinds resolve against this
+    process's registry."""
+    from .artifact import import_artifact  # lazy: artifact stays jax-free
+    return lower(import_artifact(source, check_integrity=check_integrity),
+                 jit=jit, use_registered_kernels=use_registered_kernels,
+                 memo=memo)
+
+
 def oracle_outputs(source_graph: DataflowGraph, env: dict) -> dict:
     """Run the *un-optimized* program — the golden reference the paper's
     auto-generated testbench compares against (§VII-C)."""

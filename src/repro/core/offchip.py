@@ -53,6 +53,25 @@ class TransferPlan:
                 f"bw_util={self.bandwidth_util:.2f}, "
                 f"max_channel={max(self.channel_bytes) if self.channel_bytes else 0}B")
 
+    # ---- JSON serialization (docs/artifact_format.md `transfer_plan`) ----
+    def to_dict(self) -> dict:
+        return {"channel_of": dict(self.channel_of),
+                "burst_len": dict(self.burst_len),
+                "padded_shape": {k: list(v)
+                                 for k, v in self.padded_shape.items()},
+                "channel_bytes": list(self.channel_bytes),
+                "bandwidth_util": self.bandwidth_util}
+
+    @classmethod
+    def from_dict(cls, doc: dict) -> "TransferPlan":
+        return cls(
+            channel_of={k: int(v) for k, v in doc.get("channel_of", {}).items()},
+            burst_len={k: int(v) for k, v in doc.get("burst_len", {}).items()},
+            padded_shape={k: tuple(int(s) for s in v)
+                          for k, v in doc.get("padded_shape", {}).items()},
+            channel_bytes=[int(b) for b in doc.get("channel_bytes", ())],
+            bandwidth_util=float(doc.get("bandwidth_util", 0.0)))
+
 
 def _burst(shape: tuple[int, ...]) -> int:
     """Contiguous innermost extent (elements) of a row-major layout."""

@@ -151,6 +151,25 @@ class OpSpec:
                 tuple(sorted((k, repr(v)) for k, v in self.attrs.items())),
                 tuple(p.signature() for p in self.parts))
 
+    # ---- JSON serialization (docs/artifact_format.md `spec` object) ------
+    def to_dict(self) -> dict:
+        """Language-neutral JSON view.  Tuples inside ``attrs`` become JSON
+        arrays; :meth:`from_dict` restores them through ``__post_init__``'s
+        canonicalization, so ``from_dict(to_dict(s)).signature() ==
+        s.signature()`` holds for every spec obeying the plain-data
+        contract."""
+        out: dict = {"kind": self.kind, "ins": list(self.ins),
+                     "outs": list(self.outs), "attrs": dict(self.attrs)}
+        if self.parts:
+            out["parts"] = [p.to_dict() for p in self.parts]
+        return out
+
+    @classmethod
+    def from_dict(cls, doc: dict) -> "OpSpec":
+        return cls(doc["kind"], tuple(doc.get("ins", ())),
+                   tuple(doc.get("outs", ())), dict(doc.get("attrs", {})),
+                   tuple(cls.from_dict(p) for p in doc.get("parts", ())))
+
 
 # --------------------------------------------------------------------------
 # Registry

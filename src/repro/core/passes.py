@@ -95,6 +95,23 @@ class PassRecord:
                   f"fine {self.fine_before:>3d}->{self.fine_after:<3d}  ")
         return f"{tag:<10s} {self.seconds * 1e3:8.2f} ms  {census}{self.summary}"
 
+    def to_dict(self) -> dict:
+        return {"name": self.name, "seconds": self.seconds,
+                "coarse_before": self.coarse_before,
+                "coarse_after": self.coarse_after,
+                "fine_before": self.fine_before, "fine_after": self.fine_after,
+                "rerun": self.rerun, "summary": self.summary}
+
+    @classmethod
+    def from_dict(cls, doc: dict) -> "PassRecord":
+        return cls(doc["name"], float(doc.get("seconds", 0.0)),
+                   int(doc.get("coarse_before", -1)),
+                   int(doc.get("coarse_after", -1)),
+                   int(doc.get("fine_before", -1)),
+                   int(doc.get("fine_after", -1)),
+                   rerun=bool(doc.get("rerun", False)),
+                   summary=doc.get("summary", ""))
+
 
 @dataclass
 class CompileDiagnostics:
@@ -125,6 +142,22 @@ class CompileDiagnostics:
     def table(self) -> str:
         head = f"-- passes({self.graph}) --" + (" [cache hit]" if self.cache_hit else "")
         return "\n".join([head] + ["  " + r.line() for r in self.records])
+
+    # ---- JSON serialization (docs/artifact_format.md `diagnostics`) ------
+    def to_dict(self) -> dict:
+        return {"graph": self.graph,
+                "records": [r.to_dict() for r in self.records],
+                "total_seconds": self.total_seconds,
+                "cache_hit": self.cache_hit, "cache_key": self.cache_key}
+
+    @classmethod
+    def from_dict(cls, doc: dict) -> "CompileDiagnostics":
+        return cls(graph=doc.get("graph", "?"),
+                   records=[PassRecord.from_dict(r)
+                            for r in doc.get("records", ())],
+                   total_seconds=float(doc.get("total_seconds", 0.0)),
+                   cache_hit=bool(doc.get("cache_hit", False)),
+                   cache_key=doc.get("cache_key", ""))
 
 
 # --------------------------------------------------------------------------

@@ -63,6 +63,29 @@ class ScheduleReport:
         return (f"schedule: {lat}; units={self.units_used}, "
                 f"{len(self.propagated)} propagated, {len(self.downgraded)} downgraded")
 
+    # ---- JSON serialization (docs/artifact_format.md `schedule`) ---------
+    def to_dict(self) -> dict:
+        return {"stage_latencies": dict(self.stage_latencies),
+                "degrees": dict(self.degrees),
+                "propagated": list(self.propagated),
+                "downgraded": list(self.downgraded),
+                "units_used": self.units_used, "up_iters": self.up_iters}
+
+    @classmethod
+    def from_dict(cls, doc: dict) -> "ScheduleReport":
+        # Canonical JSON sorts object keys, so restore the semantic
+        # base → PA → UP → DP → final stage order on the way in.
+        raw = doc.get("stage_latencies", {})
+        order = [k for k in ("base", "PA", "UP", "DP", "final") if k in raw]
+        order += [k for k in raw if k not in order]
+        return cls(
+            stage_latencies={k: float(raw[k]) for k in order},
+            degrees={k: int(v) for k, v in doc.get("degrees", {}).items()},
+            propagated=list(doc.get("propagated", ())),
+            downgraded=list(doc.get("downgraded", ())),
+            units_used=int(doc.get("units_used", 0)),
+            up_iters=int(doc.get("up_iters", 0)))
+
 
 # --------------------------------------------------------------------------
 # Degree realization on loops

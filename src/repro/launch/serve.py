@@ -1,8 +1,18 @@
-"""Serving launcher: batched greedy generation with slot-based batching.
+"""Serving launcher: batched greedy generation with slot-based batching,
+plus a mode that serves a *compiled-design artifact* directly.
 
-CPU-scale demo:
+CPU-scale LM demo:
     PYTHONPATH=src python -m repro.launch.serve --arch gpt2-medium --smoke \\
         --requests 6 --batch 4 --max-new 8
+
+Artifact serving — no recompile, no model code: import a versioned JSON
+artifact (docs/artifact_format.md), lower it through the op registry, and
+run a request loop against the jitted program:
+
+    PYTHONPATH=src python -m repro.core.compiler --configs gpt2-medium \\
+        --opts opt5 --export artifacts/
+    PYTHONPATH=src python -m repro.launch.serve \\
+        --artifact artifacts/gpt2-medium-opt5.json --requests 8
 """
 
 from __future__ import annotations
@@ -13,22 +23,42 @@ import time
 import jax
 import numpy as np
 
-from repro.configs import get_config
-from repro.models import transformer as tf
-from repro.serving.serve import Generator, Request
+
+def serve_artifact(args) -> int:
+    """Serve straight from an imported artifact: the design the compiler
+    exported is the unit of deployment — this launcher never sees the
+    model-building code that produced it."""
+    from repro.core import lower
+    from repro.core.artifact import artifact_summary, import_artifact
+    from repro.kernels import register_all
+    from repro.models.dataflow_models import random_inputs
+
+    register_all()     # fused-group kinds resolve against this process
+    compiled = import_artifact(args.artifact)   # validates before anything
+    print(artifact_summary(args.artifact))
+    low = lower(compiled)          # jitted
+    print(low.summary())
+
+    envs = [random_inputs(compiled.graph, seed=args.seed + i)
+            for i in range(args.requests)]
+    outs = low(envs[0])            # warmup: trace + compile
+    jax.block_until_ready(outs)
+
+    t0 = time.time()
+    for env in envs:
+        jax.block_until_ready(low(env))
+    dt = time.time() - t0
+    out_names = sorted(b.name for b in compiled.graph.outputs())
+    print(f"{args.requests} requests in {dt * 1e3:.1f} ms "
+          f"({args.requests / max(dt, 1e-9):.1f} req/s); "
+          f"outputs {out_names}")
+    return 0
 
 
-def main(argv=None) -> int:
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True)
-    ap.add_argument("--smoke", action="store_true")
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--cache-len", type=int, default=128)
-    ap.add_argument("--requests", type=int, default=6)
-    ap.add_argument("--prompt-len", type=int, default=8)
-    ap.add_argument("--max-new", type=int, default=8)
-    ap.add_argument("--seed", type=int, default=0)
-    args = ap.parse_args(argv)
+def serve_lm(args) -> int:
+    from repro.configs import get_config
+    from repro.models import transformer as tf
+    from repro.serving.serve import Generator, Request
 
     cfg = get_config(args.arch)
     if args.smoke:
@@ -51,6 +81,29 @@ def main(argv=None) -> int:
           f"steps, {gen.tokens_out} tokens, "
           f"{gen.tokens_out / max(dt, 1e-9):.1f} tok/s (CPU smoke)")
     return 0
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="",
+                    help="LM architecture to serve (token generation)")
+    ap.add_argument("--artifact", default="",
+                    help="serve a compiled-design JSON artifact instead "
+                         "(see docs/artifact_format.md)")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--cache-len", type=int, default=128)
+    ap.add_argument("--requests", type=int, default=6)
+    ap.add_argument("--prompt-len", type=int, default=8)
+    ap.add_argument("--max-new", type=int, default=8)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    if bool(args.arch) == bool(args.artifact):
+        ap.error("exactly one of --arch or --artifact is required")
+    if args.artifact and args.requests < 1:
+        ap.error("--requests must be >= 1 when serving an artifact")
+    return serve_artifact(args) if args.artifact else serve_lm(args)
 
 
 if __name__ == "__main__":

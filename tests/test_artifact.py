@@ -1,0 +1,392 @@
+"""Portable compiled-design artifacts (docs/artifact_format.md).
+
+Covers the full contract: lossless round-trips (structural hash, cache
+key, numerics), fresh-interpreter imports of exported ResNet/GPT-2
+designs that lower + execute + verify, strict validation with
+path-qualified errors, the forward-compat policy (unknown fields warn,
+version-major mismatch fails), integrity/fusion cross-checks, the disk
+cache's JSON mirror, and the compiler CLI verbs.
+"""
+
+import json
+import os
+import subprocess
+import sys
+import textwrap
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.core import (ArtifactError, ArtifactWarning, CodoOptions,
+                        CompileCache, artifact_summary, codo_opt,
+                        export_artifact, import_artifact, lower,
+                        lower_artifact, validate_artifact, verify_lowering)
+from repro.core.compiler import main as compiler_main
+from repro.core.compiler import profile_table
+from repro.models import dataflow_models as dm
+
+_SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def _compile_block(budget=64):
+    return codo_opt(dm.residual_block(1, 8, 12),
+                    CodoOptions(budget_units=budget), cache=None)
+
+
+# --------------------------------------------------------------------------
+# Round-trip fidelity
+# --------------------------------------------------------------------------
+
+
+def test_roundtrip_preserves_structure_and_numerics(tmp_path):
+    c = _compile_block()
+    path = tmp_path / "design.json"
+    doc = export_artifact(c, path)
+    assert path.exists() and json.loads(path.read_text()) == doc
+
+    r = import_artifact(path)
+    assert r.graph.structural_hash() == c.graph.structural_hash()
+    assert r.options == c.options
+    assert r.options.cache_key() == c.options.cache_key()
+    assert r.buffer_plan.impl == c.buffer_plan.impl
+    assert r.transfer_plan.channel_of == c.transfer_plan.channel_of
+    assert r.schedule_report.degrees == c.schedule_report.degrees
+    assert list(r.schedule_report.stage_latencies) == \
+        list(c.schedule_report.stage_latencies)
+    assert r.diagnostics.pass_names == c.diagnostics.pass_names
+    # costs recompute identically from the reconstructed graph
+    np.testing.assert_allclose(r.final.total_cycles, c.final.total_cycles)
+    np.testing.assert_allclose(r.speedup, c.speedup)
+
+    # and the imported design executes + verifies against the oracle
+    src = dm.residual_block(1, 8, 12)
+    env = dm.random_inputs(src)
+    verify_lowering(src, r, env, rtol=3e-4, atol=3e-4)
+
+
+def test_reexport_is_idempotent(tmp_path):
+    c = _compile_block()
+    doc = export_artifact(c)
+    doc2 = export_artifact(import_artifact(doc))
+    # diagnostics/cost are carried through, graph bytes identical
+    assert doc2["graph"] == doc["graph"]
+    assert doc2["integrity"] == doc["integrity"]
+    assert doc2["fusion"] == doc["fusion"]
+
+
+def test_lower_artifact_shortcut(tmp_path):
+    c = _compile_block()
+    path = tmp_path / "d.json"
+    export_artifact(c, path)
+    low = lower_artifact(path, jit=False)
+    env = dm.random_inputs(dm.residual_block(1, 8, 12))
+    out = low(env)
+    assert set(out) == {b.name for b in c.graph.outputs()}
+
+
+def test_export_rejects_closure_tasks():
+    from repro.core import DataflowGraph, ewise_task
+    g = DataflowGraph("closure")
+    g.buffer("x", (4,), kind="input")
+    g.buffer("y", (4,), kind="output")
+    g.add_task(ewise_task("t", "y", ["x"], (4,), fn=lambda env: {"y": env["x"]}))
+    c = codo_opt(g, cache=None)
+    with pytest.raises(ArtifactError, match="closure"):
+        export_artifact(c)
+
+
+# --------------------------------------------------------------------------
+# Fresh-interpreter round-trips (the paper's hand-off property)
+# --------------------------------------------------------------------------
+
+
+def _fresh_interpreter(code: str) -> subprocess.CompletedProcess:
+    env = dict(os.environ, JAX_PLATFORMS="cpu",
+               PYTHONPATH=_SRC + os.pathsep + os.environ.get("PYTHONPATH", ""))
+    return subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                          capture_output=True, text=True, timeout=600, env=env)
+
+
+@pytest.mark.parametrize("workload", ["resnet", "gpt2"])
+def test_fresh_interpreter_import_executes_and_verifies(tmp_path, workload):
+    if workload == "resnet":
+        build = "dm.resnet18(16)"
+        g = dm.resnet18(16)
+    else:
+        from repro.core.compiler import batch_workloads
+        build = 'batch_workloads(seq=8)["gpt2-medium"]()'
+        g = batch_workloads(seq=8)["gpt2-medium"]()
+    path = tmp_path / f"{workload}.json"
+    c = codo_opt(g, CodoOptions(budget_units=64), cache=None)
+    export_artifact(c, path)
+
+    proc = _fresh_interpreter(f"""
+        from repro.core import import_artifact, lower, verify_lowering
+        from repro.core.compiler import batch_workloads
+        from repro.core.passes import PASS_RUN_COUNTS
+        from repro.models import dataflow_models as dm
+
+        c = import_artifact({str(path)!r})
+        assert not PASS_RUN_COUNTS, "import must not run any compile pass"
+        assert all(t.fn is not None for t in c.graph.tasks)
+        src = {build}
+        env = dm.random_inputs(src)
+        out = lower(c, jit=False)(env)
+        assert set(out) == {{b.name for b in c.graph.outputs()}}
+        verify_lowering(src, c, env, rtol=3e-4, atol=3e-4)
+        print("ARTIFACT_IMPORT_OK", c.final.total_cycles)
+    """)
+    assert proc.returncode == 0, proc.stderr
+    assert "ARTIFACT_IMPORT_OK" in proc.stdout
+    # the cost model reproduces the exporter's estimate exactly
+    reported = float(proc.stdout.split("ARTIFACT_IMPORT_OK")[1].split()[0])
+    np.testing.assert_allclose(reported, c.final.total_cycles, rtol=1e-9)
+
+
+# --------------------------------------------------------------------------
+# Validation / compatibility policy
+# --------------------------------------------------------------------------
+
+
+def test_corrupted_artifacts_fail_with_paths(tmp_path):
+    doc = export_artifact(_compile_block())
+
+    bad = json.loads(json.dumps(doc))
+    del bad["graph"]["tasks"][0]["loops"]
+    bad["graph"]["buffers"][0]["shape"] = "oops"
+    bad["graph"]["buffers"][1]["kind"] = "wat"
+    with pytest.raises(ArtifactError) as e:
+        validate_artifact(bad)
+    msg = str(e.value)
+    assert "graph.tasks[0].loops: missing required field" in msg
+    assert "graph.buffers[0].shape: expected list, got str" in msg
+    assert "graph.buffers[1].kind" in msg
+
+    # dangling access reference
+    bad = json.loads(json.dumps(doc))
+    bad["graph"]["tasks"][0]["reads"][0]["buffer"] = "ghost"
+    with pytest.raises(ArtifactError, match="not a declared graph buffer"):
+        validate_artifact(bad)
+
+    # truncated file
+    trunc = tmp_path / "t.json"
+    trunc.write_text(json.dumps(doc)[:80])
+    with pytest.raises(ArtifactError, match="not valid JSON"):
+        import_artifact(trunc)
+
+    # not an artifact at all
+    with pytest.raises(ArtifactError, match="JSON object"):
+        validate_artifact([1, 2, 3])
+
+
+def test_version_policy():
+    doc = export_artifact(_compile_block())
+
+    old = dict(doc, schema_version="2.0")   # different major: fail
+    with pytest.raises(ArtifactError, match="schema_version"):
+        import_artifact(old)
+
+    with pytest.raises(ArtifactError, match="major"):
+        validate_artifact(dict(doc, schema_version="0.9"))
+
+    newer = dict(doc, schema_version="1.7")  # newer minor: warn + proceed
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        import_artifact(newer)
+    assert any("newer" in str(x.message) for x in w
+               if issubclass(x.category, ArtifactWarning))
+
+    with pytest.raises(ArtifactError, match="major.*minor"):
+        validate_artifact(dict(doc, schema_version="one"))
+
+
+def test_unknown_fields_warn_everywhere():
+    doc = export_artifact(_compile_block())
+    mod = json.loads(json.dumps(doc))
+    mod["novel_top"] = 1
+    mod["graph"]["tasks"][0]["novel_task_field"] = True
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        import_artifact(mod)
+    msgs = [str(x.message) for x in w if issubclass(x.category, ArtifactWarning)]
+    assert any("artifact.novel_top" in m for m in msgs)
+    assert any("graph.tasks[0].novel_task_field" in m for m in msgs)
+
+
+def test_integrity_and_fusion_cross_checks():
+    doc = export_artifact(_compile_block())
+
+    tampered = json.loads(json.dumps(doc))
+    tampered["graph"]["tasks"][0]["loops"][0]["trip"] += 1
+    with pytest.raises(ArtifactError, match="integrity"):
+        import_artifact(tampered)
+    # ... unless the edit is deliberate
+    c = import_artifact(tampered, check_integrity=False)
+    assert c.graph.tasks[0].loops[0].trip == \
+        tampered["graph"]["tasks"][0]["loops"][0]["trip"]
+
+    inconsistent = json.loads(json.dumps(doc))
+    inconsistent["fusion"]["groups"] = [[t["name"] for t in
+                                        inconsistent["graph"]["tasks"]]]
+    with pytest.raises(ArtifactError, match="fusion"):
+        import_artifact(inconsistent)
+
+
+def test_unregistered_op_kind_fails_actionably():
+    doc = export_artifact(_compile_block())
+    mod = json.loads(json.dumps(doc))
+    for t in mod["graph"]["tasks"]:
+        t["spec"]["kind"] = "never-registered"
+    mod["integrity"] = None
+    with pytest.raises(ArtifactError, match="no registered|register_op"):
+        import_artifact(mod)
+
+
+def test_unknown_option_fields_warn_not_fail():
+    """Forward compat reaches into `options`: a newer writer's extra knob
+    is dropped with a warning, not a hard failure."""
+    doc = export_artifact(_compile_block())
+    mod = json.loads(json.dumps(doc))
+    mod["options"]["novel_knob"] = 7
+    mod["options"]["hw"]["novel_hw_field"] = 1.5
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        r = import_artifact(mod)
+    msgs = [str(x.message) for x in w if issubclass(x.category, ArtifactWarning)]
+    assert any("options.novel_knob" in m for m in msgs)
+    assert any("options.hw.novel_hw_field" in m for m in msgs)
+    assert r.options.budget_units == 64      # known fields still apply
+
+
+def test_corrupted_section_values_fail_with_artifact_errors():
+    doc = export_artifact(_compile_block())
+
+    bad = json.loads(json.dumps(doc))
+    bad["cost"]["final_cycles"] = "fast"
+    with pytest.raises(ArtifactError, match="cost.final_cycles"):
+        import_artifact(bad)
+
+    bad = json.loads(json.dumps(doc))
+    bad["integrity"]["structural_hash"] = 123
+    with pytest.raises(ArtifactError, match="integrity.structural_hash"):
+        import_artifact(bad)
+
+    bad = json.loads(json.dumps(doc))
+    bad["schedule"]["degrees"] = {"t": "many"}
+    with pytest.raises(ArtifactError, match="schedule does not reconstruct"):
+        import_artifact(bad)
+
+
+def test_cost_drift_warns():
+    doc = export_artifact(_compile_block())
+    mod = json.loads(json.dumps(doc))
+    mod["cost"]["final_cycles"] *= 2
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        import_artifact(mod)
+    assert any("cost-model drift" in str(x.message) for x in w)
+
+
+# --------------------------------------------------------------------------
+# Cache JSON mirror
+# --------------------------------------------------------------------------
+
+
+def test_cache_json_mirror_is_importable(tmp_path):
+    cache = CompileCache(disk_dir=tmp_path, json_mirror=True)
+    c = codo_opt(dm.residual_block(1, 8, 12), CodoOptions(budget_units=64),
+                 cache=cache)
+    jsons = list(tmp_path.glob("*.json"))
+    assert len(jsons) == 1 and cache.stats.json_mirrors == 1
+    r = import_artifact(jsons[0])
+    assert r.graph.structural_hash() == c.graph.structural_hash()
+    assert all(t.fn is not None for t in r.graph.tasks)
+    # mirror rides with the pickle lifecycle
+    cache.clear(disk=True)
+    assert not list(tmp_path.glob("*.json")) and not list(tmp_path.glob("*.pkl"))
+
+
+def test_cache_mirror_ships_to_process_pool_workers(tmp_path):
+    from repro.core.compiler import ablation_jobs, batch_workloads, codo_opt_batch
+    wl = batch_workloads(seq=8)
+    jobs = ablation_jobs({"gpt2-medium": wl["gpt2-medium"]},
+                         presets=["opt2", "opt5"], budget_units=64)
+    cache = CompileCache(disk_dir=tmp_path, json_mirror=True)
+    res = codo_opt_batch(jobs, cache=cache, max_workers=2, executor="process")
+    assert all(r.ok for r in res)
+    jsons = list(tmp_path.glob("*.json"))
+    assert jsons, "workers must honour the parent's json_mirror flag"
+    assert import_artifact(jsons[0]).graph.name
+
+
+def test_cache_mirror_env_knob(tmp_path, monkeypatch):
+    monkeypatch.setenv("CODO_CACHE_JSON", "1")
+    cache = CompileCache(disk_dir=tmp_path)
+    assert cache.json_mirror
+    monkeypatch.delenv("CODO_CACHE_JSON")
+    assert not CompileCache(disk_dir=tmp_path).json_mirror
+
+
+# --------------------------------------------------------------------------
+# CLI verbs + profile
+# --------------------------------------------------------------------------
+
+
+def test_cli_export_import_profile(tmp_path, capsys):
+    art_dir = tmp_path / "arts"
+    rc = compiler_main(["--configs", "gpt2-medium", "--opts", "opt5",
+                        "--executor", "thread", "--jobs", "1", "--no-cache",
+                        "--seq", "8", "--export", str(art_dir), "--profile"])
+    out = capsys.readouterr().out
+    assert rc == 0
+    assert "exported 1/1 artifacts" in out
+    assert "pass profile" in out and "schedule" in out
+    path = art_dir / "gpt2-medium-opt5.json"
+    assert path.exists()
+
+    rc = compiler_main(["--import-artifact", str(path), "--profile"])
+    out = capsys.readouterr().out
+    assert rc == 0
+    assert "artifact gpt2_medium (schema v1.0)" in out
+    assert "== codo_opt(gpt2_medium) ==" in out
+    assert "-- passes(gpt2_medium) --" in out
+
+    assert "gpt2_medium" in artifact_summary(path)
+
+
+def test_profile_table_skips_cache_hits():
+    cache = CompileCache()
+    a = codo_opt(dm.residual_block(1, 8, 12), CodoOptions(budget_units=64),
+                 cache=cache)
+    b = codo_opt(dm.residual_block(1, 8, 12), CodoOptions(budget_units=64),
+                 cache=cache)
+    assert b.cache_hit
+    table = profile_table([a.diagnostics, b.diagnostics])
+    assert "1 compiles" in table
+    assert profile_table([b.diagnostics]).startswith("profile: no pass records")
+
+
+def test_serve_artifact_mode(tmp_path):
+    path = tmp_path / "d.json"
+    export_artifact(_compile_block(), path)
+    proc = _fresh_interpreter(f"""
+        import repro.launch.serve as serve
+        rc = serve.main(["--artifact", {str(path)!r}, "--requests", "2"])
+        assert rc == 0
+    """)
+    assert proc.returncode == 0, proc.stderr
+    assert "requests in" in proc.stdout
+
+
+def test_lowered_artifact_matches_direct_lowering():
+    c = _compile_block()
+    direct = lower(c, jit=False)
+    via_artifact = lower(import_artifact(export_artifact(c)), jit=False)
+    env = dm.random_inputs(dm.residual_block(1, 8, 12))
+    got, want = via_artifact(env), direct(env)
+    for k in want:
+        np.testing.assert_allclose(np.asarray(got[k]), np.asarray(want[k]),
+                                   rtol=1e-6, atol=1e-6)
+    assert [g.tasks for g in via_artifact.groups] == \
+        [g.tasks for g in direct.groups]

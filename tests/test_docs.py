@@ -12,7 +12,8 @@ sys.path.insert(0, str(ROOT / "tools"))
 
 from check_docs import check_file, extract_blocks  # noqa: E402
 
-DOCS = [ROOT / "README.md", ROOT / "docs" / "architecture.md"]
+DOCS = [ROOT / "README.md", ROOT / "docs" / "architecture.md",
+        ROOT / "docs" / "artifact_format.md"]
 
 
 def test_docs_exist_and_have_python_blocks():
