@@ -1,17 +1,20 @@
-"""Compile ResNet-18 (Table III workload) end to end, including the
-Opt1..Opt5 ablation of Table VII, per-pass diagnostics from the pass
-manager, the compile cache (memory tier + cold-restart disk reload), and
-the resource/performance sweep of Fig. 11.
+"""Compile ResNet-18 (Table III workload) end to end through the
+``codo.compile`` frontend, including the Opt1..Opt5 ablation of Table VII,
+per-pass diagnostics from the pass manager, the compile cache (memory tier
++ cold-restart disk reload), and the resource/performance sweep of Fig. 11.
 
     PYTHONPATH=src python examples/compile_resnet18.py
     PYTHONPATH=src python examples/compile_resnet18.py --cache-dir /tmp/codo_cache
     PYTHONPATH=src python examples/compile_resnet18.py --artifact /tmp/resnet18.json
 
-ResNet-18 is built from declarative op specs (``repro.core.ops``), so with
-``--cache-dir`` the script proves the portable-artifact property: a fresh
-cache instance reloads the compile from disk and the design still lowers
-and executes (run the script twice for a true cold interpreter restart —
-the second run's "cold" compile is itself a disk hit).
+ResNet-18 is a *traced function* (``resnet18_fn`` in
+repro/models/dataflow_models.py — plain Python over ShapedBuffers), so the
+whole flow is: function -> trace -> six passes -> executable design.
+Declarative op specs make every compiled design a portable artifact: with
+``--cache-dir`` a fresh cache instance reloads the compile from disk and
+the design still lowers and executes (run the script twice for a true cold
+interpreter restart — the second run's "cold" compile is itself a disk
+hit).
 """
 
 import argparse
@@ -20,10 +23,15 @@ import sys
 
 sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1] / "src"))
 
-from repro.core import (ABLATION_PRESETS, CodoOptions, CompileCache,  # noqa: E402
-                        artifact_summary, codo_opt, export_artifact,
-                        import_artifact, lower)
-from repro.models.dataflow_models import random_inputs, resnet18  # noqa: E402
+import codo  # noqa: E402
+from repro.core import ABLATION_PRESETS, CompileCache  # noqa: E402
+from repro.models.dataflow_models import random_inputs, resnet18_fn  # noqa: E402
+
+SHAPE = (1, 3, 32, 32)
+
+
+def compile_resnet(**kwargs):
+    return codo.compile(resnet18_fn, SHAPE, name="resnet18_32", **kwargs)
 
 
 def main():
@@ -35,49 +43,49 @@ def main():
                          "artifact at this path (docs/artifact_format.md)")
     args = ap.parse_args()
 
-    g = resnet18(32)
-    print(f"resnet18(3x32x32): {len(g.tasks)} tasks, "
-          f"{len(g.buffers)} buffers")
+    program = compile_resnet()
+    g = program.source
+    print(f"resnet18(3x32x32): traced {len(g.tasks)} tasks, "
+          f"{len(g.buffers)} buffers from one Python function")
 
     print("\n== ablation (Table VII / Fig. 10, presets are data) ==")
     for name in ABLATION_PRESETS:
-        c = codo_opt(g, CodoOptions.preset(name))
+        c = compile_resnet(options=codo.CodoOptions.preset(name))
         print(f"  {name} {'+'.join(ABLATION_PRESETS[name]):<42s}"
               f" speedup {c.speedup:9.1f}x  fifo {c.fifo_fraction:4.0%}"
               f"  compile {c.compile_seconds*1e3:6.1f} ms")
 
     print("\n== per-pass diagnostics (opt5) ==")
-    c = codo_opt(g, CodoOptions.opt5(), cache=None)
+    c = compile_resnet(options=codo.CodoOptions.opt5(), cache=None)
     print(c.diagnostics.table())
 
     print("\n== compile cache (memory tier) ==")
     cache = CompileCache()
-    cold = codo_opt(resnet18(32), cache=cache)
-    warm = codo_opt(resnet18(32), cache=cache)   # fresh build, same structure
+    cold = compile_resnet(cache=cache)
+    warm = compile_resnet(cache=cache)   # fresh trace, same structure
     print(f"  cold {cold.compile_seconds*1e3:8.1f} ms")
     print(f"  warm {warm.compile_seconds*1e3:8.1f} ms "
           f"(hit={warm.cache_hit}, same speedup={warm.speedup == cold.speedup})")
 
     if args.cache_dir:
         print(f"\n== cold-restart reload (disk tier at {args.cache_dir}) ==")
-        codo_opt(resnet18(32), cache=CompileCache(disk_dir=args.cache_dir))
+        compile_resnet(cache=CompileCache(disk_dir=args.cache_dir))
         fresh = CompileCache(disk_dir=args.cache_dir)
-        reloaded = codo_opt(resnet18(32), cache=fresh)
+        reloaded = compile_resnet(cache=fresh)
         print(f"  reload: hit={reloaded.cache_hit} "
               f"disk_hits={fresh.stats.disk_hits} "
               f"compile {reloaded.compile_seconds*1e3:.1f} ms")
         assert all(t.fn is not None for t in reloaded.graph.tasks)
-        low = lower(reloaded, jit=False)
-        out = low(random_inputs(resnet18(32)))
+        out = reloaded.lower(jit=False)(reloaded.make_env(
+            **random_inputs(reloaded.graph)))
         print(f"  reloaded design executed: outputs {sorted(out)} ✓")
 
     if args.artifact:
         print(f"\n== portable artifact ({args.artifact}) ==")
-        export_artifact(c, args.artifact)
-        print(artifact_summary(args.artifact))
-        imported = import_artifact(args.artifact)
-        low = lower(imported, jit=False)
-        out = low(random_inputs(resnet18(32)))
+        c.export(args.artifact)
+        imported = codo.load(args.artifact)
+        out = imported.lower(jit=False)(imported.make_env(
+            **random_inputs(imported.graph)))
         print(f"  imported design executed: outputs {sorted(out)} ✓")
         print("  CLI equivalents:")
         print("    python -m repro.core.compiler --configs resnet18 "
@@ -87,7 +95,7 @@ def main():
 
     print("\n== resource/performance trade-off (Fig. 11) ==")
     for budget in (128, 256, 512, 1024, 2048):
-        c = codo_opt(g, CodoOptions(budget_units=budget))
+        c = compile_resnet(options=codo.CodoOptions(budget_units=budget))
         print(f"  budget {budget:5d}: speedup {c.speedup:9.1f}x  "
               f"units {c.schedule_report.units_used:5d}")
 

@@ -3,24 +3,29 @@
     PYTHONPATH=src python examples/quickstart.py
     PYTHONPATH=src python examples/quickstart.py --cache-dir /tmp/codo_cache
 
-Builds the pad→conv→relu task graph with *declarative* op semantics (each
-task carries an ``OpSpec`` the registry materializes into jnp on demand),
-shows the detected dataflow violations, runs the full codo_opt pipeline
-(coarse + fine elimination, reuse buffers, buffer determination,
-auto-scheduling), verifies the lowered program against the unoptimized
-oracle, and prints the report.
+The workload is a *plain Python function* — ``codo.compile`` traces it
+over symbolic shapes into the pad→conv→relu task graph (declarative op
+semantics throughout), shows the detected dataflow violations, runs the
+full codo_opt pipeline (coarse + fine elimination, reuse buffers, buffer
+determination, auto-scheduling), executes the lowered design, and checks
+it against both the eager function and the unoptimized oracle.
 
-With ``--cache-dir`` it also demonstrates the cold-restart property the
-op registry provides: the compile is written to an on-disk cache, reloaded
-through a *fresh* cache instance (the in-process analogue of a new
-interpreter — run the script twice to see a true cold restart), and the
-reloaded design is lowered and executed without recompiling.
+With ``--cache-dir`` it also demonstrates the cold-restart property: the
+compile is written to an on-disk cache, reloaded through a *fresh* cache
+instance (the in-process analogue of a new interpreter — run the script
+twice to see a true cold restart), and the reloaded design still lowers
+and executes without recompiling.
 
 With ``--artifact PATH`` it exports the compiled design as a versioned
-JSON artifact (docs/artifact_format.md), re-imports it, and verifies the
-imported design end to end — the same flow as the compiler CLI's
+JSON artifact (docs/artifact_format.md), re-imports it with ``codo.load``,
+and runs the imported design — the same flow as the compiler CLI's
 ``--export`` / ``--import-artifact`` verbs and ``repro.launch.serve
 --artifact``.
+
+The task-by-task ``GB`` builder + ``codo_opt`` road this example used to
+take still works (see "The low-level escape hatch" in the README); the
+traced function compiles to the *identical* graph — same structural hash,
+same compile-cache entry.
 """
 
 import argparse
@@ -29,19 +34,20 @@ import sys
 
 sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1] / "src"))
 
-from repro.core import (CompileCache, artifact_summary, codo_opt,  # noqa: E402
-                        export_artifact, import_artifact, lower,
-                        verify_lowering, violation_report)
+import numpy as np  # noqa: E402
+
+import codo  # noqa: E402
+from repro.core import CompileCache, violation_report  # noqa: E402
 from repro.kernels import register_all  # noqa: E402
-from repro.models.dataflow_models import GB, random_inputs  # noqa: E402
 
 
-def build_motivating(n=1, c=3, h=32, w=32, co=8):
-    b = GB("motivating")
-    x = b.input("x", (n, c, h, w))
-    y = b.conv(x, co, 3, relu=True)   # emits pad -> conv -> relu tasks
-    b.mark_output(y)
-    return b.g
+def motivating(x):
+    """Fig. 2: one padded conv + relu — traced into pad -> conv -> relu
+    tasks with an order-mismatch violation on the pad->conv edge."""
+    return codo.F.conv(x, 8, 3, relu=True)
+
+
+SHAPE = (1, 3, 32, 32)
 
 
 def main():
@@ -55,37 +61,42 @@ def main():
     args = ap.parse_args()
 
     register_all()                     # route fusion groups to Pallas kernels
-    g = build_motivating()
 
-    print("== input dataflow graph ==")
+    program = codo.compile(motivating, SHAPE, name="motivating")
+    g = program.source
+
+    print("== traced dataflow graph ==")
     print(g.summary())
     print("   task specs:", {t.name: t.spec.kind for t in g.tasks})
     print("\n== violations before compilation ==")
     print(violation_report(g))
 
-    compiled = codo_opt(g)
-    print("\n== codo_opt ==")
-    print(compiled.report())
+    print("\n== codo.compile ==")
+    print(program.report())
 
-    low = lower(compiled, jit=False)
+    low = program.lower(jit=False)
     print("\n== lowering ==")
     print(low.summary())
     for grp in low.groups:
         print(f"  group {grp.gid}: {grp.tasks} -> {grp.kernel}")
 
-    env = random_inputs(g)
-    verify_lowering(g, compiled, env)
-    print("\nnumerics verified against the unoptimized oracle ✓")
+    x = np.random.default_rng(0).standard_normal(SHAPE).astype(np.float32)
+    y = program(x)
+    y_eager = motivating(x)            # the same function, run eagerly
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_eager),
+                               rtol=1e-5, atol=1e-5)
+    program.verify(x)
+    print(f"\ncompiled(x) == motivating(x) == oracle ✓  (output {y.shape})")
 
     if args.artifact:
         print(f"\n== portable artifact (JSON at {args.artifact}) ==")
-        export_artifact(compiled, args.artifact)
-        print(artifact_summary(args.artifact))
-        imported = import_artifact(args.artifact)
+        program.export(args.artifact)
+        imported = codo.load(args.artifact)
         assert (imported.graph.structural_hash()
-                == compiled.graph.structural_hash())
-        verify_lowering(build_motivating(), imported, env)
-        print("  imported design lowered, executed, and verified ✓")
+                == program.graph.structural_hash())
+        np.testing.assert_allclose(np.asarray(imported(x)), np.asarray(y),
+                                   rtol=1e-5, atol=1e-5)
+        print("  imported design lowered and executed ✓")
         print("  CLI equivalents:")
         print("    python -m repro.core.compiler --import-artifact "
               f"{args.artifact}")
@@ -93,15 +104,18 @@ def main():
 
     if args.cache_dir:
         print(f"\n== cold-restart demo (disk cache at {args.cache_dir}) ==")
-        codo_opt(build_motivating(), cache=CompileCache(disk_dir=args.cache_dir))
-        fresh = CompileCache(disk_dir=args.cache_dir)   # knows nothing in memory
-        reloaded = codo_opt(build_motivating(), cache=fresh)
+        codo.compile(motivating, SHAPE, name="motivating",
+                     cache=CompileCache(disk_dir=args.cache_dir))
+        fresh = CompileCache(disk_dir=args.cache_dir)  # knows nothing in memory
+        reloaded = codo.compile(motivating, SHAPE, name="motivating",
+                                cache=fresh)
         print(f"  reload: cache_hit={reloaded.cache_hit} "
               f"(disk hits: {fresh.stats.disk_hits})")
         assert all(t.fn is not None for t in reloaded.graph.tasks), \
             "disk entry came back stripped"
-        verify_lowering(build_motivating(), reloaded, env)
-        print("  reloaded design lowered, executed, and verified ✓ "
+        np.testing.assert_allclose(np.asarray(reloaded(x)), np.asarray(y),
+                                   rtol=1e-5, atol=1e-5)
+        print("  reloaded design lowered and executed ✓ "
               "(no recompile, no closures — specs re-derive the numerics)")
 
 

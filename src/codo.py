@@ -1,0 +1,23 @@
+"""``import codo`` — alias for :mod:`repro.api`, the traced-function
+frontend of the CODO reproduction:
+
+.. code-block:: python
+
+    import codo
+
+    def model(x):
+        h = codo.F.fc(x, 512, relu=True)
+        return codo.F.fc(h, 512) + x
+
+    program = codo.compile(model, (64, 512))
+    y = program(x_array)
+
+See docs/frontend.md for the walkthrough and ``repro.core`` for the
+low-level compiler API (``codo_opt``).
+"""
+
+from repro.api import (CodoOptions, CompiledProgram, F, ShapedBuffer,  # noqa: F401
+                       TraceError, buffer, compile, load, trace)
+
+__all__ = ["CodoOptions", "CompiledProgram", "F", "ShapedBuffer",
+           "TraceError", "buffer", "compile", "load", "trace"]

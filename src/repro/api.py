@@ -1,0 +1,315 @@
+"""repro.api — the ``codo`` frontend: one callable from function to design.
+
+This is the primary public API of the reproduction (``import codo`` works
+too, via the ``src/codo.py`` alias):
+
+.. code-block:: python
+
+    import codo
+
+    def model(x):
+        h = codo.F.fc(x, 512, relu=True)
+        return codo.F.fc(h, 512) + x
+
+    program = codo.compile(model, (64, 512))   # trace -> codo_opt
+    y = program(x_array)                       # lower + execute
+    program.export("design.json")              # portable artifact
+    program.diagnostics.table()                # per-pass timings
+    program.cost.total_cycles                  # modeled latency
+
+``compile`` traces the function (:mod:`repro.core.frontend`), runs the
+six-pass ``codo_opt`` pipeline, and wraps the result in a
+:class:`CompiledProgram`.  Traced graphs are structurally identical to
+hand-built ones, so they share the same content-addressed compile cache —
+compiling a function whose graph was already compiled (by anyone, through
+any road) is a cache hit.
+
+Calling convention: positional arrays bind to the traced function's
+parameters in order; keyword arrays override any buffer (inputs *or*
+weights) by name.  Weight buffers created inside ops default to the same
+deterministic shape-keyed initializer eager mode uses
+(:func:`repro.core.frontend.weight_init`), so ``codo.compile(fn)(x)``
+equals ``fn(x)`` exactly; bind real parameters with
+:meth:`CompiledProgram.bind`.
+
+The low-level road — build a :class:`~repro.core.graph.DataflowGraph` by
+hand (``GB``) and call :func:`~repro.core.compiler.codo_opt` — remains
+fully supported; ``compile`` accepts a ready graph too.
+
+Smoke CLI (used by the CI compile-smoke job)::
+
+    PYTHONPATH=src python -m repro.api gemm --cache-dir .codo_cache --run
+"""
+
+from __future__ import annotations
+
+import argparse
+from typing import Any, Callable, Sequence
+
+import numpy as np
+
+from repro.core import frontend
+from repro.core.compiler import (CodoOptions, CompiledDataflow, _UNSET,
+                                 codo_opt)
+from repro.core.graph import DataflowGraph
+
+# Re-exports: `codo.trace`, `codo.buffer`, `codo.ShapedBuffer`, and the op
+# namespace as `codo.F` (also importable as `from repro.core import
+# frontend as F`).
+F = frontend
+ShapedBuffer = frontend.ShapedBuffer
+buffer = frontend.buffer
+trace = frontend.trace
+TraceError = frontend.TraceError
+
+
+class CompiledProgram:
+    """A compiled dataflow design with a function calling convention.
+
+    Wraps the :class:`~repro.core.compiler.CompiledDataflow` the pipeline
+    produced plus the trace's io contract (which argument is which input
+    buffer, which buffer comes back).  Lowering to an executable jax
+    program happens lazily on first call and is memoized by the lowering
+    cache, keyed on the design's structural hash.
+    """
+
+    def __init__(self, source: DataflowGraph, compiled: CompiledDataflow,
+                 input_names: Sequence[str], output_names: Sequence[str]):
+        self.source = source                  # pre-pass graph (the oracle)
+        self.compiled = compiled
+        self.input_names = list(input_names)
+        self.output_names = list(output_names)
+        self._bindings: dict[str, Any] = {}
+        self._lowered = None
+        self._lowered_jit = None
+
+    # ---- introspection ---------------------------------------------------
+    @property
+    def graph(self) -> DataflowGraph:
+        """The optimized (post-pass) graph."""
+        return self.compiled.graph
+
+    @property
+    def diagnostics(self):
+        """Per-pass :class:`~repro.core.passes.CompileDiagnostics`."""
+        return self.compiled.diagnostics
+
+    @property
+    def cost(self):
+        """Modeled :class:`~repro.core.costmodel.GraphCost` of the design."""
+        return self.compiled.final
+
+    @property
+    def speedup(self) -> float:
+        return self.compiled.speedup
+
+    @property
+    def fifo_fraction(self) -> float:
+        return self.compiled.fifo_fraction
+
+    @property
+    def compile_seconds(self) -> float:
+        return self.compiled.compile_seconds
+
+    @property
+    def schedule_report(self):
+        return self.compiled.schedule_report
+
+    @property
+    def cache_hit(self) -> bool:
+        return self.compiled.cache_hit
+
+    def report(self) -> str:
+        return self.compiled.report()
+
+    def __repr__(self) -> str:
+        ins = ", ".join(self.input_names)
+        outs = ", ".join(self.output_names)
+        return (f"CompiledProgram({self.graph.name}: ({ins}) -> ({outs}), "
+                f"speedup {self.speedup:.1f}x, "
+                f"{'cache hit' if self.cache_hit else 'compiled'})")
+
+    # ---- parameters ------------------------------------------------------
+    def bind(self, **arrays) -> "CompiledProgram":
+        """Attach concrete values for weight (or input) buffers by name.
+        Unbound weights fall back to the deterministic shape-keyed
+        initializer shared with eager mode."""
+        for name, value in arrays.items():
+            buf = self.graph.buffers.get(name)
+            if buf is None or buf.kind not in ("weight", "input"):
+                known = sorted(b.name for b in self.graph.buffers.values()
+                               if b.kind in ("weight", "input"))
+                raise KeyError(f"no bindable buffer {name!r}; "
+                               f"inputs/weights: {known}")
+            self._check(buf, value)
+            self._bindings[name] = value
+        return self
+
+    @staticmethod
+    def _check(buf, value) -> None:
+        shape = tuple(getattr(value, "shape", ()))
+        if shape != tuple(buf.shape):
+            raise ValueError(f"buffer {buf.name!r} expects shape "
+                             f"{tuple(buf.shape)}, got {shape}")
+
+    # ---- execution -------------------------------------------------------
+    def lower(self, jit: bool = True):
+        """The lowered executable program (memoized per jit flag)."""
+        if self._lowered is None or self._lowered_jit != bool(jit):
+            from repro.core.lowering import lower  # lazy: jax
+            self._lowered = lower(self.compiled, jit=jit)
+            self._lowered_jit = bool(jit)
+        return self._lowered
+
+    def make_env(self, *arrays, **named) -> dict[str, Any]:
+        """The full execution environment for one call: positional arrays
+        mapped onto the traced inputs, keyword overrides, bound weights,
+        and shape-keyed defaults for the rest."""
+        if len(arrays) > len(self.input_names):
+            raise TypeError(f"{self.graph.name} takes {len(self.input_names)} "
+                            f"positional inputs {self.input_names}, "
+                            f"got {len(arrays)}")
+        env = dict(self._bindings)
+        for name, value in zip(self.input_names, arrays):
+            self._check(self.graph.buffers[name], value)
+            env[name] = value
+        for name, value in named.items():
+            buf = self.graph.buffers.get(name)
+            if buf is None or buf.kind not in ("input", "weight"):
+                known = sorted(b.name for b in self.graph.buffers.values()
+                               if b.kind in ("input", "weight"))
+                raise KeyError(f"no bindable buffer {name!r} (intermediates "
+                               f"are produced by the design and cannot be "
+                               f"overridden); inputs/weights: {known}")
+            self._check(buf, value)
+            env[name] = value
+        missing = [n for n in self.input_names if n not in env]
+        if missing:
+            raise TypeError(f"missing inputs {missing} "
+                            f"(signature: {self.input_names})")
+        for b in self.graph.weights():
+            if b.name not in env:
+                env[b.name] = frontend.weight_init(b.shape, b.dtype)
+        return env
+
+    def __call__(self, *arrays, jit: bool = True, **named):
+        """Run the compiled design.  Returns one array per traced output
+        (a bare array for single-output programs, a tuple otherwise)."""
+        out = self.lower(jit=jit)(self.make_env(*arrays, **named))
+        vals = tuple(out[n] for n in self.output_names)
+        return vals[0] if len(vals) == 1 else vals
+
+    def verify(self, *arrays, rtol: float = 1e-5, atol: float = 1e-5, **named):
+        """Check the lowered design against the un-optimized oracle (the
+        source graph executed task by task) on these inputs."""
+        env = self.make_env(*arrays, **named)
+        got = self.lower(jit=False)(env)
+        want = self.source.execute(env)
+        for k in want:
+            np.testing.assert_allclose(
+                np.asarray(got[k]), np.asarray(want[k]), rtol=rtol, atol=atol,
+                err_msg=f"output {k} diverged after lowering")
+
+    # ---- artifacts -------------------------------------------------------
+    def export(self, path: str | None = None):
+        """Write (or return) the versioned JSON artifact of this design
+        (docs/artifact_format.md)."""
+        from repro.core.artifact import export_artifact  # lazy
+        return export_artifact(self.compiled, path)
+
+
+def _io_from_graph(graph: DataflowGraph) -> tuple[list[str], list[str]]:
+    return ([b.name for b in graph.inputs()],
+            [b.name for b in graph.outputs()])
+
+
+def compile(fn: Callable | DataflowGraph, *specs,  # noqa: A001 — the API name
+            options: CodoOptions | None = None, name: str | None = None,
+            cache=_UNSET, **codo_kwargs) -> CompiledProgram:
+    """Trace ``fn`` over ``specs`` (shape tuples / :func:`buffer` protos)
+    and compile it through the ``codo_opt`` pipeline.
+
+    ``fn`` may also be a ready :class:`DataflowGraph` (then ``specs`` must
+    be empty) — the escape hatch for hand-built graphs.  ``options``
+    defaults to the full opt5 pipeline; ``cache=None`` disables
+    memoization for this call.  Extra keyword arguments are forwarded to
+    :func:`~repro.core.compiler.codo_opt`.
+    """
+    if isinstance(fn, DataflowGraph):
+        if specs:
+            raise TraceError("compile(graph) takes no input specs — the "
+                             "graph already declares its buffers")
+        source, ins, outs = fn, *_io_from_graph(fn)
+        if name is not None and name != source.name:
+            raise TraceError(f"compile(graph, name={name!r}) cannot rename "
+                             f"graph {source.name!r}")
+    else:
+        source, ins, outs = frontend.trace_io(fn, *specs, name=name)
+    compiled = codo_opt(source, options, cache=cache, **codo_kwargs)
+    return CompiledProgram(source, compiled, ins, outs)
+
+
+def load(path) -> CompiledProgram:
+    """Reconstruct a :class:`CompiledProgram` from an exported artifact
+    (path or parsed document) — no recompile, any process; op kinds
+    resolve against this process's registry."""
+    from repro.core.artifact import import_artifact  # lazy
+    compiled = import_artifact(path)
+    # The artifact carries the optimized graph only; it is its own oracle.
+    ins, outs = _io_from_graph(compiled.graph)
+    return CompiledProgram(compiled.graph, compiled, ins, outs)
+
+
+# --------------------------------------------------------------------------
+# Smoke CLI:  python -m repro.api gemm --cache-dir .codo_cache --run
+# The CI compile-smoke job greps `cache_hit=False` / `cache_hit=True` from
+# a cold + warm invocation pair to pin frontend/cache-key stability.
+# --------------------------------------------------------------------------
+
+
+def main(argv=None) -> int:
+    from repro.models.dataflow_models import KERNEL_BENCHES
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.api",
+        description="Compile one Table II kernel through codo.compile().")
+    ap.add_argument("workload", choices=sorted(KERNEL_BENCHES),
+                    help="traced kernel workload to compile")
+    ap.add_argument("--opt", default="opt5",
+                    help="CodoOptions preset (default opt5)")
+    ap.add_argument("--cache-dir", default="",
+                    help="disk compile-cache dir (cold/warm smoke)")
+    ap.add_argument("--run", action="store_true",
+                    help="also execute the design on random inputs and "
+                         "verify against the oracle (imports jax)")
+    ap.add_argument("--export", default="", metavar="PATH",
+                    help="export the design as a JSON artifact")
+    args = ap.parse_args(argv)
+
+    from repro.core.cache import CompileCache
+    cache = (CompileCache(disk_dir=args.cache_dir) if args.cache_dir
+             else _UNSET)
+    graph = KERNEL_BENCHES[args.workload]()
+    program = compile(graph, options=CodoOptions.preset(args.opt),
+                      cache=cache)
+    print(program.report())
+    print(f"codo.compile({args.workload}): cache_hit={program.cache_hit} "
+          f"speedup={program.speedup:.1f}x "
+          f"key={program.graph.structural_hash()[:12]}")
+    if args.run:
+        from repro.models.dataflow_models import random_inputs
+        env = random_inputs(program.source)
+        program.verify(**env)
+        print(f"numerics verified against the oracle on "
+              f"{sorted(n for n in env)} ✓")
+    if args.export:
+        program.export(args.export)
+        print(f"artifact exported to {args.export}")
+    return 0
+
+
+__all__ = ["CodoOptions", "CompiledProgram", "F", "ShapedBuffer",
+           "TraceError", "buffer", "compile", "load", "trace"]
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -13,10 +13,14 @@ from .buffers import BufferPlan, determine_buffers, downgrade_to_pingpong
 from .cache import CacheStats, CompileCache
 from .coarse import eliminate_coarse
 from .compiler import (BatchJob, BatchResult, CodoOptions, CompiledDataflow,
-                       ablation_jobs, codo_opt, codo_opt_batch, default_cache,
-                       default_manager, verify_violation_free)
+                       PassBudgetError, ablation_jobs, batch_workloads,
+                       codo_opt, codo_opt_batch, default_cache,
+                       default_manager, enforce_pass_budgets,
+                       kernel_workloads, verify_violation_free)
 from .costmodel import V5E, GraphCost, HwParams, graph_latency, sequential_latency, task_cost
 from .fine import eliminate_fine
+from .frontend import (GB, ShapedBuffer, TraceError, Tracer, trace, trace_io,
+                       weight_init)
 from .graph import (FIFO, PINGPONG, Access, Buffer, DataflowGraph, Loop, Task,
                     conv2d_task, copy_task, ewise_task, full_index, idx,
                     matmul_task, pad_task, pool_task, reduce_task, retarget_fn)
@@ -26,7 +30,8 @@ from .lowering import (LOWER_CACHE_STATS, LoweredProgram, clear_lower_cache,
 from .offchip import TransferPlan, host_manifest, plan_offchip
 from .ops import (OpSpec, UnknownOpError, materialize, op_impl, register_op,
                   registered_ops)
-from .passes import (ABLATION_PRESETS, CompileDiagnostics, Pass, PassManager,
+from .passes import (ABLATION_PRESETS, DEFAULT_PASS_BUDGETS,
+                     CompileDiagnostics, Pass, PassManager,
                      PassRecord, PASS_RUN_COUNTS, default_passes)
 from .patterns import (coarse_violations, fine_violations, violation_report,
                        access_sig, arrival_order)
@@ -35,15 +40,18 @@ from .schedule import assign_stages, autoschedule
 
 __all__ = [
     "ABLATION_PRESETS", "Access", "ArtifactError", "ArtifactWarning",
-    "BatchJob", "BatchResult", "Buffer",
+    "BatchJob", "BatchResult", "Buffer", "DEFAULT_PASS_BUDGETS",
+    "PassBudgetError",
     "BufferPlan", "CacheStats", "CodoOptions", "CompileCache",
     "CompileDiagnostics", "CompiledDataflow", "DataflowGraph", "FIFO",
-    "GraphCost", "HwParams", "LOWER_CACHE_STATS", "Loop", "LoweredProgram",
+    "GB", "GraphCost", "HwParams", "LOWER_CACHE_STATS", "Loop", "LoweredProgram",
     "OpSpec", "PINGPONG", "PASS_RUN_COUNTS", "Pass", "PassManager",
-    "PassRecord", "SCHEMA_VERSION", "Task", "TransferPlan", "UnknownOpError",
+    "PassRecord", "SCHEMA_VERSION", "ShapedBuffer", "Task", "TraceError",
+    "Tracer", "TransferPlan", "UnknownOpError",
     "V5E",
     "ablation_jobs", "access_sig", "arrival_order", "artifact_summary",
-    "assign_stages",
+    "assign_stages", "batch_workloads", "enforce_pass_budgets",
+    "kernel_workloads",
     "autoschedule", "clear_lower_cache", "coarse_violations", "codo_opt",
     "codo_opt_batch", "conv2d_task", "copy_task", "default_cache",
     "default_manager", "default_passes", "determine_buffers",
@@ -54,6 +62,8 @@ __all__ = [
     "materialize", "matmul_task", "op_impl", "pad_task",
     "parallel_safety", "plan_offchip", "pool_task", "reduce_task",
     "register_group_kernel", "register_op", "registered_ops", "retarget_fn",
-    "sequential_latency", "task_cost", "validate_artifact",
+    "sequential_latency", "task_cost", "trace", "trace_io",
+    "validate_artifact",
     "verify_lowering", "verify_violation_free", "violation_report",
+    "weight_init",
 ]

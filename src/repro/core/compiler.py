@@ -61,7 +61,8 @@ from .costmodel import V5E, GraphCost, HwParams, graph_latency, sequential_laten
 from .fine import FineReport
 from .graph import DataflowGraph
 from .offchip import TransferPlan
-from .passes import ABLATION_PRESETS, CompileDiagnostics, PassManager
+from .passes import (ABLATION_PRESETS, DEFAULT_PASS_BUDGETS,
+                     CompileDiagnostics, PassManager)
 from .patterns import coarse_violations, fine_violations
 from .reuse import ReuseReport
 from .schedule import ScheduleReport
@@ -83,6 +84,17 @@ class CodoOptions:
     balance_n: float = 2.0
     hbm_channels: int = 8
     hw: HwParams = V5E
+    # Per-pass wall-time budgets in seconds ({} / None = unenforced).  A
+    # pass exceeding its budget marks its PassRecord over_budget; see
+    # enforce_pass_budgets() and the CLI --enforce-budgets/--strict flags.
+    # Enforcement-only: budgets never change the compiled design, so they
+    # are excluded from cache_key().
+    pass_budgets: dict[str, float] | None = None
+
+    def __post_init__(self):
+        if self.pass_budgets is not None:
+            self.pass_budgets = {str(k): float(v)
+                                 for k, v in sorted(dict(self.pass_budgets).items())}
 
     # ---- pass-set presets (Table VII as data) -----------------------------
     def pass_set(self) -> tuple[str, ...]:
@@ -146,10 +158,13 @@ class CodoOptions:
 
     # ---- content addressing ------------------------------------------------
     def cache_key(self) -> str:
-        """Stable hash of every option field (HwParams is a frozen dataclass,
-        so its repr is canonical)."""
+        """Stable hash of every option field that affects the compiled
+        design (HwParams is a frozen dataclass, so its repr is canonical).
+        ``pass_budgets`` only gates *reporting*, so two compiles differing
+        only in budgets share a cache entry."""
         sig = tuple((f.name, repr(getattr(self, f.name)))
-                    for f in dataclasses.fields(self))
+                    for f in dataclasses.fields(self)
+                    if f.name != "pass_budgets")
         return hashlib.sha256(repr(sig).encode()).hexdigest()
 
     # ---- JSON serialization (docs/artifact_format.md `options`) -----------
@@ -281,6 +296,33 @@ def codo_opt(graph: DataflowGraph, options: CodoOptions | None = None, *,
     if cache is not None:
         cache.put(key, out)
     return out
+
+
+class PassBudgetError(RuntimeError):
+    """Raised by :func:`enforce_pass_budgets` in strict mode when any pass
+    exceeded its time budget."""
+
+
+def enforce_pass_budgets(diagnostics, *, strict: bool = False) -> list[str]:
+    """Collect per-pass budget violations across many
+    :class:`CompileDiagnostics` (cache hits carry no pass records and are
+    skipped).  Non-strict: emit one :class:`RuntimeWarning` per violation
+    and return them; strict: raise :class:`PassBudgetError` listing all.
+    """
+    import warnings
+    violations: list[str] = []
+    for d in diagnostics:
+        if d is None or d.cache_hit:
+            continue
+        violations.extend(d.budget_violations())
+    if violations and strict:
+        raise PassBudgetError(
+            f"{len(violations)} pass-budget violation(s):\n  "
+            + "\n  ".join(violations))
+    for v in violations:
+        warnings.warn(f"pass budget exceeded: {v}", RuntimeWarning,
+                      stacklevel=2)
+    return violations
 
 
 def verify_violation_free(compiled: CompiledDataflow) -> list[str]:
@@ -479,6 +521,17 @@ def batch_workloads(seq: int = 64):
     return workloads
 
 
+def kernel_workloads():
+    """The Table II kernels as batch-grid factories.  Every entry is a
+    module-level *traced-function* builder (``trace`` of a module-level
+    ``*_fn`` — see repro/models/dataflow_models.py), so jobs built from
+    them pickle into the ``--jobs N`` worker processes like the config
+    grid does: the frontend composes with batch ablations."""
+    from repro.models.dataflow_models import KERNEL_BENCHES
+
+    return dict(KERNEL_BENCHES)
+
+
 # --------------------------------------------------------------------------
 # Pass profile (CLI --profile)
 # --------------------------------------------------------------------------
@@ -542,8 +595,22 @@ def main(argv=None) -> int:
                          "threads")
     ap.add_argument("--seq", type=int, default=64,
                     help="sequence length for LM block graphs")
+    ap.add_argument("--kernels", action="store_true",
+                    help="add the Table II traced-kernel workloads to the "
+                         "grid (module-level traced builders: they ship to "
+                         "the --jobs worker processes like the configs do)")
     ap.add_argument("--budget", type=int, default=2048,
                     help="scheduler budget units")
+    ap.add_argument("--pass-budget", default="", metavar="PASS=SEC[,...]",
+                    help="per-pass wall-time budgets in seconds, e.g. "
+                         "'schedule=0.5,reuse=0.2'; unlisted passes keep "
+                         "the DEFAULT_PASS_BUDGETS entry")
+    ap.add_argument("--enforce-budgets", action="store_true",
+                    help="after the grid, warn about every pass execution "
+                         "that exceeded its time budget")
+    ap.add_argument("--strict", action="store_true",
+                    help="with --enforce-budgets: exit non-zero on any "
+                         "budget violation")
     ap.add_argument("--cache-dir", default=os.environ.get("CODO_CACHE_DIR", ".codo_cache"),
                     help="on-disk compile-cache directory ('' to keep memory-only)")
     ap.add_argument("--no-cache", action="store_true", help="disable caching")
@@ -572,11 +639,15 @@ def main(argv=None) -> int:
         return 0
 
     workloads = batch_workloads(seq=args.seq)
+    if args.kernels:
+        workloads.update(kernel_workloads())
     if args.list:
         print("\n".join(sorted(workloads)))
         return 0
     if args.all and args.configs:
         ap.error("--all and --configs are mutually exclusive")
+    if args.strict and not args.enforce_budgets:
+        ap.error("--strict requires --enforce-budgets")
     if args.configs:
         names = [c.strip() for c in args.configs.split(",") if c.strip()]
         unknown = [n for n in names if n not in workloads]
@@ -599,7 +670,21 @@ def main(argv=None) -> int:
         if args.clear_cache:
             cache.clear(disk=True)
 
-    jobs = ablation_jobs(workloads, presets, budget_units=args.budget)
+    budgets = None
+    if args.pass_budget or args.enforce_budgets:
+        budgets = dict(DEFAULT_PASS_BUDGETS)
+        for item in args.pass_budget.split(","):
+            if not item.strip():
+                continue
+            pname, _, val = item.partition("=")
+            pname = pname.strip()
+            if pname not in budgets or not val:
+                ap.error(f"--pass-budget wants PASS=SECONDS with PASS in "
+                         f"{sorted(budgets)}, got {item!r}")
+            budgets[pname] = float(val)
+
+    jobs = ablation_jobs(workloads, presets, budget_units=args.budget,
+                         pass_budgets=budgets)
     t0 = time.perf_counter()
     results = codo_opt_batch(jobs, max_workers=args.jobs or None, cache=cache,
                              executor=args.executor)
@@ -635,6 +720,23 @@ def main(argv=None) -> int:
     if args.profile:
         print()
         print(profile_table(r.compiled.diagnostics for r in results if r.ok))
+    if args.enforce_budgets:
+        diags = [r.compiled.diagnostics for r in results if r.ok]
+        checked = sum(1 for d in diags if d is not None and not d.cache_hit)
+        try:
+            violations = enforce_pass_budgets(diags, strict=args.strict)
+        except PassBudgetError as e:
+            print(f"STRICT: {e}", file=sys.stderr)
+            return 1
+        if violations:
+            print(f"{len(violations)} pass-budget violation(s) "
+                  f"(non-strict: warnings only)", file=sys.stderr)
+        elif checked:
+            print(f"pass budgets: all passes within budget "
+                  f"({checked} compiles checked)")
+        else:
+            print("pass budgets: nothing to check (every compile was a "
+                  "cache hit — no pass records)")
     if args.export:
         from .artifact import export_artifact
         os.makedirs(args.export, exist_ok=True)

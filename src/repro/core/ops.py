@@ -259,6 +259,34 @@ def _fused(spec: OpSpec, env: dict) -> dict:
     return out
 
 
+@register_op("zeros")
+def _zeros(spec: OpSpec, env: dict) -> dict:
+    """Init half of the Fig. 4b init/pad multi-producer pair: a zeroed
+    canvas of ``attrs['shape']`` (no operands)."""
+    import jax.numpy as jnp
+    import numpy as np
+    dtype = np.dtype(spec.attrs.get("dtype", "float32"))
+    return {spec.outs[0]: jnp.zeros(tuple(int(s) for s in spec.attrs["shape"]),
+                                    dtype)}
+
+
+@register_op("fill_interior")
+def _fill_interior(spec: OpSpec, env: dict) -> dict:
+    """Fill half of the init/pad pair: writes the interior of the canvas
+    the init producer staged under this spec's own output name (both in
+    ``graph.execute``'s accumulating env and in the coarse pass's fused
+    ``parts`` scope)."""
+    import jax.numpy as jnp
+    p = int(spec.attrs["pad"])
+    x = env[spec.ins[0]]
+    canvas = env.get(spec.outs[0])
+    if canvas is None:
+        n, c, h, w = x.shape
+        canvas = jnp.zeros((n, c, h + 2 * p, w + 2 * p), x.dtype)
+    return {spec.outs[0]:
+            canvas.at[:, :, p:p + x.shape[2], p:p + x.shape[3]].set(x)}
+
+
 @register_op("pad2d")
 def _pad2d(spec: OpSpec, env: dict) -> dict:
     import jax.numpy as jnp

@@ -87,20 +87,29 @@ class PassRecord:
     fine_after: int
     rerun: bool = False        # re-execution triggered by an invalidation
     summary: str = ""
+    budget: float = 0.0        # per-pass time budget in seconds (0 = none)
+
+    @property
+    def over_budget(self) -> bool:
+        return self.budget > 0 and self.seconds > self.budget
 
     def line(self) -> str:
         tag = f"{self.name}*" if self.rerun else self.name
         census = ("" if self.coarse_before < 0 else
                   f"coarse {self.coarse_before:>3d}->{self.coarse_after:<3d} "
                   f"fine {self.fine_before:>3d}->{self.fine_after:<3d}  ")
-        return f"{tag:<10s} {self.seconds * 1e3:8.2f} ms  {census}{self.summary}"
+        over = (f"  OVER BUDGET ({self.budget * 1e3:.0f} ms)"
+                if self.over_budget else "")
+        return (f"{tag:<10s} {self.seconds * 1e3:8.2f} ms  "
+                f"{census}{self.summary}{over}")
 
     def to_dict(self) -> dict:
         return {"name": self.name, "seconds": self.seconds,
                 "coarse_before": self.coarse_before,
                 "coarse_after": self.coarse_after,
                 "fine_before": self.fine_before, "fine_after": self.fine_after,
-                "rerun": self.rerun, "summary": self.summary}
+                "rerun": self.rerun, "summary": self.summary,
+                "budget": self.budget}
 
     @classmethod
     def from_dict(cls, doc: dict) -> "PassRecord":
@@ -110,7 +119,8 @@ class PassRecord:
                    int(doc.get("fine_before", -1)),
                    int(doc.get("fine_after", -1)),
                    rerun=bool(doc.get("rerun", False)),
-                   summary=doc.get("summary", ""))
+                   summary=doc.get("summary", ""),
+                   budget=float(doc.get("budget", 0.0)))
 
 
 @dataclass
@@ -134,10 +144,18 @@ class CompileDiagnostics:
             out[r.name] = out.get(r.name, 0.0) + r.seconds
         return out
 
+    def budget_violations(self) -> list[str]:
+        """Human-readable line per pass execution that blew its budget."""
+        return [f"{self.graph}: pass {r.name}{'*' if r.rerun else ''} took "
+                f"{r.seconds * 1e3:.2f} ms > budget {r.budget * 1e3:.2f} ms"
+                for r in self.records if r.over_budget]
+
     def summary(self) -> str:
         src = "cache" if self.cache_hit else f"{len(self.records)} passes"
+        over = sum(1 for r in self.records if r.over_budget)
         return (f"diagnostics: {src}, {self.total_seconds * 1e3:.1f} ms "
-                f"({' '.join(self.pass_names)})")
+                f"({' '.join(self.pass_names)})"
+                + (f"; {over} over budget" if over else ""))
 
     def table(self) -> str:
         head = f"-- passes({self.graph}) --" + (" [cache hit]" if self.cache_hit else "")
@@ -195,6 +213,17 @@ def default_passes() -> list[Pass]:
                        g, out.buffer_plan, o.hw, o.budget_units, o.max_degree,
                        o.balance_n, o.enable_up, o.enable_dp)),
     ]
+
+
+# Default per-pass wall-time budgets in seconds, used when budget
+# enforcement is requested without explicit limits (CLI --enforce-budgets).
+# Generous on purpose: they exist to catch pathological regressions (a pass
+# going quadratic on a big graph), not to flag normal variance.  Override
+# per compile via ``CodoOptions.pass_budgets``.
+DEFAULT_PASS_BUDGETS: dict[str, float] = {
+    "coarse": 2.0, "fine": 2.0, "reuse": 2.0,
+    "buffers": 1.0, "offchip": 1.0, "schedule": 5.0,
+}
 
 
 # Table VII ablation grid as data: preset -> enabled pass names.
@@ -283,8 +312,10 @@ class PassManager:
             else:
                 setattr(out, p.result_attr, report)
         summary = report.summary() if hasattr(report, "summary") else ""
+        budgets = getattr(options, "pass_budgets", None) or {}
         records.append(PassRecord(p.name, dt, cb, ca, fb, fa,
-                                  rerun=rerun, summary=summary))
+                                  rerun=rerun, summary=summary,
+                                  budget=float(budgets.get(p.name, 0.0))))
 
     def run(self, graph: Any, options: Any, out: Any = None) -> CompileDiagnostics:
         t0 = time.perf_counter()
@@ -307,6 +338,6 @@ class PassManager:
 
 
 __all__ = [
-    "ABLATION_PRESETS", "CompileDiagnostics", "Pass", "PassManager",
-    "PassRecord", "PASS_RUN_COUNTS", "default_passes",
+    "ABLATION_PRESETS", "DEFAULT_PASS_BUDGETS", "CompileDiagnostics", "Pass",
+    "PassManager", "PassRecord", "PASS_RUN_COUNTS", "default_passes",
 ]

@@ -5,42 +5,89 @@ CPU-scale LM demo:
     PYTHONPATH=src python -m repro.launch.serve --arch gpt2-medium --smoke \\
         --requests 6 --batch 4 --max-new 8
 
-Artifact serving — no recompile, no model code: import a versioned JSON
-artifact (docs/artifact_format.md), lower it through the op registry, and
-run a request loop against the jitted program:
+Artifact serving — no recompile, no model code: ``codo.load`` a versioned
+JSON artifact (docs/artifact_format.md) into a ``CompiledProgram`` and run
+a request loop against the jitted design.  By default each request gets
+random inputs; production-style serving feeds real tensors from an npz
+archive (one array per input buffer, validated against the artifact's
+buffer table):
 
     PYTHONPATH=src python -m repro.core.compiler --configs gpt2-medium \\
         --opts opt5 --export artifacts/
     PYTHONPATH=src python -m repro.launch.serve \\
-        --artifact artifacts/gpt2-medium-opt5.json --requests 8
+        --artifact artifacts/gpt2-medium-opt5.json --requests 8 \\
+        --inputs batch.npz
 """
 
 from __future__ import annotations
 
 import argparse
+import sys
 import time
 
 import jax
 import numpy as np
 
 
+class InputError(ValueError):
+    """An --inputs npz archive does not match the artifact's buffers."""
+
+
+def load_input_env(path: str, graph) -> dict:
+    """Load real input tensors for ``graph`` from an ``.npz`` archive.
+
+    Every ``input`` buffer must be present with the exact declared shape;
+    arrays are cast to the buffer dtype (an information-losing cast — e.g.
+    float64 data into a float32 buffer — is allowed, mirroring jnp).
+    Weight buffers may optionally be supplied too; unknown array names are
+    an error, so a typo'd key cannot silently fall back to random data.
+    """
+    with np.load(path) as npz:
+        arrays = {k: npz[k] for k in npz.files}
+    bindable = {b.name: b for b in graph.buffers.values()
+                if b.kind in ("input", "weight")}
+    unknown = sorted(set(arrays) - set(bindable))
+    if unknown:
+        raise InputError(f"{path}: unknown array names {unknown}; "
+                         f"bindable buffers: {sorted(bindable)}")
+    missing = sorted(b.name for b in graph.inputs() if b.name not in arrays)
+    if missing:
+        raise InputError(f"{path}: missing input arrays {missing} "
+                         f"(inputs: {sorted(b.name for b in graph.inputs())})")
+    env = {}
+    for name, arr in arrays.items():
+        buf = bindable[name]
+        if tuple(arr.shape) != tuple(buf.shape):
+            raise InputError(f"{path}: array {name!r} has shape "
+                             f"{tuple(arr.shape)}, buffer expects "
+                             f"{tuple(buf.shape)}")
+        env[name] = arr.astype(np.dtype(buf.dtype), copy=False)
+    return env
+
+
 def serve_artifact(args) -> int:
     """Serve straight from an imported artifact: the design the compiler
     exported is the unit of deployment — this launcher never sees the
     model-building code that produced it."""
-    from repro.core import lower
-    from repro.core.artifact import artifact_summary, import_artifact
+    from repro import api as codo
+    from repro.core.artifact import artifact_summary
     from repro.kernels import register_all
     from repro.models.dataflow_models import random_inputs
 
     register_all()     # fused-group kinds resolve against this process
-    compiled = import_artifact(args.artifact)   # validates before anything
+    program = codo.load(args.artifact)          # validates before anything
     print(artifact_summary(args.artifact))
-    low = lower(compiled)          # jitted
+    low = program.lower(jit=True)
     print(low.summary())
 
-    envs = [random_inputs(compiled.graph, seed=args.seed + i)
-            for i in range(args.requests)]
+    if args.inputs:
+        env = load_input_env(args.inputs, program.graph)
+        envs = [program.make_env(**env)] * args.requests
+        print(f"serving real inputs from {args.inputs} "
+              f"({sorted(env)})")
+    else:
+        envs = [random_inputs(program.graph, seed=args.seed + i)
+                for i in range(args.requests)]
     outs = low(envs[0])            # warmup: trace + compile
     jax.block_until_ready(outs)
 
@@ -48,10 +95,9 @@ def serve_artifact(args) -> int:
     for env in envs:
         jax.block_until_ready(low(env))
     dt = time.time() - t0
-    out_names = sorted(b.name for b in compiled.graph.outputs())
     print(f"{args.requests} requests in {dt * 1e3:.1f} ms "
           f"({args.requests / max(dt, 1e-9):.1f} req/s); "
-          f"outputs {out_names}")
+          f"outputs {sorted(program.output_names)}")
     return 0
 
 
@@ -90,6 +136,10 @@ def main(argv=None) -> int:
     ap.add_argument("--artifact", default="",
                     help="serve a compiled-design JSON artifact instead "
                          "(see docs/artifact_format.md)")
+    ap.add_argument("--inputs", default="",
+                    help="with --artifact: npz archive of real input "
+                         "tensors (one array per input buffer; shapes/"
+                         "dtypes validated) instead of random data")
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--cache-len", type=int, default=128)
@@ -101,9 +151,15 @@ def main(argv=None) -> int:
 
     if bool(args.arch) == bool(args.artifact):
         ap.error("exactly one of --arch or --artifact is required")
+    if args.inputs and not args.artifact:
+        ap.error("--inputs only applies to --artifact serving")
     if args.artifact and args.requests < 1:
         ap.error("--requests must be >= 1 when serving an artifact")
-    return serve_artifact(args) if args.artifact else serve_lm(args)
+    try:
+        return serve_artifact(args) if args.artifact else serve_lm(args)
+    except InputError as e:
+        print(f"error: {e}", file=sys.stderr)
+        return 2
 
 
 if __name__ == "__main__":

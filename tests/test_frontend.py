@@ -1,0 +1,360 @@
+"""Traced-function frontend (repro.core.frontend + repro.api / codo).
+
+Covers the ISSUE-4 acceptance criteria: structural-hash parity between
+traced and hand-built graphs (same compile-cache key), tracer edge cases
+(multi-consumer bypass, multi-producer init/pad pairs, stencil re-reads),
+numeric end-to-end equality ``codo.compile(fn)(x) == fn(x)`` for every
+traced Table II kernel, pass-budget enforcement, npz input loading for
+artifact serving, and process-pool composition of traced workloads.
+"""
+
+import pickle
+
+import numpy as np
+import pytest
+
+import codo
+from repro.core import (CodoOptions, CompileCache, PassBudgetError,
+                        codo_opt, codo_opt_batch, enforce_pass_budgets,
+                        kernel_workloads, verify_violation_free)
+from repro.core import frontend as F
+from repro.core.compiler import BatchJob
+from repro.core.patterns import (MPSC, SPMC, STENCIL_REREAD,
+                                 coarse_violations, fine_violations)
+from repro.models import dataflow_models as dm
+
+# Table II traced functions at test-scale shapes (structure identical to
+# the paper-scale defaults; only trip counts shrink).
+SMALL_KERNELS = {
+    "atax": (dm.atax_fn, [(48, 40), (40,)]),
+    "gesummv": (dm.gesummv_fn, [(40, 40), (40, 40), (40,)]),
+    "gemm": (dm.gemm_fn, [(24, 16), (16, 20)]),
+    "mvt": (dm.mvt_fn, [(40, 40), (40,), (40,)]),
+    "3mm": (dm.three_mm_fn, [(16, 16)] * 4),
+    "residual_mlp": (dm.residual_mlp_fn, [(8, 32)]),
+    "autoencoder": (dm.autoencoder_fn, [(8, 64)]),
+    "residual_block": (dm.residual_block_fn, [(1, 8, 12, 12)]),
+    "dws_conv_block": (dm.dws_conv_block_fn, [(1, 8, 12, 12)]),
+    "conv3_block": (dm.conv3_block_fn, [(1, 3, 14, 14)]),
+    "feed_forward": (dm.feed_forward_fn, [(16, 32)]),
+    "multi_head_attention": (dm.multi_head_attention_fn, [(24, 32)]),
+}
+
+
+def _inputs(shapes, seed=0):
+    rng = np.random.default_rng(seed)
+    return [rng.standard_normal(s).astype(np.float32) for s in shapes]
+
+
+# --------------------------------------------------------------------------
+# Structural parity: tracing is a frontend, not a different compiler input
+# --------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("name", sorted(dm.HANDBUILT_BENCHES))
+def test_traced_equals_handbuilt(name):
+    traced_builder, hand_builder = dm.HANDBUILT_BENCHES[name]
+    traced, hand = traced_builder(), hand_builder()
+    assert traced.structural_signature() == hand.structural_signature()
+    assert traced.structural_hash() == hand.structural_hash()
+
+
+def test_traced_hits_handbuilt_cache_entry():
+    """Same structural hash => same compile-cache key: a graph compiled
+    through the low-level road is a warm hit for codo.compile."""
+    cache = CompileCache()
+    cold = codo_opt(dm.gemm_handbuilt(24, 20, 16), cache=cache)
+    assert not cold.cache_hit
+    warm = codo.compile(dm.gemm_fn, (24, 16), (16, 20), name="gemm",
+                        cache=cache)
+    assert warm.cache_hit
+    assert warm.graph.structural_hash() == cold.graph.structural_hash()
+
+
+# --------------------------------------------------------------------------
+# Tracer mechanics + edge cases
+# --------------------------------------------------------------------------
+
+
+def test_trace_io_names_follow_parameters():
+    g, ins, outs = F.trace_io(dm.mvt_fn, (8, 8), (8,), (8,), name="mvt")
+    assert ins == ["A", "y1", "y2"]
+    assert len(outs) == 1 and g.buffers[outs[0]].kind == "output"
+    assert [b.name for b in g.inputs()] == ins
+
+
+def test_operator_sugar_matches_explicit_ops():
+    def sugar(x, w):
+        return (x @ w + x).T * 2.0
+
+    def explicit(x, w):
+        return F.scale(F.transpose(F.add(F.matmul(x, w), x)), 2.0)
+
+    a = F.trace(sugar, (6, 6), (6, 6), name="g")
+    b = F.trace(explicit, (6, 6), (6, 6), name="g")
+    assert a.structural_hash() == b.structural_hash()
+
+
+def test_multi_consumer_bypass():
+    """Fig. 4a: a residual skip makes the loaded input SPMC."""
+    g = F.trace(dm.residual_mlp_fn, (4, 16))
+    vs = coarse_violations(g)
+    assert SPMC in {v.kind for v in vs}
+    ld = next(b for b in g.buffers.values() if b.name.startswith("ld"))
+    assert len(g.consumers(ld.name)) == 2
+
+
+def _pad_pair_conv(x):
+    p = F.pad(x, 1, pair=True)
+    return F.conv(p, 4, 3, pad=0, relu=False)
+
+
+def test_multi_producer_init_pad_pair():
+    """Fig. 4b: pad(pair=True) emits init+fill producers of one buffer;
+    the coarse pass fuses them and the fused design stays numerically
+    equal to the eager function."""
+    g = F.trace(_pad_pair_conv, (1, 3, 8, 8))
+    pad_buf = next(b.name for b in g.buffers.values()
+                   if b.name.startswith("pad"))
+    assert len(g.producers(pad_buf)) == 2
+    assert MPSC in {v.kind for v in coarse_violations(g)}
+
+    (x,) = _inputs([(1, 3, 8, 8)])
+    want = g.execute({"x": x, **{b.name: F.weight_init(b.shape)
+                                 for b in g.weights()}})
+    program = codo.compile(_pad_pair_conv, (1, 3, 8, 8), cache=None)
+    assert not coarse_violations(program.graph)
+    assert not verify_violation_free(program.compiled)
+    got = program(x, jit=False)
+    np.testing.assert_allclose(np.asarray(got),
+                               np.asarray(list(want.values())[0]),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(got),
+                               np.asarray(_pad_pair_conv(x)),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_stencil_reread_from_conv_window():
+    """A conv window re-reads padded rows: the traced graph must carry the
+    stride-bearing access the fine pass classifies as a stencil re-read."""
+    g = F.trace(dm.conv3_block_fn, (1, 3, 10, 10))
+    kinds = {v.kind for v in fine_violations(g)}
+    assert STENCIL_REREAD in kinds
+    conv = next(t for t in g.tasks if t.op == "conv")
+    window = [a for a in conv.reads
+              if any(len(dim) > 1 for dim in a.index)]
+    assert window, "conv input read lost its multi-var window dims"
+
+
+def test_trace_errors():
+    with pytest.raises(F.TraceError):       # returns an input unchanged
+        F.trace(lambda x: x, (4,))
+    with pytest.raises(F.TraceError):       # eager array leaking into a trace
+        F.trace(lambda x: F.add(x, np.ones((4,), np.float32)), (4,))
+    with pytest.raises(F.TraceError):       # same buffer returned twice
+        F.trace(lambda x: (F.relu(x),) * 2, (4,))
+
+    def mixed(a):
+        leaked = {}
+
+        def inner(b):
+            leaked["b"] = F.relu(b)
+            return leaked["b"]
+
+        F.trace(inner, (4,))                # buffers must not cross traces
+        return F.add(a, leaked["b"])
+
+    with pytest.raises(F.TraceError):
+        F.trace(mixed, (4,))
+
+
+def test_trace_requires_specs_and_callable():
+    with pytest.raises(F.TraceError):
+        F.trace(dm.gemm_fn)
+    with pytest.raises(F.TraceError):
+        F.trace("not callable", (4,))
+    with pytest.raises(F.TraceError):
+        F.trace(lambda x: F.relu(x), 7)     # int is not a shape
+
+
+# --------------------------------------------------------------------------
+# Numeric end-to-end: codo.compile(fn)(x) == fn(x) for every Table II kernel
+# --------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("name", sorted(SMALL_KERNELS))
+def test_compiled_matches_eager(name):
+    fn, shapes = SMALL_KERNELS[name]
+    xs = _inputs(shapes)
+    program = codo.compile(fn, *shapes, cache=None)
+    got = program(*xs, jit=False)
+    want = fn(*xs)                       # the same function, run eagerly
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-5)
+    program.verify(*xs)                  # and against the task-level oracle
+
+
+def test_compiled_jit_path():
+    fn, shapes = SMALL_KERNELS["residual_mlp"]
+    xs = _inputs(shapes)
+    program = codo.compile(fn, *shapes, cache=None)
+    np.testing.assert_allclose(np.asarray(program(*xs, jit=True)),
+                               np.asarray(fn(*xs)), rtol=1e-4, atol=1e-5)
+
+
+def test_bound_weights_override_defaults():
+    fn, shapes = SMALL_KERNELS["feed_forward"]
+    xs = _inputs(shapes)
+    program = codo.compile(fn, *shapes, cache=None)
+    wnames = [b.name for b in program.graph.weights()]
+    custom = {n: np.zeros(program.graph.buffers[n].shape, np.float32)
+              for n in wnames}
+    program.bind(**custom)
+    out = program(*xs, jit=False)
+    assert np.allclose(np.asarray(out), 0.0)     # all-zero weights
+    with pytest.raises(KeyError):
+        program.bind(nonexistent=np.zeros((1,)))
+    with pytest.raises(ValueError):
+        program.bind(**{wnames[0]: np.zeros((3, 3), np.float32)})
+
+
+def test_call_signature_validation():
+    program = codo.compile(dm.gemm_fn, (8, 6), (6, 4), cache=None)
+    with pytest.raises(TypeError):
+        program(np.zeros((8, 6), np.float32))            # missing B
+    with pytest.raises(TypeError):
+        program(*_inputs([(8, 6), (6, 4), (4, 4)]))      # too many
+    with pytest.raises(ValueError):
+        program(np.zeros((9, 6), np.float32), np.zeros((6, 4), np.float32))
+    inter = next(b for b in program.graph.buffers.values()
+                 if b.kind not in ("input", "weight"))
+    with pytest.raises(KeyError):                        # not overridable
+        program.make_env(*_inputs([(8, 6), (6, 4)]),
+                         **{inter.name: np.zeros(inter.shape, np.float32)})
+
+
+def test_export_load_roundtrip(tmp_path):
+    fn, shapes = SMALL_KERNELS["gemm"]
+    xs = _inputs(shapes)
+    program = codo.compile(fn, *shapes, cache=None)
+    path = tmp_path / "gemm.json"
+    program.export(str(path))
+    loaded = codo.load(str(path))
+    assert loaded.graph.structural_hash() == program.graph.structural_hash()
+    np.testing.assert_allclose(np.asarray(loaded(*xs, jit=False)),
+                               np.asarray(program(*xs, jit=False)),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_compile_accepts_ready_graph():
+    g = dm.gemm_handbuilt(12, 10, 8)
+    program = codo.compile(g, cache=None)
+    assert program.input_names == ["A", "B"]
+    with pytest.raises(codo.TraceError):
+        codo.compile(g, (12, 8), cache=None)
+
+
+# --------------------------------------------------------------------------
+# Pass budgets (satellite: --enforce-budgets)
+# --------------------------------------------------------------------------
+
+
+def test_pass_budget_records_and_enforcement():
+    opts = CodoOptions(pass_budgets={"schedule": 1e-9})
+    c = codo_opt(dm.gemm(24, 24, 24), opts, cache=None)
+    viol = c.diagnostics.budget_violations()
+    assert viol and "schedule" in viol[0]
+    assert any(r.over_budget for r in c.diagnostics.records)
+    with pytest.warns(RuntimeWarning, match="pass budget exceeded"):
+        got = enforce_pass_budgets([c.diagnostics])
+    assert got == viol
+    with pytest.raises(PassBudgetError):
+        enforce_pass_budgets([c.diagnostics], strict=True)
+
+
+def test_pass_budget_within_limit_is_quiet():
+    opts = CodoOptions(pass_budgets={"schedule": 1e6})
+    c = codo_opt(dm.gemm(24, 24, 24), opts, cache=None)
+    assert c.diagnostics.budget_violations() == []
+    assert enforce_pass_budgets([c.diagnostics], strict=True) == []
+
+
+def test_pass_budgets_do_not_change_cache_key():
+    assert (CodoOptions(pass_budgets={"fine": 0.5}).cache_key()
+            == CodoOptions().cache_key())
+    # ...but real option changes still do.
+    assert CodoOptions(fine=False).cache_key() != CodoOptions().cache_key()
+
+
+def test_pass_budgets_survive_options_roundtrip():
+    opts = CodoOptions(pass_budgets={"fine": 0.5, "coarse": 0.25})
+    back = CodoOptions.from_dict(opts.to_dict())
+    assert back.pass_budgets == {"coarse": 0.25, "fine": 0.5}
+
+
+# --------------------------------------------------------------------------
+# npz input loading (satellite: serve --inputs)
+# --------------------------------------------------------------------------
+
+
+def test_load_input_env_validates(tmp_path):
+    from repro.launch.serve import InputError, load_input_env
+    g = F.trace(dm.gemm_fn, (6, 4), (4, 5), name="gemm")
+    A, B = _inputs([(6, 4), (4, 5)])
+
+    good = tmp_path / "good.npz"
+    np.savez(good, A=A, B=B)
+    env = load_input_env(str(good), g)
+    assert set(env) == {"A", "B"} and env["A"].dtype == np.float32
+
+    np.savez(tmp_path / "missing.npz", A=A)
+    with pytest.raises(InputError, match="missing input"):
+        load_input_env(str(tmp_path / "missing.npz"), g)
+
+    np.savez(tmp_path / "shape.npz", A=A, B=B.T)
+    with pytest.raises(InputError, match="shape"):
+        load_input_env(str(tmp_path / "shape.npz"), g)
+
+    np.savez(tmp_path / "unknown.npz", A=A, B=B, typo=A)
+    with pytest.raises(InputError, match="unknown array names"):
+        load_input_env(str(tmp_path / "unknown.npz"), g)
+
+
+# --------------------------------------------------------------------------
+# Batch / process-pool composition (satellite: picklable traced workloads)
+# --------------------------------------------------------------------------
+
+
+def test_traced_workloads_pickle():
+    wl = kernel_workloads()
+    assert set(wl) == set(dm.KERNEL_BENCHES)
+    jobs = [BatchJob(n, "opt5", wl[n], CodoOptions.opt5())
+            for n in ("gemm", "atax")]
+    rebuilt = pickle.loads(pickle.dumps(jobs))
+    g = rebuilt[0].build()
+    assert g.structural_hash() == dm.gemm().structural_hash()
+
+
+def test_traced_workloads_through_process_pool():
+    jobs = [BatchJob(n, "opt5", fn, CodoOptions.opt5())
+            for n, fn in sorted(kernel_workloads().items())[:3]]
+    results = codo_opt_batch(jobs, max_workers=2, cache=None,
+                             executor="process")
+    assert all(r.ok for r in results), [r.error for r in results]
+    # spec-carrying results cross the pipe executable
+    assert all(t.fn is not None
+               for r in results for t in r.compiled.graph.tasks)
+
+
+# --------------------------------------------------------------------------
+# Smoke CLI (the CI compile-smoke job drives this cold/warm)
+# --------------------------------------------------------------------------
+
+
+def test_api_cli_cold_then_warm(tmp_path, capsys):
+    from repro import api
+    cache_dir = str(tmp_path / "cache")
+    assert api.main(["residual_mlp", "--cache-dir", cache_dir]) == 0
+    assert "cache_hit=False" in capsys.readouterr().out
+    assert api.main(["residual_mlp", "--cache-dir", cache_dir]) == 0
+    assert "cache_hit=True" in capsys.readouterr().out
