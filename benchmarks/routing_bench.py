@@ -1,0 +1,139 @@
+"""Per-group pallas-vs-xla routing benchmark (the ISSUE-5 measurement).
+
+For every fusion group the router maps to a Pallas kernel in the
+acceptance workloads (``gpt2_block``, ``resnet18``), run the routed chain
+**both ways** on identical inputs — the registered kernel step vs the
+same tasks' jnp fns composed and jit'd (the ``xla-fused`` path) — and
+report the per-group latency pair.  Besides the CSV rows every suite
+emits, this one writes the machine-readable document the nightly CI job
+uploads::
+
+    results/bench/routing_groups.json
+
+Backend note: on TPU the kernel step is the compiled Pallas kernel; on
+CPU/GPU hosts it is the kernel's fused jnp reference under one jit (see
+``repro/kernels/streamfuse/ops.py``), so both sides compile through XLA
+and the comparison measures the fusion decision, not interpret-mode
+overhead.  The JSON records the backend so readers can tell which regime
+produced the numbers.
+"""
+
+from __future__ import annotations
+
+import json
+import time
+from pathlib import Path
+
+OUT = Path(__file__).resolve().parents[1] / "results" / "bench"
+
+WORKLOADS = {
+    "gpt2_block": lambda dm: dm.gpt2_block(),
+    "resnet18": lambda dm: dm.resnet18(32),
+}
+
+WARMUP = 3
+REPS = 9
+
+
+def _time_pair(fn_a, fn_b, arg, block) -> tuple[float, float]:
+    """Best-of-N for two callables on the same input, reps *interleaved*
+    so machine-load drift hits both sides equally."""
+    for _ in range(WARMUP):
+        block(fn_a(arg))
+        block(fn_b(arg))
+    best_a = best_b = float("inf")
+    for rep in range(REPS):
+        first, second = (fn_a, fn_b) if rep % 2 == 0 else (fn_b, fn_a)
+        for fn in (first, second):
+            t0 = time.perf_counter()
+            block(fn(arg))
+            dt = time.perf_counter() - t0
+            if fn is fn_a:
+                best_a = min(best_a, dt)
+            else:
+                best_b = min(best_b, dt)
+    return best_a * 1e3, best_b * 1e3
+
+
+def bench_workload(name: str, build) -> list[dict]:
+    import jax
+
+    from repro.core import CodoOptions, codo_opt, lower
+    from repro.core.routing import registered_patterns
+    from repro.models import dataflow_models as dm
+
+    graph = build(dm)
+    compiled = codo_opt(graph, CodoOptions.preset("opt5"), cache=None)
+    low = lower(compiled, jit=False)
+    pats = {p.name: p for p in registered_patterns()}
+
+    # Full buffer scope: every intermediate value, produced task by task —
+    # the routed chains' inputs are sliced out of it below.
+    scope = dict(dm.random_inputs(compiled.graph))
+    for t in compiled.graph.toposort():
+        scope.update(t.fn(scope))
+
+    records = []
+    for group in low.groups:
+        for route in group.routes:
+            tasks = [compiled.graph.task(n) for n in route.tasks]
+            interior = {t.writes[0].buffer for t in tasks[:-1]}
+            ext = sorted({a.buffer for t in tasks for a in t.reads
+                          if a.buffer not in interior})
+            env = {b: scope[b] for b in ext}
+            out_buf = tasks[-1].writes[0].buffer
+
+            kernel_step = pats[route.kernel].factory(
+                compiled.graph, group, tasks)
+            fns = [t.fn for t in tasks]
+
+            def xla_fused(e, _fns=fns, _out=out_buf):
+                s = dict(e)
+                for f in _fns:
+                    s.update(f(s))
+                return {_out: s[_out]}
+
+            block = jax.block_until_ready
+            pallas_ms, xla_ms = _time_pair(kernel_step, jax.jit(xla_fused),
+                                           env, block)
+            records.append({
+                "workload": name, "gid": group.gid, "kernel": route.kernel,
+                "tasks": list(route.tasks),
+                "pallas_ms": round(pallas_ms, 4),
+                "xla_ms": round(xla_ms, 4),
+                "speedup": round(xla_ms / max(pallas_ms, 1e-9), 4),
+            })
+    return records
+
+
+def routing_groups(write_json: bool = True):
+    """Suite entry (``benchmarks.run`` registers it as ``routing``)."""
+    import jax
+
+    from benchmarks.tables import Row
+
+    all_records = []
+    for name, build in WORKLOADS.items():
+        all_records.extend(bench_workload(name, build))
+
+    # Same-computation parity on CPU hosts means speedups fluctuate around
+    # 1.0 with machine noise; "no slower" is judged with this tolerance.
+    tolerance = 0.05
+    doc = {"backend": jax.default_backend(), "tolerance": tolerance,
+           "records": all_records}
+    if write_json:
+        OUT.mkdir(parents=True, exist_ok=True)
+        (OUT / "routing_groups.json").write_text(
+            json.dumps(doc, indent=2, sort_keys=True) + "\n")
+
+    rows = [Row(f"routing/{r['workload']}/g{r['gid']}/{r['kernel']}",
+                r["speedup"],
+                f"pallas_ms={r['pallas_ms']};xla_ms={r['xla_ms']};"
+                f"tasks={len(r['tasks'])}")
+            for r in all_records]
+    routed = len(all_records)
+    wins = sum(1 for r in all_records if r["speedup"] >= 1.0 - tolerance)
+    rows.append(Row("routing/summary", routed,
+                    f"groups_routed;no_slower={wins}/{routed}"
+                    f"(tol={tolerance:.0%});backend={doc['backend']}"))
+    return rows

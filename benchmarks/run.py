@@ -18,7 +18,7 @@ from pathlib import Path
 
 sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
 
-from benchmarks import roofline, tables  # noqa: E402
+from benchmarks import roofline, routing_bench, tables  # noqa: E402
 
 OUT = Path(__file__).resolve().parents[1] / "results" / "bench"
 
@@ -32,6 +32,9 @@ SUITES = {
     "fig11": tables.parallelism_sweep,
     "table8": tables.fifo_percentage,
     "micro": tables.kernel_microbench,
+    # per-group pallas-vs-xla latency pairs; also writes
+    # results/bench/routing_groups.json (uploaded by the nightly CI job)
+    "routing": routing_bench.routing_groups,
 }
 
 

@@ -24,9 +24,10 @@ from .frontend import (GB, ShapedBuffer, TraceError, Tracer, trace, trace_io,
 from .graph import (FIFO, PINGPONG, Access, Buffer, DataflowGraph, Loop, Task,
                     conv2d_task, copy_task, ewise_task, full_index, idx,
                     matmul_task, pad_task, pool_task, reduce_task, retarget_fn)
-from .lowering import (LOWER_CACHE_STATS, LoweredProgram, clear_lower_cache,
-                       fusion_groups, lower, lower_artifact,
-                       register_group_kernel, verify_lowering)
+from .lowering import (LOWER_CACHE_STATS, FusionGroup, LoweredProgram,
+                       clear_lower_cache, fusion_groups, lower,
+                       lower_artifact, register_group_kernel,
+                       verify_lowering, verify_routing)
 from .offchip import TransferPlan, host_manifest, plan_offchip
 from .ops import (OpSpec, UnknownOpError, materialize, op_impl, register_op,
                   registered_ops)
@@ -36,6 +37,9 @@ from .passes import (ABLATION_PRESETS, DEFAULT_PASS_BUDGETS,
 from .patterns import (coarse_violations, fine_violations, violation_report,
                        access_sig, arrival_order)
 from .reuse import generate_reuse_buffers, parallel_safety
+from .routing import (KernelPattern, RoutedKernel, XLA_FUSED,
+                      pallas_disabled, register_kernel_pattern,
+                      registered_patterns, route_plan)
 from .schedule import assign_stages, autoschedule
 
 __all__ = [
@@ -44,8 +48,10 @@ __all__ = [
     "PassBudgetError",
     "BufferPlan", "CacheStats", "CodoOptions", "CompileCache",
     "CompileDiagnostics", "CompiledDataflow", "DataflowGraph", "FIFO",
-    "GB", "GraphCost", "HwParams", "LOWER_CACHE_STATS", "Loop", "LoweredProgram",
+    "FusionGroup", "GB", "GraphCost", "HwParams", "KernelPattern",
+    "LOWER_CACHE_STATS", "Loop", "LoweredProgram",
     "OpSpec", "PINGPONG", "PASS_RUN_COUNTS", "Pass", "PassManager",
+    "RoutedKernel", "XLA_FUSED",
     "PassRecord", "SCHEMA_VERSION", "ShapedBuffer", "Task", "TraceError",
     "Tracer", "TransferPlan", "UnknownOpError",
     "V5E",
@@ -60,10 +66,13 @@ __all__ = [
     "fusion_groups", "generate_reuse_buffers", "graph_latency",
     "host_manifest", "idx", "import_artifact", "lower", "lower_artifact",
     "materialize", "matmul_task", "op_impl", "pad_task",
-    "parallel_safety", "plan_offchip", "pool_task", "reduce_task",
-    "register_group_kernel", "register_op", "registered_ops", "retarget_fn",
+    "pallas_disabled", "parallel_safety", "plan_offchip", "pool_task",
+    "reduce_task",
+    "register_group_kernel", "register_kernel_pattern", "register_op",
+    "registered_ops", "registered_patterns", "retarget_fn", "route_plan",
     "sequential_latency", "task_cost", "trace", "trace_io",
     "validate_artifact",
-    "verify_lowering", "verify_violation_free", "violation_report",
+    "verify_lowering", "verify_routing", "verify_violation_free",
+    "violation_report",
     "weight_init",
 ]

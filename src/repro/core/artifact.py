@@ -57,9 +57,19 @@ from .offchip import TransferPlan
 from .ops import OpSpec, op_impl, registered_ops
 from .passes import CompileDiagnostics
 from .patterns import coarse_violations
+from .routing import (XLA_FUSED, ensure_kernel_patterns, match_group,
+                      pallas_disabled)
 from .schedule import ScheduleReport
 
-SCHEMA_VERSION = "1.0"
+SCHEMA_VERSION = "1.1"
+
+# Schema changelog
+# ----------------
+# 1.1  `fusion.kernels`: per-group kernel-routing decision ("xla-fused" or
+#      "pallas:<pattern>[+...]"), aligned with `fusion.groups`; advisory —
+#      readers re-derive routing against their own kernel registry and
+#      warn (never fail) on drift.  v1.0 readers ignore it (unknown-field
+#      policy); this reader accepts v1.0 documents without it.
 
 # Tool identifier recorded in `generator`; consumers should key behaviour
 # on `schema_version`, never on this string.
@@ -109,6 +119,32 @@ def _fifo_groups(graph: DataflowGraph, impl: dict[str, str]) -> list[list[str]]:
     return sorted(by_root.values(), key=lambda names: pos[names[0]])
 
 
+def _group_kernels(graph: DataflowGraph, impl: dict[str, str],
+                   groups: list[list[str]],
+                   compiled: "CompiledDataflow | None" = None) -> list[str]:
+    """Per-group kernel-routing decision, aligned with ``groups``.
+
+    Prefers the decision the lowering recorded on the design's diagnostics
+    (the kernels that actually ran); otherwise derives it structurally
+    from this process's pattern registry — jax-free either way.  The
+    record is advisory: importers re-derive against their own registry.
+    """
+    recorded = (compiled.diagnostics.group_kernels
+                if compiled is not None and compiled.diagnostics is not None
+                else {})
+    if recorded and set(recorded) == {str(i) for i in range(len(groups))}:
+        return [recorded[str(i)] for i in range(len(groups))]
+    ensure_kernel_patterns()     # best-effort; jax-less stays xla-fused
+    if pallas_disabled():
+        return [XLA_FUSED] * len(groups)
+    out = []
+    for names in groups:
+        routes = match_group(graph, names, impl) if len(names) > 1 else []
+        out.append("pallas:" + "+".join(p.name for p, _t in routes)
+                   if routes else XLA_FUSED)
+    return out
+
+
 def export_artifact(compiled: CompiledDataflow,
                     path: str | Path | None = None) -> dict:
     """Serialize a compiled design to the versioned JSON artifact format.
@@ -134,6 +170,7 @@ def export_artifact(compiled: CompiledDataflow,
             "never execute. Attach specs at graph construction.")
 
     impl = compiled.buffer_plan.impl if compiled.buffer_plan else {}
+    groups = _fifo_groups(g, impl)
     doc: dict[str, Any] = {
         "schema_version": SCHEMA_VERSION,
         "generator": GENERATOR,
@@ -145,7 +182,8 @@ def export_artifact(compiled: CompiledDataflow,
                           if compiled.transfer_plan else None),
         "schedule": (compiled.schedule_report.to_dict()
                      if compiled.schedule_report else None),
-        "fusion": {"groups": _fifo_groups(g, impl)},
+        "fusion": {"groups": groups,
+                   "kernels": _group_kernels(g, impl, groups, compiled)},
         "cost": {
             "baseline_cycles": (compiled.baseline.total_cycles
                                 if compiled.baseline else None),
@@ -249,6 +287,12 @@ _SPEC_FIELDS = {
     "outs": ((list,), False),
     "attrs": ((dict,), False),
     "parts": ((list,), False),
+}
+
+_FUSION_FIELDS = {
+    "groups": ((list,), True),
+    # v1.1: advisory per-group routing decision, aligned with `groups`.
+    "kernels": ((list,), False),
 }
 
 _COST_FIELDS = {
@@ -396,6 +440,15 @@ def validate_artifact(doc: Any) -> list[str]:
 
     if isinstance(doc.get("graph"), dict):
         _check_graph(doc["graph"], errors, notes)
+    fusion = doc.get("fusion")
+    if isinstance(fusion, dict):
+        _check_fields(fusion, "fusion", _FUSION_FIELDS, errors, notes)
+        kernels = fusion.get("kernels")
+        groups = fusion.get("groups")
+        if (isinstance(kernels, list) and isinstance(groups, list)
+                and len(kernels) != len(groups)):
+            errors.append(f"fusion.kernels: {len(kernels)} entries for "
+                          f"{len(groups)} groups (must align)")
     if isinstance(doc.get("cost"), dict):
         _check_fields(doc["cost"], "cost", _COST_FIELDS, errors, notes)
     if isinstance(doc.get("integrity"), dict):
@@ -547,6 +600,19 @@ def import_artifact(source: str | Path | dict, *,
                 "fusion.groups disagree with the groups derived from the "
                 "graph + buffer_plan — artifact edited inconsistently? "
                 f"(stored {len(stored)} groups, derived {len(derived)})")
+        # v1.1 `fusion.kernels` is *advisory*: routing depends on the
+        # reading process's kernel registry and env switches, so drift
+        # warns (the reader re-routes at lower()) instead of failing.
+        stored_kernels = (doc.get("fusion") or {}).get("kernels")
+        if stored_kernels is not None:
+            local = _group_kernels(graph, impl, derived)
+            if [str(k) for k in stored_kernels] != local:
+                _warn("fusion.kernels drift: the exporter routed "
+                      f"{sum(1 for k in stored_kernels if k != XLA_FUSED)} "
+                      f"group(s) to Pallas kernels, this process derives "
+                      f"{sum(1 for k in local if k != XLA_FUSED)} — routing "
+                      "is re-derived against the local kernel registry at "
+                      "lower() time")
 
     # The final cost is recomputed (the model is deterministic pure Python
     # over the stored graph); the recorded summary cross-checks for
@@ -594,12 +660,15 @@ def artifact_summary(source: str | Path | dict) -> str:
     impl = plan.get("impl") or {}
     fifo = sum(1 for v in impl.values() if v == FIFO)
     groups = (doc.get("fusion") or {}).get("groups") or []
+    kernels = (doc.get("fusion") or {}).get("kernels") or []
+    routed = sum(1 for k in kernels if k != XLA_FUSED)
     lines = [
         f"artifact {g.get('name', '?')} (schema v{doc.get('schema_version')})",
         f"  {len(g.get('tasks') or ())} tasks, "
         f"{len(g.get('buffers') or ())} buffers; "
         f"{fifo}/{len(impl)} internal edges FIFO; "
-        f"{len(groups)} fusion groups",
+        f"{len(groups)} fusion groups"
+        + (f" ({routed} pallas-routed)" if kernels else ""),
     ]
     if cost.get("final_cycles") is not None:
         lines.append(

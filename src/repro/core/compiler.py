@@ -501,23 +501,30 @@ def _resnet18_workload():
     return resnet18(32)
 
 
+def _gpt2_block_workload(seq: int = 128):
+    from repro.models.dataflow_models import gpt2_block
+    return gpt2_block(S=seq)
+
+
 def _arch_workload(cfg, seq: int):
     from repro.models.dataflow_models import arch_block_graph
     return arch_block_graph(cfg, S=seq)
 
 
 def batch_workloads(seq: int = 64):
-    """The 12 batch-compile model configs: every arch config in
+    """The batch-compile model grid: every arch config in
     ``src/repro/configs/`` as a representative block graph, plus the
-    paper's flagship ResNet-18 CNN.  Imported lazily so ``repro.core``
-    stays importable without jax.  Factories are ``functools.partial`` of
-    module-level builders — picklable, so the grid ships to worker
-    processes."""
+    paper's flagship ResNet-18 CNN and the Fig. 9 GPT-2 block (the two
+    kernel-routing acceptance workloads).  Imported lazily so
+    ``repro.core`` stays importable without jax.  Factories are
+    ``functools.partial`` of module-level builders — picklable, so the
+    grid ships to worker processes."""
     from repro.configs import CONFIGS
 
     workloads = {name: functools.partial(_arch_workload, cfg, seq)
                  for name, cfg in sorted(CONFIGS.items())}
     workloads["resnet18"] = _resnet18_workload
+    workloads["gpt2_block"] = functools.partial(_gpt2_block_workload, seq)
     return workloads
 
 
@@ -561,6 +568,44 @@ def profile_table(diagnostics) -> str:
     for name, tot in sorted(totals.items(), key=lambda kv: -kv[1]):
         lines.append(f"  {name:<10s} {calls[name]:>5d} {tot * 1e3:>10.2f} "
                      f"{tot / calls[name] * 1e3:>9.2f} {tot / grand:>6.1%}")
+    return "\n".join(lines)
+
+
+def _register_kernel_patterns() -> None:
+    """Routing-aware verbs (``--profile`` routing table, ``--export``
+    artifacts, artifact import) see the real kernel registry."""
+    from .routing import ensure_kernel_patterns
+    ensure_kernel_patterns()
+
+
+def routing_table(results) -> str:
+    """The ``--profile`` kernel-routing table: per grid cell, how many
+    fusion groups route to Pallas kernels and through which patterns.
+    Derived structurally (:func:`repro.core.routing.route_plan`) — no
+    lowering, no jax execution."""
+    from .routing import XLA_FUSED, route_plan
+    lines = ["-- kernel routing (fusion groups -> implementation) --"]
+    pattern_counts: dict[str, int] = {}
+    total = routed = 0
+    for r in results:
+        if not r.ok:
+            continue
+        impl = r.compiled.buffer_plan.impl if r.compiled.buffer_plan else {}
+        plan = route_plan(r.compiled.graph, impl)
+        cell_routed = [p for p in plan if p["kernel"] != XLA_FUSED]
+        total += len(plan)
+        routed += len(cell_routed)
+        for p in cell_routed:
+            for route in p["routes"]:
+                pattern_counts[route["kernel"]] = \
+                    pattern_counts.get(route["kernel"], 0) + 1
+        detail = (": " + ", ".join(sorted({p["kernel"] for p in cell_routed}))
+                  if cell_routed else "")
+        lines.append(f"  {r.config}/{r.preset}: {len(cell_routed)}/"
+                     f"{len(plan)} groups pallas-routed{detail}")
+    pats = (", ".join(f"{k} x{v}" for k, v in sorted(pattern_counts.items()))
+            or "none")
+    lines.append(f"  total: {routed}/{total} groups routed; patterns: {pats}")
     return "\n".join(lines)
 
 
@@ -631,6 +676,7 @@ def main(argv=None) -> int:
 
     if args.import_artifact:
         from .artifact import artifact_summary, import_artifact
+        _register_kernel_patterns()
         compiled = import_artifact(args.import_artifact)
         print(artifact_summary(args.import_artifact))
         print(compiled.report())
@@ -683,6 +729,8 @@ def main(argv=None) -> int:
                          f"{sorted(budgets)}, got {item!r}")
             budgets[pname] = float(val)
 
+    if args.profile or args.export:
+        _register_kernel_patterns()     # routing verbs see the real registry
     jobs = ablation_jobs(workloads, presets, budget_units=args.budget,
                          pass_budgets=budgets)
     t0 = time.perf_counter()
@@ -720,6 +768,8 @@ def main(argv=None) -> int:
     if args.profile:
         print()
         print(profile_table(r.compiled.diagnostics for r in results if r.ok))
+        print()
+        print(routing_table(results))
     if args.enforce_budgets:
         diags = [r.compiled.diagnostics for r in results if r.ok]
         checked = sum(1 for d in diags if d is not None and not d.cache_hit)

@@ -325,6 +325,70 @@ class GB:
                         {"alpha": float(alpha), "beta": float(beta)})))
         return out
 
+    def affine(self, x: str, a: float, b: float) -> str:
+        """``a*x + b`` — scalar-operand add/sub (reflected-operator sugar)."""
+        shp = self.shape[x]
+        out = self.buf(self.fresh("affine"), shp)
+        self.g.add_task(ewise_task(
+            self.fresh("affine_t"), out, [x], shp, op="ewise",
+            spec=OpSpec("affine", (x,), (out,),
+                        {"a": float(a), "b": float(b)})))
+        return out
+
+    def divc(self, x: str, c: float) -> str:
+        shp = self.shape[x]
+        out = self.buf(self.fresh("divc"), shp)
+        self.g.add_task(ewise_task(
+            self.fresh("divc_t"), out, [x], shp, op="ewise", flops_per_iter=4.0,
+            spec=OpSpec("divc", (x,), (out,), {"c": float(c)})))
+        return out
+
+    def rdivc(self, x: str, c: float) -> str:
+        shp = self.shape[x]
+        out = self.buf(self.fresh("rdivc"), shp)
+        self.g.add_task(ewise_task(
+            self.fresh("rdivc_t"), out, [x], shp, op="ewise", flops_per_iter=4.0,
+            spec=OpSpec("rdivc", (x,), (out,), {"c": float(c)})))
+        return out
+
+    def div(self, a: str, b: str) -> str:
+        shp = self.shape[a]
+        out = self.buf(self.fresh("div"), shp)
+        self.g.add_task(ewise_task(
+            self.fresh("div_t"), out, [a, b], shp, op="ewise", flops_per_iter=4.0,
+            spec=OpSpec("div", (a, b), (out,))))
+        return out
+
+    def mul(self, a: str, b: str) -> str:
+        shp = self.shape[a]
+        out = self.buf(self.fresh("mul"), shp)
+        self.g.add_task(ewise_task(
+            self.fresh("mul_t"), out, [a, b], shp, op="ewise",
+            spec=OpSpec("mul", (a, b), (out,))))
+        return out
+
+    def const(self, value) -> str:
+        """A compile-time constant array as a producer task (array-left
+        operands lifted into the trace)."""
+        arr = np.asarray(value)
+        if arr.dtype == object:
+            raise TraceError(f"cannot lift {type(value).__name__} into a "
+                             "trace as a constant array")
+        arr = arr.astype(np.float32) if arr.dtype.kind in "fiu" else arr
+        out = self.buf(self.fresh("const"), arr.shape)
+        dims = [f"d{i}" for i in range(max(arr.ndim, 1))]
+        t = Task(self.fresh("const_t"),
+                 loops=[Loop(d, int(n)) for d, n in
+                        zip(dims, arr.shape or (1,))],
+                 reads=[],
+                 writes=[Access(out, full_index(dims[:arr.ndim]), True)],
+                 op="copy", flops_per_iter=0.0,
+                 spec=OpSpec("const", (), (out,),
+                             {"value": arr.tolist(), "dtype": arr.dtype.name,
+                              "shape": arr.shape}))
+        self.g.add_task(t)
+        return out
+
 
 # --------------------------------------------------------------------------
 # Symbolic values
@@ -353,21 +417,44 @@ class ShapedBuffer:
     def ndim(self) -> int:
         return len(self.shape)
 
+    # numpy must not try to coerce a ShapedBuffer into an object array:
+    # returning NotImplemented from its ufuncs hands `ndarray <op> buffer`
+    # expressions to the reflected methods below.
+    __array_ufunc__ = None
+
     # Convenience operator sugar — traced functions read like the math.
+    # Scalar and array-left operands are handled by the op functions
+    # (scalars become affine/divc/rdivc attrs, arrays lift to const
+    # tasks), so every reflected form stays bit-exact with eager mode.
     def __add__(self, other):
         return add(self, other)
 
     def __radd__(self, other):
         return add(other, self)
 
+    def __sub__(self, other):
+        return sub(self, other)
+
+    def __rsub__(self, other):
+        return sub(other, self)
+
     def __matmul__(self, other):
         return matmul(self, other)
 
-    def __mul__(self, s):
-        return scale(self, s)
+    def __rmatmul__(self, other):
+        return matmul(other, self)
 
-    def __rmul__(self, s):
-        return scale(self, s)
+    def __mul__(self, other):
+        return mul(self, other)
+
+    def __rmul__(self, other):
+        return mul(other, self)
+
+    def __truediv__(self, other):
+        return div(self, other)
+
+    def __rtruediv__(self, other):
+        return div(other, self)
 
     @property
     def T(self):  # noqa: N802 — numpy's spelling
@@ -526,6 +613,37 @@ def _tracer_of(*values) -> Tracer | None:
     return tr
 
 
+def _as_scalar(v):
+    """``v`` as a Python float if it is scalar-like (Python number, numpy
+    scalar, 0-d array), else ``None``."""
+    if isinstance(v, bool) or v is None:
+        return None
+    if isinstance(v, (int, float, np.integer, np.floating)):
+        return float(v)
+    if isinstance(v, np.ndarray) and v.ndim == 0:
+        return float(v)
+    return None
+
+
+def _lift(tr: Tracer, v) -> str:
+    """Buffer name of operand ``v`` inside trace ``tr``: traced buffers
+    pass through, concrete arrays become ``const`` producer tasks."""
+    if isinstance(v, ShapedBuffer):
+        return tr.name_of(v)
+    return tr.gb.const(v)
+
+
+def _lift_ewise(tr: Tracer, a, b) -> tuple[str, str]:
+    na, nb = _lift(tr, a), _lift(tr, b)
+    sa, sb = tr.gb.shape[na], tr.gb.shape[nb]
+    if sa != sb:
+        raise TraceError(
+            f"elementwise operands must have identical shapes inside a "
+            f"trace (got {sa} and {sb}; broadcasting is not part of the "
+            "dataflow IR)")
+    return na, nb
+
+
 # --------------------------------------------------------------------------
 # The op namespace.  Each function dispatches: symbolic operands record a
 # task through GB (identical structure to hand-built graphs), concrete
@@ -579,9 +697,48 @@ def gelu(x):
 
 def add(a, b):
     tr = _tracer_of(a, b)
-    if tr is not None:
-        return tr.wrap(tr.gb.add(tr.name_of(a), tr.name_of(b)))
-    return _eager("add", (a, b))
+    if tr is None:
+        return _eager("add", (a, b))
+    for x, c in ((a, _as_scalar(b)), (b, _as_scalar(a))):
+        if c is not None:                    # x + c == c + x, bit-exact
+            return tr.wrap(tr.gb.affine(tr.name_of(x), 1.0, c))
+    return tr.wrap(tr.gb.add(*_lift_ewise(tr, a, b)))
+
+
+def sub(a, b):
+    tr = _tracer_of(a, b)
+    if tr is None:
+        return _eager("vadd", (a, b), {"alpha": 1.0, "beta": -1.0})
+    c = _as_scalar(b)
+    if c is not None:                        # x - c == x + (-c), bit-exact
+        return tr.wrap(tr.gb.affine(tr.name_of(a), 1.0, -c))
+    c = _as_scalar(a)
+    if c is not None:                        # c - x == (-x) + c, bit-exact
+        return tr.wrap(tr.gb.affine(tr.name_of(b), -1.0, c))
+    return tr.wrap(tr.gb.vadd(*_lift_ewise(tr, a, b), alpha=1.0, beta=-1.0))
+
+
+def mul(a, b):
+    tr = _tracer_of(a, b)
+    if tr is None:
+        return _eager("mul", (a, b))
+    for x, c in ((a, _as_scalar(b)), (b, _as_scalar(a))):
+        if c is not None:                    # x * c == c * x, bit-exact
+            return tr.wrap(tr.gb.scale(tr.name_of(x), c))
+    return tr.wrap(tr.gb.mul(*_lift_ewise(tr, a, b)))
+
+
+def div(a, b):
+    tr = _tracer_of(a, b)
+    if tr is None:
+        return _eager("div", (a, b))
+    c = _as_scalar(b)
+    if c is not None:                        # true division, not 1/c scale
+        return tr.wrap(tr.gb.divc(tr.name_of(a), c))
+    c = _as_scalar(a)
+    if c is not None:
+        return tr.wrap(tr.gb.rdivc(tr.name_of(b), c))
+    return tr.wrap(tr.gb.div(*_lift_ewise(tr, a, b)))
 
 
 def vadd(a, b, alpha: float = 1.0, beta: float = 1.0):
@@ -609,7 +766,8 @@ def softmax(x):
 def matmul(a, b):
     tr = _tracer_of(a, b)
     if tr is not None:
-        return tr.wrap(tr.gb.matmul(tr.name_of(a), tr.name_of(b)))
+        # Array operands (W @ x with a concrete W) lift to const tasks.
+        return tr.wrap(tr.gb.matmul(_lift(tr, a), _lift(tr, b)))
     return _eager("matmul", (a, b))
 
 
@@ -669,7 +827,7 @@ __all__ = [
     "GB", "ShapedBuffer", "TraceError", "Tracer", "buffer", "trace",
     "trace_io", "weight_init",
     # ops
-    "add", "conv", "fc", "flatten", "gelu", "global_avgpool", "load",
-    "matmul", "maxpool", "mv", "pad", "relu", "scale", "softmax",
-    "transpose", "vadd",
+    "add", "conv", "div", "fc", "flatten", "gelu", "global_avgpool", "load",
+    "matmul", "maxpool", "mul", "mv", "pad", "relu", "scale", "softmax",
+    "sub", "transpose", "vadd",
 ]

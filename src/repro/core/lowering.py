@@ -2,10 +2,15 @@
 
 FIFO edges become *fusion groups*: maximal chains of FIFO-connected tasks
 are executed as one fused function whose intermediates never round-trip
-through HBM (inside jit, XLA fuses them; for hot patterns the group is
-routed to a hand-written Pallas streaming kernel via the kernel registry).
-Ping-pong edges are group boundaries — the intermediate materializes in
-HBM, double-buffered by the consumer's grid pipeline.
+through HBM.  Which implementation runs a group is a *routing* decision
+(:mod:`repro.core.routing`): producer→consumer chains matching a
+registered :class:`~repro.core.routing.KernelPattern` — the motivating
+pad→conv→relu chain, matmul→\\*ewise→matmul chains, softmax·matmul
+attention tails — execute as hand-written Pallas streaming kernels; the
+rest composes the tasks' jnp fns and lets XLA fuse inside jit.  Ping-pong
+edges are group boundaries — the intermediate materializes in HBM,
+double-buffered by the consumer's grid pipeline.  ``CODO_DISABLE_PALLAS=1``
+turns all routing off.
 
 This file is the analogue of the paper's HLS-C++ code generation (§VII-C);
 functional equivalence against the un-optimized program is checked the
@@ -13,13 +18,15 @@ same way the paper's testbench does — by executing both and comparing.
 
 Lowering results are memoized like compiles: keyed on the compiled graph's
 ``structural_hash()`` — which covers the fusion decisions (buffer impls,
-fused-group ids) — plus the lowering flags and the kernel-registry epoch.
-Re-lowering a structurally identical design (e.g. a disk-cache hit in a
-fresh ``CompiledDataflow``) reuses the already-built (and, under jit, the
-already-traced) program.  The same content-addressing contract as the
-compile cache applies: graphs with equal structural hashes must have equal
-numerics (automatic for spec-carrying tasks, the ``const:`` tag convention
-for closure-built ones).
+fused-group ids) — plus the lowering flags, the routing switches
+(``CODO_DISABLE_PALLAS`` and the kernel-pattern registry epoch), and the
+op-registry epoch.  Re-lowering a structurally identical design (e.g. a
+disk-cache hit in a fresh ``CompiledDataflow``) reuses the already-built
+(and, under jit, the already-traced) program; flipping any routing switch
+changes the key, so a toggle never serves a stale program.  The same
+content-addressing contract as the compile cache applies: graphs with
+equal structural hashes must have equal numerics (automatic for
+spec-carrying tasks, the ``const:`` tag convention for closure-built ones).
 """
 
 from __future__ import annotations
@@ -36,23 +43,28 @@ import numpy as np
 from .compiler import CompiledDataflow
 from .graph import FIFO, DataflowGraph, GraphError, Task
 from .ops import registry_epoch as _ops_epoch
-
-# Registry: op-pattern -> kernel factory.  kernels/__init__.py populates
-# this with Pallas implementations ("streamfuse" etc.); the generic path
-# composes the tasks' jnp fns and lets XLA fuse.
-_KERNEL_REGISTRY: dict[tuple[str, ...], Callable[..., Callable]] = {}
-
-# Epoch bumps on every kernel registration: memoized lowerings from before
-# a registration must not serve afterwards (the group->kernel routing
-# could differ).
-_REGISTRY_EPOCH = 0
-
+from .routing import (XLA_FUSED, KernelPattern, RoutedKernel,
+                      ensure_kernel_patterns, pallas_disabled,
+                      pallas_interpret_forced, register_kernel_pattern,
+                      route_groups, routing_epoch)
 
 def register_group_kernel(pattern: tuple[str, ...],
                           factory: Callable[..., Callable]) -> None:
-    global _REGISTRY_EPOCH
-    _KERNEL_REGISTRY[pattern] = factory
-    _REGISTRY_EPOCH += 1
+    """Legacy exact-op registration (pre-routing API): ``pattern`` is the
+    full op tuple of a group and ``factory(graph, group)`` builds the
+    step.  Kept as a shim over :func:`repro.core.routing.
+    register_kernel_pattern`; new kernels should register a
+    :class:`~repro.core.routing.KernelPattern` directly."""
+    def adapter(graph, group, tasks):
+        # Old factories index group.tasks positionally, assuming the match
+        # covers the whole group; hand them a group view of just the chain.
+        chain = FusionGroup(group.gid, [t.name for t in tasks],
+                            tuple(t.op for t in tasks))
+        return factory(graph, chain)
+
+    register_kernel_pattern(KernelPattern(
+        name="+".join(pattern), pattern=tuple(pattern), factory=adapter,
+        description="legacy exact-op registration"))
 
 
 @dataclass
@@ -60,7 +72,8 @@ class FusionGroup:
     gid: int
     tasks: list[str]
     ops: tuple[str, ...]
-    kernel: str = "xla-fused"     # or the registered Pallas kernel name
+    kernel: str = XLA_FUSED       # or "pallas:<pattern>[+<pattern>...]"
+    routes: list[RoutedKernel] = field(default_factory=list)
 
 
 @dataclass
@@ -73,15 +86,22 @@ class LoweredProgram:
     def __call__(self, env: dict[str, Any]) -> dict[str, Any]:
         return self.fn(env)
 
+    @property
+    def routed_groups(self) -> list[FusionGroup]:
+        return [g for g in self.groups if g.routes]
+
     def summary(self) -> str:
         return (f"lowered {self.graph.name}: {len(self.groups)} fusion groups "
-                f"({sum(len(g.tasks) for g in self.groups)} tasks), "
+                f"({sum(len(g.tasks) for g in self.groups)} tasks, "
+                f"{len(self.routed_groups)} pallas-routed), "
                 f"{len(self.materialized)} HBM intermediates")
 
 
 def fusion_groups(graph: DataflowGraph, impl: dict[str, str]) -> list[FusionGroup]:
     """Union tasks across FIFO edges (single-producer-single-consumer by
-    construction after the coarse pass)."""
+    construction after the coarse pass).  Routing (which kernel runs each
+    group) is a separate decision — see :func:`repro.core.routing.
+    route_groups`."""
     parent: dict[str, str] = {t.name: t.name for t in graph.tasks}
 
     def find(x: str) -> str:
@@ -105,12 +125,9 @@ def fusion_groups(graph: DataflowGraph, impl: dict[str, str]) -> list[FusionGrou
     for gid, (_root, names) in enumerate(
             sorted(by_root.items(), key=lambda kv: order.index(kv[1][0]))):
         ops = tuple(graph.task(n).op for n in names)
-        g = FusionGroup(gid, names, ops)
-        if ops in _KERNEL_REGISTRY:
-            g.kernel = "+".join(ops)
+        groups.append(FusionGroup(gid, names, ops))
         for n in names:
             graph.task(n).fused_group = gid
-        groups.append(g)
     return groups
 
 
@@ -130,9 +147,50 @@ def clear_lower_cache() -> None:
         LOWER_CACHE_STATS.update(hits=0, misses=0)
 
 
+def _build_steps(graph: DataflowGraph, groups: list[FusionGroup],
+                 use_registered_kernels: bool) -> list[Callable[[dict], dict]]:
+    """The executable step list: routed chains become one kernel step
+    emitted at the chain's *last* task position (every external operand of
+    every matched task is in scope by then); everything else runs task by
+    task (XLA still fuses under jit)."""
+    step_at: dict[str, Callable[[dict], dict]] = {}
+    skip: set[str] = set()
+    if use_registered_kernels:
+        from .routing import registered_patterns
+        pats = {p.name: p for p in registered_patterns()}
+        for g in groups:
+            built: list[RoutedKernel] = []
+            for route in g.routes:
+                pat = pats.get(route.kernel)
+                tasks = [graph.task(n) for n in route.tasks]
+                step = pat.factory(graph, g, tasks) if pat else None
+                if step is None:        # factory declined at build time
+                    continue
+                built.append(route)
+                step_at[route.tasks[-1]] = step
+                skip.update(route.tasks[:-1])
+            if len(built) != len(g.routes):
+                g.routes = built
+                g.kernel = ("pallas:" + "+".join(r.kernel for r in built)
+                            if built else XLA_FUSED)
+    else:
+        for g in groups:
+            g.routes = []
+            g.kernel = XLA_FUSED
+
+    steps: list[Callable[[dict], dict]] = []
+    for t in graph.toposort():
+        if t.name in skip:
+            continue
+        steps.append(step_at.get(t.name, t.fn))
+    return steps
+
+
 def lower(compiled: CompiledDataflow, jit: bool = True,
           use_registered_kernels: bool = True, *,
           memo: bool = True) -> LoweredProgram:
+    # The compiler — not the user — wires the Pallas kernels in.
+    ensure_kernel_patterns()
     graph = compiled.graph
     stripped = [t.name for t in graph.tasks if t.fn is None]
     if stripped:
@@ -143,11 +201,13 @@ def lower(compiled: CompiledDataflow, jit: bool = True,
             "is structural-only; build graphs with declarative OpSpecs "
             "(repro.core.ops) for executable cache entries, or recompile "
             "with an in-memory cache / cache=None before lowering.")
-    # Key covers fusion decisions (via the structural hash), both kernel
-    # registries (group kernels AND op impls — re-registering either must
-    # not serve programs built from the old implementations), and flags.
+    # Key covers fusion decisions (via the structural hash), the flags, and
+    # every routing-relevant switch: the CODO_DISABLE_PALLAS escape hatch,
+    # the kernel-pattern registry epoch, and the op-impl registry epoch —
+    # flipping any of them must never serve a stale program.
     key = (graph.structural_hash(), bool(jit), bool(use_registered_kernels),
-           _REGISTRY_EPOCH, _ops_epoch())
+           pallas_disabled(), pallas_interpret_forced(), routing_epoch(),
+           _ops_epoch())
     if memo:
         with _LOWER_LOCK:
             hit = _LOWER_CACHE.get(key)
@@ -161,37 +221,23 @@ def lower(compiled: CompiledDataflow, jit: bool = True,
             for g in hit.groups:
                 for n in g.tasks:
                     graph.task(n).fused_group = g.gid
+            _record_routing(compiled, hit.groups)
             return LoweredProgram(graph, hit.groups, hit.fn,
                                   list(hit.materialized))
     impl = compiled.buffer_plan.impl if compiled.buffer_plan else {}
     groups = fusion_groups(graph, impl)
-
-    # Execution follows the global topo order (fusion groups may interleave
-    # through ping-pong edges of *other* groups); a group is executed as a
-    # registered fused kernel only when its tasks are topologically
-    # contiguous, otherwise task-by-task (XLA still fuses under jit).
-    order = graph.toposort()
-    topo_pos = {t.name: i for i, t in enumerate(order)}
-    steps: list[Callable[[dict], dict]] = []
-    emitted: set[str] = set()
-    for t in order:
-        if t.name in emitted:
-            continue
-        g = groups[t.fused_group]
-        contiguous = (sorted(topo_pos[n] for n in g.tasks)
-                      == list(range(topo_pos[g.tasks[0]],
-                                    topo_pos[g.tasks[0]] + len(g.tasks))))
-        if (use_registered_kernels and g.ops in _KERNEL_REGISTRY
-                and t.name == g.tasks[0] and contiguous):
-            steps.append(_KERNEL_REGISTRY[g.ops](graph, g))
-            emitted.update(g.tasks)
-        else:
-            steps.append(t.fn)
-            emitted.add(t.name)
+    if use_registered_kernels:
+        route_groups(graph, groups, impl)
+    steps = _build_steps(graph, groups, use_registered_kernels)
 
     outputs = [b.name for b in graph.outputs()]
+    # Interior buffers of routed chains never leave the kernel — even the
+    # ping-pong-planned ones the generic path would bounce through HBM.
+    swallowed = {graph.task(n).writes[0].buffer
+                 for g in groups for r in g.routes for n in r.tasks[:-1]}
     materialized = [b.name for b in graph.intermediates()
-                    if impl.get(b.name) == "pingpong"]
+                    if impl.get(b.name) == "pingpong"
+                    and b.name not in swallowed]
 
     def program(env: dict) -> dict:
         scope = dict(env)
@@ -201,6 +247,7 @@ def lower(compiled: CompiledDataflow, jit: bool = True,
 
     fn = jax.jit(program) if jit else program
     out = LoweredProgram(graph, groups, fn, materialized)
+    _record_routing(compiled, groups)
     if memo:
         with _LOWER_LOCK:
             LOWER_CACHE_STATS["misses"] += 1
@@ -209,6 +256,15 @@ def lower(compiled: CompiledDataflow, jit: bool = True,
             while len(_LOWER_CACHE) > _lower_cache_size():
                 _LOWER_CACHE.popitem(last=False)
     return out
+
+
+def _record_routing(compiled: CompiledDataflow,
+                    groups: list[FusionGroup]) -> None:
+    """Surface the routing decision on the design's diagnostics so it
+    travels with reports, ``--profile`` tables, and exported artifacts."""
+    if compiled.diagnostics is not None:
+        compiled.diagnostics.group_kernels = {
+            str(g.gid): g.kernel for g in groups}
 
 
 def lower_artifact(source, *, jit: bool = True,
@@ -239,3 +295,20 @@ def verify_lowering(source_graph: DataflowGraph, compiled: CompiledDataflow,
         np.testing.assert_allclose(np.asarray(got[k]), np.asarray(want[k]),
                                    rtol=rtol, atol=atol,
                                    err_msg=f"output {k} diverged after lowering")
+
+
+def verify_routing(compiled: CompiledDataflow, env: dict,
+                   rtol: float = 1e-5, atol: float = 1e-5) -> LoweredProgram:
+    """Assert the pattern-routed lowering matches the un-routed generic
+    lowering on ``env`` — the same executable-comparison check
+    :func:`verify_lowering` performs against the oracle, aimed at the
+    routing layer specifically.  Returns the routed program."""
+    generic = lower(compiled, jit=False, use_registered_kernels=False)
+    routed = lower(compiled, jit=False, use_registered_kernels=True)
+    got, want = routed(env), generic(env)
+    for k in want:
+        np.testing.assert_allclose(
+            np.asarray(got[k]), np.asarray(want[k]), rtol=rtol, atol=atol,
+            err_msg=f"output {k}: pattern-routed kernel diverged from the "
+                    f"xla-fused lowering")
+    return routed

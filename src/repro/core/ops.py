@@ -335,6 +335,52 @@ def _scale(spec: OpSpec, env: dict) -> dict:
     return {spec.outs[0]: env[spec.ins[0]] * float(spec.attrs["s"])}
 
 
+@register_op("affine")
+def _affine(spec: OpSpec, env: dict) -> dict:
+    """``a*x + b`` — the scalar-operand form of add/sub (reflected-operator
+    sugar).  With ``a`` in {1, -1} the result is bit-exact with the eager
+    ``x + b`` / ``b - x`` expressions it stands in for."""
+    a = float(spec.attrs.get("a", 1.0))
+    b = float(spec.attrs.get("b", 0.0))
+    x = env[spec.ins[0]]
+    return {spec.outs[0]: (x if a == 1.0 else (-x if a == -1.0 else a * x)) + b}
+
+
+@register_op("divc")
+def _divc(spec: OpSpec, env: dict) -> dict:
+    """``x / c`` — true division (not scale-by-reciprocal), so traced and
+    eager results agree to the last ulp."""
+    return {spec.outs[0]: env[spec.ins[0]] / float(spec.attrs["c"])}
+
+
+@register_op("rdivc")
+def _rdivc(spec: OpSpec, env: dict) -> dict:
+    """``c / x`` — the scalar-left reflected division."""
+    return {spec.outs[0]: float(spec.attrs["c"]) / env[spec.ins[0]]}
+
+
+@register_op("div")
+def _div(spec: OpSpec, env: dict) -> dict:
+    return {spec.outs[0]: env[spec.ins[0]] / env[spec.ins[1]]}
+
+
+@register_op("mul")
+def _mul(spec: OpSpec, env: dict) -> dict:
+    return {spec.outs[0]: env[spec.ins[0]] * env[spec.ins[1]]}
+
+
+@register_op("const")
+def _const(spec: OpSpec, env: dict) -> dict:
+    """Materialize a compile-time constant array (array-left operands
+    lifted into a trace).  The value lives in ``attrs`` as nested tuples —
+    plain data, so it enters the structural signature and pickles."""
+    import jax.numpy as jnp
+    import numpy as np
+    return {spec.outs[0]: jnp.asarray(np.array(
+        spec.attrs["value"], dtype=np.dtype(spec.attrs.get("dtype",
+                                                           "float32"))))}
+
+
 @register_op("softmax")
 def _softmax(spec: OpSpec, env: dict) -> dict:
     import jax

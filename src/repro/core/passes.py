@@ -132,6 +132,10 @@ class CompileDiagnostics:
     total_seconds: float = 0.0
     cache_hit: bool = False
     cache_key: str = ""
+    # Kernel-routing decision per fusion group (gid -> "xla-fused" or
+    # "pallas:<pattern>[+...]").  Populated by lowering.lower() — empty
+    # until the design has been lowered at least once.
+    group_kernels: dict[str, str] = field(default_factory=dict)
 
     @property
     def pass_names(self) -> list[str]:
@@ -150,12 +154,20 @@ class CompileDiagnostics:
                 f"{r.seconds * 1e3:.2f} ms > budget {r.budget * 1e3:.2f} ms"
                 for r in self.records if r.over_budget]
 
+    def routed_kernels(self) -> dict[str, str]:
+        """Only the groups routed off the generic path."""
+        return {gid: k for gid, k in self.group_kernels.items()
+                if k != "xla-fused"}
+
     def summary(self) -> str:
         src = "cache" if self.cache_hit else f"{len(self.records)} passes"
         over = sum(1 for r in self.records if r.over_budget)
+        routed = len(self.routed_kernels())
         return (f"diagnostics: {src}, {self.total_seconds * 1e3:.1f} ms "
                 f"({' '.join(self.pass_names)})"
-                + (f"; {over} over budget" if over else ""))
+                + (f"; {over} over budget" if over else "")
+                + (f"; {routed}/{len(self.group_kernels)} groups "
+                   f"pallas-routed" if self.group_kernels else ""))
 
     def table(self) -> str:
         head = f"-- passes({self.graph}) --" + (" [cache hit]" if self.cache_hit else "")
@@ -163,10 +175,13 @@ class CompileDiagnostics:
 
     # ---- JSON serialization (docs/artifact_format.md `diagnostics`) ------
     def to_dict(self) -> dict:
-        return {"graph": self.graph,
-                "records": [r.to_dict() for r in self.records],
-                "total_seconds": self.total_seconds,
-                "cache_hit": self.cache_hit, "cache_key": self.cache_key}
+        out = {"graph": self.graph,
+               "records": [r.to_dict() for r in self.records],
+               "total_seconds": self.total_seconds,
+               "cache_hit": self.cache_hit, "cache_key": self.cache_key}
+        if self.group_kernels:
+            out["group_kernels"] = dict(self.group_kernels)
+        return out
 
     @classmethod
     def from_dict(cls, doc: dict) -> "CompileDiagnostics":
@@ -175,7 +190,9 @@ class CompileDiagnostics:
                             for r in doc.get("records", ())],
                    total_seconds=float(doc.get("total_seconds", 0.0)),
                    cache_hit=bool(doc.get("cache_hit", False)),
-                   cache_key=doc.get("cache_key", ""))
+                   cache_key=doc.get("cache_key", ""),
+                   group_kernels={str(k): str(v) for k, v in
+                                  (doc.get("group_kernels") or {}).items()})
 
 
 # --------------------------------------------------------------------------

@@ -1,0 +1,331 @@
+"""Pattern-directed kernel routing for fusion groups (paper §VII-C).
+
+The lowering forms *fusion groups* — maximal FIFO-connected task sets whose
+intermediates never round-trip through HBM.  This module decides **which
+implementation executes each group**: a hand-written Pallas streaming
+kernel when the group contains a producer→consumer chain matching a
+registered :class:`KernelPattern`, the generic ``xla-fused`` composition
+otherwise.  HIDA and FLOWER both map fused dataflow nodes onto specialized
+implementations the same way — pattern match first, fall back second —
+and it is where the measured latency wins come from.
+
+Pattern language
+----------------
+
+A pattern is a tuple of items matched against a *chain* of tasks (each
+task's output feeding exactly the next task) inside one fusion group:
+
+* ``"matmul"``   — exactly one task whose ``Task.op`` is ``matmul``;
+* ``"*ewise"``   — zero or more consecutive ``ewise`` tasks (wildcard).
+
+``("matmul", "*ewise", "matmul")`` therefore matches a bare matmul→matmul
+chain as well as matmul→gelu→matmul.  Chains must be exclusive: every
+interior buffer is single-consumer and not a graph output, so replacing
+the matched tasks with one kernel step that emits only the final buffer
+is always sound.  Interior edges may be FIFO *or* ping-pong: a ping-pong
+edge means the generic path must materialize the intermediate in HBM
+(broadcast/stencil re-read), and absorbing that round-trip into the
+kernel's VMEM working set is exactly the §VII-C win.
+
+Feasibility
+-----------
+
+Matching is structural; whether a *specific* group instance can use the
+kernel (shapes, dtypes, strides, VMEM footprint) is the pattern's
+``feasible(graph, tasks)`` guard — pure graph analysis, so this module
+stays importable without jax (the artifact exporter records routing
+decisions jax-free).  The ``factory(graph, group, tasks)`` that builds the
+executable step is only called from the lowering and may import jax.
+
+Escape hatch
+------------
+
+``CODO_DISABLE_PALLAS=1`` disables all routing — every group falls back
+to ``xla-fused``.  The flag (and the registry epoch) enter the lowering
+memo key, so toggling it never serves a stale program.
+"""
+
+from __future__ import annotations
+
+import os
+from dataclasses import dataclass
+from typing import Any, Callable, Sequence
+
+from .graph import DataflowGraph, Task
+
+XLA_FUSED = "xla-fused"
+WILDCARD = "*"
+
+
+def _truthy(name: str) -> bool:
+    return os.environ.get(name, "").strip().lower() in (
+        "1", "true", "yes", "on")
+
+
+def pallas_disabled() -> bool:
+    """The ``CODO_DISABLE_PALLAS`` escape hatch: truthy values route every
+    fusion group to the generic ``xla-fused`` path."""
+    return _truthy("CODO_DISABLE_PALLAS")
+
+
+def pallas_interpret_forced() -> bool:
+    """``CODO_PALLAS_INTERPRET=1`` forces routed kernels to run the real
+    Pallas body in interpret mode on non-TPU hosts (the CI numerics path).
+    Routing-relevant: enters the lowering memo key like the disable flag."""
+    return _truthy("CODO_PALLAS_INTERPRET")
+
+
+@dataclass(frozen=True)
+class KernelPattern:
+    """One routable kernel: a name, an op pattern, a jax-free feasibility
+    guard, and a factory building the executable step.
+
+    ``factory(graph, group, tasks)`` returns an ``env -> {out: array}``
+    callable (it may import jax lazily); returning ``None`` declines the
+    match at build time (treated like an infeasible guard).
+    """
+
+    name: str
+    pattern: tuple[str, ...]
+    factory: Callable[[DataflowGraph, Any, list[Task]], Callable | None]
+    feasible: Callable[[DataflowGraph, list[Task]], bool] | None = None
+    description: str = ""
+
+    def __post_init__(self):
+        if not self.pattern:
+            raise ValueError(f"pattern {self.name!r} is empty")
+        if self.pattern[0].startswith(WILDCARD):
+            raise ValueError(
+                f"pattern {self.name!r} cannot start with a wildcard item "
+                f"({self.pattern[0]!r}) — anchors would be ambiguous")
+
+
+@dataclass
+class RoutedKernel:
+    """One routing decision inside a fusion group: these tasks execute as
+    this registered kernel instead of task-by-task."""
+
+    kernel: str                  # KernelPattern.name
+    tasks: list[str]             # matched chain, dataflow order
+
+    def to_dict(self) -> dict:
+        return {"kernel": self.kernel, "tasks": list(self.tasks)}
+
+
+# --------------------------------------------------------------------------
+# Registry.  Ordered by registration; first matching pattern wins at every
+# anchor task.  The epoch bumps on every (re-)registration so memoized
+# lowerings built against an older registry are never served.
+# --------------------------------------------------------------------------
+
+_PATTERNS: dict[str, KernelPattern] = {}
+_EPOCH = 0
+_WIRED = False
+
+
+def ensure_kernel_patterns() -> None:
+    """Best-effort one-time registration of the shipped kernel patterns
+    (``repro.kernels.register_all``).  Called by every routing consumer —
+    lowering, ``route_plan``, the artifact exporter/importer — so the
+    compiler, not the user, wires the kernels in.  jax-less environments
+    degrade to an empty registry (everything ``xla-fused``)."""
+    global _WIRED
+    if _WIRED:
+        return
+    _WIRED = True
+    try:
+        from .. import kernels
+        kernels.register_all()
+    except ImportError:                      # pragma: no cover — stub builds
+        pass
+
+
+def register_kernel_pattern(pattern: KernelPattern) -> KernelPattern:
+    global _EPOCH
+    _PATTERNS[pattern.name] = pattern
+    _EPOCH += 1
+    return pattern
+
+
+def registered_patterns() -> list[KernelPattern]:
+    return list(_PATTERNS.values())
+
+
+def routing_epoch() -> int:
+    return _EPOCH
+
+
+def clear_kernel_patterns() -> None:
+    """Testing hook: drop every registered pattern (bumps the epoch so
+    memoized lowerings notice)."""
+    global _EPOCH
+    _PATTERNS.clear()
+    _EPOCH += 1
+
+
+# --------------------------------------------------------------------------
+# Matching
+# --------------------------------------------------------------------------
+
+
+def _sole_output(task: Task) -> str | None:
+    outs = {a.buffer for a in task.writes}
+    return next(iter(outs)) if len(outs) == 1 else None
+
+
+def _chain_next(graph: DataflowGraph, members: set[str], impl: dict[str, str],
+                task: Task) -> Task | None:
+    """The unique task that streams ``task``'s output onward, or ``None``.
+
+    The edge qualifies only when the intermediate can disappear into a
+    kernel: one output buffer, not a graph output, read by exactly one
+    consumer — which must be in the same group.  The buffer's planned impl
+    does not matter: a FIFO intermediate folds into the kernel's VMEM
+    stream, and a ping-pong one (a broadcast/stencil re-read the generic
+    path must materialize in HBM) is absorbed by the kernel's on-chip
+    working set — that HBM round-trip removed is where the kernel wins
+    (e.g. the softmax·matmul tail never materializes the probabilities).
+    """
+    buf = _sole_output(task)
+    if buf is None:
+        return None
+    if graph.buffers[buf].kind == "output":
+        return None
+    consumers = graph.consumers(buf)
+    if len(consumers) != 1 or consumers[0].name not in members:
+        return None
+    return consumers[0]
+
+
+def _match_chain(graph: DataflowGraph, members: set[str],
+                 impl: dict[str, str], start: Task,
+                 pattern: Sequence[str]) -> list[Task] | None:
+    """Match ``pattern`` against the chain anchored at ``start``.
+
+    Wildcard items are greedy with backtracking-by-construction: a
+    ``"*op"`` consumes chain tasks of that op until the next literal item
+    matches (the wildcard op and the following literal op are distinct in
+    every registered pattern, so greediness is exact, not heuristic).
+    """
+    matched: list[Task] = []
+    cur: Task | None = start
+    items = list(pattern)
+    for i, item in enumerate(items):
+        if item.startswith(WILDCARD):
+            want = item[1:]
+            while cur is not None and cur.op == want:
+                matched.append(cur)
+                cur = _chain_next(graph, members, impl, cur)
+            continue
+        if cur is None or cur.op != item:
+            return None
+        matched.append(cur)
+        if i + 1 < len(items):
+            cur = _chain_next(graph, members, impl, cur)
+    if len(matched) > 1 and not _chain_is_exclusive(matched):
+        return None
+    return matched
+
+
+def _chain_is_exclusive(tasks: list[Task]) -> bool:
+    """Interior buffers must reach each successor only as its single
+    streamed (chain) operand.  A task that reads the chain value through
+    a *second* operand slot (``p @ p``) or reaches back to an earlier
+    interior buffer cannot be replaced by a kernel that never emits the
+    interiors — the generic path handles those graphs instead."""
+    outs = [_sole_output(t) for t in tasks[:-1]]
+    interior = set(outs)
+    for i, t in enumerate(tasks):
+        chain_in = outs[i - 1] if i > 0 else None
+        reads = [a.buffer for a in t.reads]
+        if chain_in is not None and reads.count(chain_in) > 1:
+            return False
+        if any(b in interior and b != chain_in for b in reads):
+            return False
+    return True
+
+
+def match_group(graph: DataflowGraph, group_tasks: Sequence[str],
+                impl: dict[str, str], *,
+                patterns: Sequence[KernelPattern] | None = None,
+                ) -> list[tuple[KernelPattern, list[Task]]]:
+    """All non-overlapping pattern matches inside one fusion group.
+
+    Tasks are scanned in the group's (topological) order; at each
+    unclaimed anchor the registered patterns are tried in registration
+    order and the first structurally-matching, feasible one claims its
+    chain.  Purely structural — no jax, no kernel construction.
+    """
+    pats = list(patterns) if patterns is not None else registered_patterns()
+    if not pats:
+        return []
+    members = set(group_tasks)
+    claimed: set[str] = set()
+    out: list[tuple[KernelPattern, list[Task]]] = []
+    for name in group_tasks:
+        if name in claimed:
+            continue
+        anchor = graph.task(name)
+        for pat in pats:
+            tasks = _match_chain(graph, members, impl, anchor, pat.pattern)
+            if not tasks or len(tasks) < 2:
+                continue            # single-task "chains" stay with XLA
+            if any(t.name in claimed for t in tasks):
+                continue
+            if pat.feasible is not None and not pat.feasible(graph, tasks):
+                continue
+            claimed.update(t.name for t in tasks)
+            out.append((pat, tasks))
+            break
+    return out
+
+
+def route_groups(graph: DataflowGraph, groups, impl: dict[str, str], *,
+                 enabled: bool | None = None) -> None:
+    """Annotate each :class:`~repro.core.lowering.FusionGroup` in
+    ``groups`` with its routing decision (``kernel`` + ``routes``).
+
+    ``enabled=None`` consults :func:`pallas_disabled`.  jax-free: only the
+    lowering turns the resulting decisions into executable steps.
+    """
+    if enabled is None:
+        enabled = not pallas_disabled()
+    for g in groups:
+        g.routes = []
+        g.kernel = XLA_FUSED
+        if not enabled or len(g.tasks) < 2:
+            continue
+        for pat, tasks in match_group(graph, g.tasks, impl):
+            g.routes.append(RoutedKernel(pat.name, [t.name for t in tasks]))
+        if g.routes:
+            g.kernel = "pallas:" + "+".join(r.kernel for r in g.routes)
+
+
+def route_plan(graph: DataflowGraph, impl: dict[str, str], *,
+               enabled: bool | None = None) -> list[dict]:
+    """The per-group routing table for a compiled design, as plain data
+    (what the artifact exporter and the CLI ``--profile`` report).  Group
+    membership mirrors ``lowering.fusion_groups`` without mutating task
+    ``fused_group`` ids."""
+    from .artifact import _fifo_groups  # jax-free, same grouping
+    ensure_kernel_patterns()
+    if enabled is None:
+        enabled = not pallas_disabled()
+    plan = []
+    for gid, names in enumerate(_fifo_groups(graph, impl)):
+        routes = (match_group(graph, names, impl) if enabled and len(names) > 1
+                  else [])
+        kernel = ("pallas:" + "+".join(p.name for p, _t in routes)
+                  if routes else XLA_FUSED)
+        plan.append({"gid": gid, "tasks": list(names), "kernel": kernel,
+                     "routes": [RoutedKernel(p.name,
+                                             [t.name for t in ts]).to_dict()
+                                for p, ts in routes]})
+    return plan
+
+
+__all__ = ["KernelPattern", "RoutedKernel", "XLA_FUSED",
+           "clear_kernel_patterns", "ensure_kernel_patterns", "match_group",
+           "pallas_disabled", "pallas_interpret_forced",
+           "register_kernel_pattern", "registered_patterns", "route_groups",
+           "route_plan", "routing_epoch"]

@@ -1,6 +1,8 @@
+from .chain import fused_matmul_chain, fused_softmax_matmul
 from .ops import pad_conv_relu, register
-from .ref import pad_conv_relu_ref
+from .ref import matmul_chain_ref, pad_conv_relu_ref, softmax_matmul_ref
 from .streamfuse import fused_pad_conv_relu
 
-__all__ = ["fused_pad_conv_relu", "pad_conv_relu", "pad_conv_relu_ref",
-           "register"]
+__all__ = ["fused_matmul_chain", "fused_pad_conv_relu",
+           "fused_softmax_matmul", "matmul_chain_ref", "pad_conv_relu",
+           "pad_conv_relu_ref", "register", "softmax_matmul_ref"]

@@ -1,4 +1,5 @@
-"""Pure-jnp oracle for the fused pad+conv+relu streaming kernel."""
+"""Pure-jnp oracles for the streamfuse fused kernels (pad+conv+relu,
+matmul chains, softmax·matmul tails)."""
 
 import jax
 import jax.numpy as jnp
@@ -12,3 +13,16 @@ def pad_conv_relu_ref(x: jax.Array, w: jax.Array) -> jax.Array:
         xp.astype(jnp.float32), w.astype(jnp.float32), (1, 1), "VALID",
         dimension_numbers=("NCHW", "OIHW", "NCHW"))
     return jnp.maximum(y, 0).astype(x.dtype)
+
+
+def matmul_chain_ref(a: jax.Array, w1: jax.Array, w2: jax.Array,
+                     ew=()) -> jax.Array:
+    """``ew(a @ w1) @ w2`` — ``ew`` a callable or sequence applied in order."""
+    h = a @ w1
+    for f in ([ew] if callable(ew) else list(ew)):
+        h = f(h)
+    return h @ w2
+
+
+def softmax_matmul_ref(s: jax.Array, v: jax.Array) -> jax.Array:
+    return jax.nn.softmax(s, axis=-1) @ v

@@ -37,13 +37,25 @@ def load_input_env(path: str, graph) -> dict:
     """Load real input tensors for ``graph`` from an ``.npz`` archive.
 
     Every ``input`` buffer must be present with the exact declared shape;
-    arrays are cast to the buffer dtype (an information-losing cast — e.g.
-    float64 data into a float32 buffer — is allowed, mirroring jnp).
-    Weight buffers may optionally be supplied too; unknown array names are
-    an error, so a typo'd key cannot silently fall back to random data.
+    dtypes are normalized *before* validation: arrays are cast to the
+    buffer dtype (an information-losing cast — e.g. float64 data under
+    disabled x64, or int labels into a float buffer — is allowed,
+    mirroring jnp's weak-dtype behavior), and a non-numeric array that
+    cannot cast is an :class:`InputError`, never a raw traceback.  Weight
+    buffers may optionally be supplied too; unknown array names are an
+    error, so a typo'd key cannot silently fall back to random data.
+    Every failure mode — unreadable archive, pickled object arrays, 0-d
+    scalars, shape or name mismatches — reports as :class:`InputError`
+    (CLI exit code 2).
     """
-    with np.load(path) as npz:
-        arrays = {k: npz[k] for k in npz.files}
+    try:
+        with np.load(path) as npz:
+            arrays = {k: npz[k] for k in npz.files}
+    except InputError:
+        raise
+    except Exception as e:      # OSError, BadZipFile, pickle-disabled, ...
+        raise InputError(f"{path}: not a readable npz archive "
+                         f"({type(e).__name__}: {e})") from e
     bindable = {b.name: b for b in graph.buffers.values()
                 if b.kind in ("input", "weight")}
     unknown = sorted(set(arrays) - set(bindable))
@@ -57,11 +69,25 @@ def load_input_env(path: str, graph) -> dict:
     env = {}
     for name, arr in arrays.items():
         buf = bindable[name]
+        # Normalize the dtype first: validation below then reasons about
+        # clean, buffer-typed arrays only.
+        try:
+            arr = np.asarray(arr).astype(np.dtype(buf.dtype), copy=False)
+        except (TypeError, ValueError) as e:
+            raise InputError(
+                f"{path}: array {name!r} (dtype {np.asarray(arr).dtype}) "
+                f"does not cast to buffer dtype "
+                f"{np.dtype(buf.dtype).name}: {e}") from e
+        if arr.ndim == 0 and tuple(buf.shape):
+            raise InputError(
+                f"{path}: array {name!r} is 0-d (a Python scalar saved "
+                f"with np.savez?); buffer {name!r} expects shape "
+                f"{tuple(buf.shape)}")
         if tuple(arr.shape) != tuple(buf.shape):
             raise InputError(f"{path}: array {name!r} has shape "
                              f"{tuple(arr.shape)}, buffer expects "
                              f"{tuple(buf.shape)}")
-        env[name] = arr.astype(np.dtype(buf.dtype), copy=False)
+        env[name] = arr
     return env
 
 
@@ -82,7 +108,12 @@ def serve_artifact(args) -> int:
 
     if args.inputs:
         env = load_input_env(args.inputs, program.graph)
-        envs = [program.make_env(**env)] * args.requests
+        try:
+            envs = [program.make_env(**env)] * args.requests
+        except (KeyError, TypeError, ValueError) as e:
+            # Anything load_input_env's checks missed still reports as the
+            # documented InputError (exit 2), never a raw traceback.
+            raise InputError(f"{args.inputs}: {e}") from e
         print(f"serving real inputs from {args.inputs} "
               f"({sorted(env)})")
     else:

@@ -243,6 +243,62 @@ def test_unregistered_op_kind_fails_actionably():
         import_artifact(mod)
 
 
+def test_fusion_kernels_forward_compat_both_directions(tmp_path):
+    """Satellite: the v1.1 `fusion.kernels` field must interoperate both
+    ways — a v1.0-era document (without it) imports cleanly under this
+    reader, and a document from a *newer* minor (with the field plus
+    future extras) warns-and-runs rather than failing."""
+    from repro.core import lower
+    from repro.kernels import register_all
+    register_all()
+    c = codo_opt(dm.gpt2_block(S=16, D=64), CodoOptions(budget_units=64),
+                 cache=None)
+    lower(c, jit=False)                          # record real routing
+    doc = export_artifact(c)
+    assert doc["schema_version"] == "1.1"
+    assert len(doc["fusion"]["kernels"]) == len(doc["fusion"]["groups"])
+    assert any(k.startswith("pallas:") for k in doc["fusion"]["kernels"])
+
+    # direction 1: v1.0 document (no kernels field) -> imports, no warning
+    old = json.loads(json.dumps(doc))
+    del old["fusion"]["kernels"]
+    old["schema_version"] = "1.0"
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        r = import_artifact(old)
+    assert not [x for x in w if issubclass(x.category, ArtifactWarning)]
+    assert r.graph.structural_hash() == c.graph.structural_hash()
+
+    # direction 2: a newer minor with the field plus an unknown fusion
+    # extra -> warns (newer version, unknown field) and still runs
+    newer = json.loads(json.dumps(doc))
+    newer["schema_version"] = "1.7"
+    newer["fusion"]["novel_fusion_field"] = True
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        r2 = import_artifact(newer)
+    msgs = [str(x.message) for x in w
+            if issubclass(x.category, ArtifactWarning)]
+    assert any("newer" in m for m in msgs)
+    assert any("fusion.novel_fusion_field" in m for m in msgs)
+    assert all(t.fn is not None for t in r2.graph.tasks)
+
+    # routing drift warns (advisory field), never fails
+    drift = json.loads(json.dumps(doc))
+    drift["fusion"]["kernels"] = ["xla-fused"] * len(drift["fusion"]["groups"])
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        import_artifact(drift)
+    assert any("fusion.kernels drift" in str(x.message) for x in w
+               if issubclass(x.category, ArtifactWarning))
+
+    # ...but a misaligned kernels list is a hard validation error
+    bad = json.loads(json.dumps(doc))
+    bad["fusion"]["kernels"] = list(bad["fusion"]["kernels"]) + ["xla-fused"]
+    with pytest.raises(ArtifactError, match="must align"):
+        validate_artifact(bad)
+
+
 def test_unknown_option_fields_warn_not_fail():
     """Forward compat reaches into `options`: a newer writer's extra knob
     is dropped with a warning, not a hard failure."""
@@ -348,7 +404,7 @@ def test_cli_export_import_profile(tmp_path, capsys):
     rc = compiler_main(["--import-artifact", str(path), "--profile"])
     out = capsys.readouterr().out
     assert rc == 0
-    assert "artifact gpt2_medium (schema v1.0)" in out
+    assert "artifact gpt2_medium (schema v1.1)" in out
     assert "== codo_opt(gpt2_medium) ==" in out
     assert "-- passes(gpt2_medium) --" in out
 

@@ -385,7 +385,8 @@ def test_cli_smoke_and_second_run_hits_cache(tmp_path, capsys):
 def test_cli_list_and_bad_config(capsys):
     assert compiler_main(["--list"]) == 0
     out = capsys.readouterr().out.split()
-    assert len(out) == 12 and "resnet18" in out and "gpt2-medium" in out
+    assert len(out) == 13 and "resnet18" in out and "gpt2-medium" in out \
+        and "gpt2_block" in out
     with pytest.raises(SystemExit):
         compiler_main(["--configs", "not-a-config"])
 

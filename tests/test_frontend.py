@@ -149,8 +149,10 @@ def test_stencil_reread_from_conv_window():
 def test_trace_errors():
     with pytest.raises(F.TraceError):       # returns an input unchanged
         F.trace(lambda x: x, (4,))
-    with pytest.raises(F.TraceError):       # eager array leaking into a trace
-        F.trace(lambda x: F.add(x, np.ones((4,), np.float32)), (4,))
+    with pytest.raises(F.TraceError):       # lifted array has the wrong shape
+        F.trace(lambda x: F.add(x, np.ones((5,), np.float32)), (4,))
+    with pytest.raises(F.TraceError):       # object arrays cannot lift
+        F.trace(lambda x: F.add(x, np.array([object()] * 4)), (4,))
     with pytest.raises(F.TraceError):       # same buffer returned twice
         F.trace(lambda x: (F.relu(x),) * 2, (4,))
 
@@ -255,6 +257,58 @@ def test_compile_accepts_ready_graph():
 
 
 # --------------------------------------------------------------------------
+# Reflected operators (satellite: __rsub__/__rtruediv__/__rmatmul__ & co.)
+# Each traced expression must equal the same function run eagerly —
+# bit-exactly, since scalar forms lower to true-division/affine ops.
+# --------------------------------------------------------------------------
+
+_W44 = (np.arange(16, dtype=np.float32).reshape(4, 4) / 10.0)
+_C34 = np.linspace(-1.0, 1.0, 12, dtype=np.float32).reshape(3, 4)
+
+REFLECTED_CASES = {
+    "rsub_scalar": ((3, 4), lambda x: 2.0 - x),
+    "sub_scalar": ((3, 4), lambda x: x - 2.5),
+    "rtruediv_scalar": ((3, 4), lambda x: 3.0 / (F.relu(x) + 4.0)),
+    "truediv_scalar": ((3, 4), lambda x: x / 3.0),
+    "radd_scalar": ((3, 4), lambda x: 1.5 + x),
+    "rmul_scalar": ((3, 4), lambda x: 2.0 * x),
+    "rmatmul_array": ((4, 4), lambda x: _W44 @ x),
+    "radd_array": ((3, 4), lambda x: _C34 + F.relu(x)),
+    "rsub_array": ((3, 4), lambda x: _C34 - F.relu(x)),
+    "mul_buffers": ((3, 4), lambda x: F.relu(x) * x),
+    "div_buffers": ((3, 4), lambda x: x / (F.relu(x) + 1.0)),
+}
+
+
+@pytest.mark.parametrize("name", sorted(REFLECTED_CASES))
+def test_reflected_ops_eager_equals_compiled(name):
+    shape, fn = REFLECTED_CASES[name]
+    (x,) = _inputs([shape], seed=3)
+    program = codo.compile(fn, shape, name=name, cache=None)
+    got = np.asarray(program(x, jit=False))
+    want = np.asarray(fn(x))
+    np.testing.assert_array_equal(got, want)     # bit-exact, not just close
+
+
+def test_reflected_array_operand_becomes_const_task():
+    g = F.trace(lambda x: _W44 @ x, (4, 4), name="wx")
+    const = [t for t in g.tasks if t.spec is not None
+             and t.spec.kind == "const"]
+    assert len(const) == 1
+    np.testing.assert_array_equal(
+        np.array(const[0].spec.attrs["value"], np.float32), _W44)
+    # the constant value keys the compile cache: a different W, a new hash
+    g2 = F.trace(lambda x: (_W44 + 1.0) @ x, (4, 4), name="wx")
+    assert g.structural_hash() != g2.structural_hash()
+
+
+def test_scalar_forms_key_cache_apart():
+    a = F.trace(lambda x: 2.0 - x, (4,), name="s")
+    b = F.trace(lambda x: 3.0 - x, (4,), name="s")
+    assert a.structural_hash() != b.structural_hash()
+
+
+# --------------------------------------------------------------------------
 # Pass budgets (satellite: --enforce-budgets)
 # --------------------------------------------------------------------------
 
@@ -318,6 +372,67 @@ def test_load_input_env_validates(tmp_path):
     np.savez(tmp_path / "unknown.npz", A=A, B=B, typo=A)
     with pytest.raises(InputError, match="unknown array names"):
         load_input_env(str(tmp_path / "unknown.npz"), g)
+
+
+def test_load_input_env_normalizes_dtypes_before_validation(tmp_path):
+    """Satellite: weak-dtype inputs (float64 under disabled x64, int
+    labels) normalize to the buffer dtype and load; 0-d scalars and
+    non-castable arrays report as InputError (CLI exit 2), never a raw
+    traceback."""
+    from repro.launch.serve import InputError, load_input_env
+    g = F.trace(dm.gemm_fn, (6, 4), (4, 5), name="gemm")
+    A, B = _inputs([(6, 4), (4, 5)])
+
+    # float64 data under x64-disabled jax: accepted, cast to float32
+    np.savez(tmp_path / "f64.npz", A=A.astype(np.float64),
+             B=B.astype(np.float64))
+    env = load_input_env(str(tmp_path / "f64.npz"), g)
+    assert all(v.dtype == np.float32 for v in env.values())
+    np.testing.assert_allclose(env["A"], A)
+
+    # integer data casts too (dtype normalization precedes validation)
+    np.savez(tmp_path / "int.npz", A=np.ones((6, 4), np.int64), B=B)
+    assert load_input_env(str(tmp_path / "int.npz"), g)["A"].dtype \
+        == np.float32
+
+    # a Python scalar saved via np.savez arrives 0-d: clean InputError
+    np.savez(tmp_path / "zerod.npz", A=3.0, B=B)
+    with pytest.raises(InputError, match="0-d"):
+        load_input_env(str(tmp_path / "zerod.npz"), g)
+
+    # non-castable (string) data: InputError naming the dtypes
+    np.savez(tmp_path / "str.npz", A=np.full((6, 4), "x"), B=B)
+    with pytest.raises(InputError, match="does not cast"):
+        load_input_env(str(tmp_path / "str.npz"), g)
+
+    # not an npz archive at all
+    (tmp_path / "junk.npz").write_text("not a zip")
+    with pytest.raises(InputError, match="not a readable npz"):
+        load_input_env(str(tmp_path / "junk.npz"), g)
+    with pytest.raises(InputError, match="not a readable npz"):
+        load_input_env(str(tmp_path / "missing-file.npz"), g)
+
+
+def test_serve_cli_inputs_errors_exit_2(tmp_path, capsys):
+    """The CLI contract: bad --inputs archives exit 2 with an error line,
+    good ones serve."""
+    import repro.launch.serve as serve
+    program = codo.compile(dm.gemm_fn, (6, 4), (4, 5), name="gemm",
+                           cache=None)
+    art = tmp_path / "gemm.json"
+    program.export(str(art))
+
+    A, B = _inputs([(6, 4), (4, 5)])
+    np.savez(tmp_path / "good.npz", A=A.astype(np.float64), B=B)
+    rc = serve.main(["--artifact", str(art), "--requests", "1",
+                     "--inputs", str(tmp_path / "good.npz")])
+    assert rc == 0
+
+    np.savez(tmp_path / "zerod.npz", A=2.0, B=B)
+    rc = serve.main(["--artifact", str(art), "--requests", "1",
+                     "--inputs", str(tmp_path / "zerod.npz")])
+    captured = capsys.readouterr()
+    assert rc == 2 and "error:" in captured.err and "0-d" in captured.err
 
 
 # --------------------------------------------------------------------------

@@ -52,8 +52,14 @@ def test_matmul_sweep(M, N, K, dtype):
     (1, 3, 16, 16, 8, 3), (2, 4, 8, 12, 4, 5), (1, 8, 24, 24, 16, 3),
 ])
 def test_streamfuse_sweep(N, C, H, W, CO, K):
+    # the real Pallas body (interpret mode) — pad_conv_relu's backend
+    # dispatch would use the jnp reference on CPU hosts and test nothing
+    from repro.kernels.streamfuse import fused_pad_conv_relu
     x = jnp.asarray(RNG.standard_normal((N, C, H, W)), jnp.float32)
     w = jnp.asarray(RNG.standard_normal((CO, C, K, K)) * 0.2, jnp.float32)
+    np.testing.assert_allclose(
+        np.asarray(fused_pad_conv_relu(x, w, interpret=True)),
+        np.asarray(pad_conv_relu_ref(x, w)), rtol=1e-4, atol=1e-4)
     np.testing.assert_allclose(np.asarray(pad_conv_relu(x, w)),
                                np.asarray(pad_conv_relu_ref(x, w)),
                                rtol=1e-4, atol=1e-4)
@@ -96,7 +102,7 @@ def test_streamfuse_registered_in_lowering():
     c = codo_opt(g)
     low = lower(c, jit=False)
     kernels = {grp.kernel for grp in low.groups}
-    assert "pad+conv+ewise" in kernels
+    assert "pallas:streamfuse.conv" in kernels
     env = random_inputs(g)
     got = low(env)
     want = g.execute(env)
