@@ -1,14 +1,19 @@
-"""Per-group pallas-vs-xla routing benchmark (the ISSUE-5 measurement).
+"""Per-group pallas-vs-xla routing benchmark (ISSUE-5 measurement,
+ISSUE-6 gate evidence).
 
-For every fusion group the router maps to a Pallas kernel in the
-acceptance workloads (``gpt2_block``, ``resnet18``), run the routed chain
-**both ways** on identical inputs — the registered kernel step vs the
-same tasks' jnp fns composed and jit'd (the ``xla-fused`` path) — and
-report the per-group latency pair.  Besides the CSV rows every suite
-emits, this one writes the machine-readable document the nightly CI job
-uploads::
+For every *structurally matched* kernel chain in the acceptance workloads
+(``gpt2_block``, ``resnet18``) — gate-free, so the measurement covers
+chains the cost gate rejects as well as the ones it routes — run the
+chain **both ways** on identical inputs: the registered kernel step vs
+the same tasks' jnp fns composed and jit'd (the ``xla-fused`` path).
+Each record carries the cost gate's verdict (``decision``, predicted
+routed/generic cycles) next to the measured latency pair, so the JSON is
+both a regression fixture and the calibration corpus for
+:func:`repro.core.costmodel.calibrate_routing_params`.  Two documents are
+written::
 
-    results/bench/routing_groups.json
+    results/bench/routing_groups.json        # measured pairs + decisions
+    results/bench/routing_calibration.json   # predicted vs measured + fit
 
 Backend note: on TPU the kernel step is the compiled Pallas kernel; on
 CPU/GPU hosts it is the kernel's fused jnp reference under one jit (see
@@ -16,11 +21,26 @@ CPU/GPU hosts it is the kernel's fused jnp reference under one jit (see
 and the comparison measures the fusion decision, not interpret-mode
 overhead.  The JSON records the backend so readers can tell which regime
 produced the numbers.
+
+CLI (the CI ``routing-regression`` job)::
+
+    PYTHONPATH=src python -m benchmarks.routing_bench --quick --check-gate
+
+``--quick`` shrinks shapes/repeats for PR latency; ``--check-gate``
+exits 1 if any chain the gate *accepts* measures more than ``tolerance``
+slower than its xla-fused twin — i.e. the predictor let a loser through.
+Best-of-5 CPU timings on shared runners still see >5% machine-noise
+swings, so a first-pass offender is re-measured alone at a higher
+best-of count and judged on that number; only a repeat offender fails
+the job.
 """
 
 from __future__ import annotations
 
+import argparse
+import dataclasses
 import json
+import sys
 import time
 from pathlib import Path
 
@@ -31,18 +51,37 @@ WORKLOADS = {
     "resnet18": lambda dm: dm.resnet18(32),
 }
 
+# PR-gate shapes: big enough that the gate's accepted set is non-trivial
+# (resnet below H=32 falls entirely under the conv win threshold), small
+# enough to keep the job in tens of seconds.
+QUICK_WORKLOADS = {
+    "gpt2_block": lambda dm: dm.gpt2_block(S=64),
+    "resnet18": lambda dm: dm.resnet18(32),
+}
+
 WARMUP = 3
 REPS = 9
+QUICK_WARMUP = 2
+QUICK_REPS = 5
+# Gate offenders get one solo re-measurement at this best-of count
+# before the job fails — parity chains sit at ~1.0x and best-of-5 noise
+# alone trips the 5% line a few percent of the time per chain.
+RECHECK_REPS = 21
+
+# Same-computation parity on CPU hosts means speedups fluctuate around
+# 1.0 with machine noise; "no slower" is judged with this tolerance.
+TOLERANCE = 0.05
 
 
-def _time_pair(fn_a, fn_b, arg, block) -> tuple[float, float]:
+def _time_pair(fn_a, fn_b, arg, block, warmup=WARMUP,
+               reps=REPS) -> tuple[float, float]:
     """Best-of-N for two callables on the same input, reps *interleaved*
     so machine-load drift hits both sides equally."""
-    for _ in range(WARMUP):
+    for _ in range(warmup):
         block(fn_a(arg))
         block(fn_b(arg))
     best_a = best_b = float("inf")
-    for rep in range(REPS):
+    for rep in range(reps):
         first, second = (fn_a, fn_b) if rep % 2 == 0 else (fn_b, fn_a)
         for fn in (first, second):
             t0 = time.perf_counter()
@@ -55,36 +94,49 @@ def _time_pair(fn_a, fn_b, arg, block) -> tuple[float, float]:
     return best_a * 1e3, best_b * 1e3
 
 
-def bench_workload(name: str, build) -> list[dict]:
+def _record_key(r: dict) -> tuple:
+    return (r["gid"], r["kernel"], tuple(r["tasks"]))
+
+
+def bench_workload(name: str, build, *, warmup=WARMUP,
+                   reps=REPS, only=None) -> list[dict]:
     import jax
 
     from repro.core import CodoOptions, codo_opt, lower
-    from repro.core.routing import registered_patterns
+    from repro.core.routing import decide_route, match_group
+    from repro.core.tuning import TuningDB
     from repro.models import dataflow_models as dm
 
     graph = build(dm)
     compiled = codo_opt(graph, CodoOptions.preset("opt5"), cache=None)
     low = lower(compiled, jit=False)
-    pats = {p.name: p for p in registered_patterns()}
+    impl = compiled.buffer_plan.impl if compiled.buffer_plan else {}
 
     # Full buffer scope: every intermediate value, produced task by task —
-    # the routed chains' inputs are sliced out of it below.
+    # the matched chains' inputs are sliced out of it below.
     scope = dict(dm.random_inputs(compiled.graph))
     for t in compiled.graph.toposort():
         scope.update(t.fn(scope))
 
     records = []
+    fresh_db = TuningDB()            # gate verdicts from the predictor only
     for group in low.groups:
-        for route in group.routes:
-            tasks = [compiled.graph.task(n) for n in route.tasks]
+        # Gate-free structural matches: measure everything matchable, not
+        # just what the gate routed — rejected chains are the evidence the
+        # gate is *right* to reject them.
+        for pat, tasks in match_group(compiled.graph, group.tasks, impl):
+            if only is not None and (group.gid, pat.name,
+                                     tuple(t.name for t in tasks)) not in only:
+                continue
+            route = decide_route(compiled.graph, tasks, pat,
+                                 hw=compiled.options.hw, db=fresh_db)
             interior = {t.writes[0].buffer for t in tasks[:-1]}
             ext = sorted({a.buffer for t in tasks for a in t.reads
                           if a.buffer not in interior})
             env = {b: scope[b] for b in ext}
             out_buf = tasks[-1].writes[0].buffer
 
-            kernel_step = pats[route.kernel].factory(
-                compiled.graph, group, tasks)
+            kernel_step = pat.factory(compiled.graph, group, tasks)
             fns = [t.fn for t in tasks]
 
             def xla_fused(e, _fns=fns, _out=out_buf):
@@ -95,10 +147,17 @@ def bench_workload(name: str, build) -> list[dict]:
 
             block = jax.block_until_ready
             pallas_ms, xla_ms = _time_pair(kernel_step, jax.jit(xla_fused),
-                                           env, block)
+                                           env, block, warmup, reps)
+            pred_r, pred_g = (route.predicted_routed_cycles,
+                              route.predicted_generic_cycles)
             records.append({
-                "workload": name, "gid": group.gid, "kernel": route.kernel,
-                "tasks": list(route.tasks),
+                "workload": name, "gid": group.gid, "kernel": pat.name,
+                "tasks": [t.name for t in tasks],
+                "decision": route.decision,
+                "routed": route.routed,
+                "predicted_routed_cycles": round(pred_r, 1),
+                "predicted_generic_cycles": round(pred_g, 1),
+                "predicted_speedup": round(pred_g / max(pred_r, 1e-9), 4),
                 "pallas_ms": round(pallas_ms, 4),
                 "xla_ms": round(xla_ms, 4),
                 "speedup": round(xla_ms / max(pallas_ms, 1e-9), 4),
@@ -106,34 +165,142 @@ def bench_workload(name: str, build) -> list[dict]:
     return records
 
 
-def routing_groups(write_json: bool = True):
-    """Suite entry (``benchmarks.run`` registers it as ``routing``)."""
+def _calibration_doc(doc: dict) -> dict:
+    """Predicted-vs-measured per chain plus the constants a calibration
+    pass would fit from this run (what the nightly CI job uploads)."""
+    from repro.core.costmodel import calibrate_routing_params
+    fitted = calibrate_routing_params(doc)
+    return {
+        "backend": doc["backend"],
+        "tolerance": doc["tolerance"],
+        "fitted_params": dataclasses.asdict(fitted),
+        "records": [{k: r[k] for k in
+                     ("workload", "gid", "kernel", "decision",
+                      "predicted_speedup", "speedup")}
+                    for r in doc["records"]],
+    }
+
+
+def build_doc(quick: bool = False) -> dict:
     import jax
-
-    from benchmarks.tables import Row
-
+    workloads = QUICK_WORKLOADS if quick else WORKLOADS
+    warmup = QUICK_WARMUP if quick else WARMUP
+    reps = QUICK_REPS if quick else REPS
     all_records = []
-    for name, build in WORKLOADS.items():
-        all_records.extend(bench_workload(name, build))
+    for name, build in workloads.items():
+        all_records.extend(bench_workload(name, build,
+                                          warmup=warmup, reps=reps))
+    return {"backend": jax.default_backend(), "tolerance": TOLERANCE,
+            "quick": quick, "records": all_records}
 
-    # Same-computation parity on CPU hosts means speedups fluctuate around
-    # 1.0 with machine noise; "no slower" is judged with this tolerance.
-    tolerance = 0.05
-    doc = {"backend": jax.default_backend(), "tolerance": tolerance,
-           "records": all_records}
-    if write_json:
-        OUT.mkdir(parents=True, exist_ok=True)
-        (OUT / "routing_groups.json").write_text(
-            json.dumps(doc, indent=2, sort_keys=True) + "\n")
 
+def write_docs(doc: dict) -> None:
+    OUT.mkdir(parents=True, exist_ok=True)
+    (OUT / "routing_groups.json").write_text(
+        json.dumps(doc, indent=2, sort_keys=True) + "\n")
+    (OUT / "routing_calibration.json").write_text(
+        json.dumps(_calibration_doc(doc), indent=2, sort_keys=True) + "\n")
+
+
+def remeasure_offenders(doc: dict) -> dict:
+    """Re-time only the chains :func:`check_gate` flagged, solo and at
+    best-of-``RECHECK_REPS``, and patch the fresh numbers into the doc.
+    A chain that is genuinely slower stays an offender; one that tripped
+    the line on machine noise converges back above it."""
+    tol = float(doc.get("tolerance", TOLERANCE))
+    failing = [r for r in doc["records"]
+               if r.get("routed") and r["speedup"] < 1.0 - tol]
+    workloads = QUICK_WORKLOADS if doc.get("quick") else WORKLOADS
+    for name in sorted({r["workload"] for r in failing}):
+        only = {_record_key(r) for r in failing if r["workload"] == name}
+        redone = {_record_key(r): r
+                  for r in bench_workload(name, workloads[name],
+                                          warmup=WARMUP, reps=RECHECK_REPS,
+                                          only=only)}
+        doc["records"] = [
+            redone.get(_record_key(r), r) if r["workload"] == name else r
+            for r in doc["records"]]
+    return doc
+
+
+def check_gate(doc: dict) -> list[str]:
+    """Regression predicate for the CI gate job: every chain the cost
+    gate routed must measure no more than ``tolerance`` slower than its
+    xla-fused twin.  (Gate-rejected chains are measured but not judged —
+    they run on the generic path in production.)"""
+    tol = float(doc.get("tolerance", TOLERANCE))
+    fails = []
+    for r in doc["records"]:
+        if r.get("routed") and r["speedup"] < 1.0 - tol:
+            fails.append(
+                f"{r['workload']}/g{r['gid']}/{r['kernel']}: routed chain "
+                f"measured {r['speedup']:.3f}x vs xla (tolerance "
+                f"{1 - tol:.2f}x, decision={r['decision']})")
+    return fails
+
+
+def _rows(doc: dict):
+    from benchmarks.tables import Row
+    records = doc["records"]
     rows = [Row(f"routing/{r['workload']}/g{r['gid']}/{r['kernel']}",
                 r["speedup"],
+                f"decision={r['decision']};pred={r['predicted_speedup']};"
                 f"pallas_ms={r['pallas_ms']};xla_ms={r['xla_ms']};"
                 f"tasks={len(r['tasks'])}")
-            for r in all_records]
-    routed = len(all_records)
-    wins = sum(1 for r in all_records if r["speedup"] >= 1.0 - tolerance)
-    rows.append(Row("routing/summary", routed,
-                    f"groups_routed;no_slower={wins}/{routed}"
-                    f"(tol={tolerance:.0%});backend={doc['backend']}"))
+            for r in records]
+    routed = [r for r in records if r.get("routed")]
+    wins = sum(1 for r in routed if r["speedup"] >= 1.0 - doc["tolerance"])
+    rows.append(Row("routing/summary", len(records),
+                    f"chains_measured;routed={len(routed)};"
+                    f"routed_no_slower={wins}/{len(routed)}"
+                    f"(tol={doc['tolerance']:.0%});"
+                    f"backend={doc['backend']}"))
     return rows
+
+
+def routing_groups(write_json: bool = True):
+    """Suite entry (``benchmarks.run`` registers it as ``routing``)."""
+    doc = build_doc(quick=False)
+    if write_json:
+        write_docs(doc)
+    return _rows(doc)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="pallas-vs-xla per-chain routing benchmark")
+    ap.add_argument("--quick", action="store_true",
+                    help="reduced shapes/repeats (the PR-gate mode)")
+    ap.add_argument("--check-gate", action="store_true",
+                    help="exit 1 if a gate-routed chain is >tolerance "
+                         "slower than xla-fused")
+    ap.add_argument("--no-json", action="store_true",
+                    help="skip writing results/bench/*.json")
+    args = ap.parse_args(argv)
+
+    doc = build_doc(quick=args.quick)
+    if not args.no_json:
+        write_docs(doc)
+    print("name,value,derived")
+    for row in _rows(doc):
+        print(row.csv())
+    if args.check_gate:
+        fails = check_gate(doc)
+        if fails:
+            print(f"gate: {len(fails)} suspect chain(s); re-measuring "
+                  f"solo at best-of-{RECHECK_REPS}", file=sys.stderr)
+            doc = remeasure_offenders(doc)
+            if not args.no_json:
+                write_docs(doc)
+            fails = check_gate(doc)
+        for f in fails:
+            print(f"GATE FAIL: {f}", file=sys.stderr)
+        if fails:
+            return 1
+        routed = sum(1 for r in doc["records"] if r.get("routed"))
+        print(f"gate check: {routed} routed chains within tolerance")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

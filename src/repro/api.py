@@ -210,10 +210,28 @@ class CompiledProgram:
                 np.asarray(got[k]), np.asarray(want[k]), rtol=rtol, atol=atol,
                 err_msg=f"output {k} diverged after lowering")
 
+    # ---- autotuning ------------------------------------------------------
+    def autotune(self, *, repeats: int = 5, warmup: int = 2, seed: int = 0,
+                 save_path: str | None = None) -> list:
+        """Measure routed-vs-generic for every pattern-matched chain of
+        this design (sweeping each kernel's tile candidates) and persist
+        the winners in the process tuning database — subsequent
+        :meth:`lower`/calls route on measurement instead of prediction
+        (the tuning-DB digest is in the lowering memo key, so the switch
+        is automatic).  Returns the new
+        :class:`~repro.core.tuning.TuningRecord`\\ s."""
+        from repro.core.tuning import autotune_compiled  # lazy: jax
+        records = autotune_compiled(self.compiled, repeats=repeats,
+                                    warmup=warmup, seed=seed,
+                                    save_path=save_path)
+        self._lowered = None            # re-route against the measurements
+        return records
+
     # ---- artifacts -------------------------------------------------------
     def export(self, path: str | None = None):
         """Write (or return) the versioned JSON artifact of this design
-        (docs/artifact_format.md)."""
+        (docs/artifact_format.md).  Tuning-database entries matching the
+        design's chains travel in the v1.2 ``tuning`` section."""
         from repro.core.artifact import export_artifact  # lazy
         return export_artifact(self.compiled, path)
 
@@ -225,15 +243,19 @@ def _io_from_graph(graph: DataflowGraph) -> tuple[list[str], list[str]]:
 
 def compile(fn: Callable | DataflowGraph, *specs,  # noqa: A001 — the API name
             options: CodoOptions | None = None, name: str | None = None,
-            cache=_UNSET, **codo_kwargs) -> CompiledProgram:
+            cache=_UNSET, autotune: bool = False,
+            **codo_kwargs) -> CompiledProgram:
     """Trace ``fn`` over ``specs`` (shape tuples / :func:`buffer` protos)
     and compile it through the ``codo_opt`` pipeline.
 
     ``fn`` may also be a ready :class:`DataflowGraph` (then ``specs`` must
     be empty) — the escape hatch for hand-built graphs.  ``options``
     defaults to the full opt5 pipeline; ``cache=None`` disables
-    memoization for this call.  Extra keyword arguments are forwarded to
-    :func:`~repro.core.compiler.codo_opt`.
+    memoization for this call.  ``autotune=True`` additionally measures
+    routed-vs-generic for every pattern-matched chain right after the
+    compile (see :meth:`CompiledProgram.autotune`) so the program routes
+    on measurement instead of the cost model's prediction.  Extra keyword
+    arguments are forwarded to :func:`~repro.core.compiler.codo_opt`.
     """
     if isinstance(fn, DataflowGraph):
         if specs:
@@ -246,7 +268,10 @@ def compile(fn: Callable | DataflowGraph, *specs,  # noqa: A001 — the API name
     else:
         source, ins, outs = frontend.trace_io(fn, *specs, name=name)
     compiled = codo_opt(source, options, cache=cache, **codo_kwargs)
-    return CompiledProgram(source, compiled, ins, outs)
+    program = CompiledProgram(source, compiled, ins, outs)
+    if autotune:
+        program.autotune()
+    return program
 
 
 def load(path) -> CompiledProgram:

@@ -57,14 +57,23 @@ from .offchip import TransferPlan
 from .ops import OpSpec, op_impl, registered_ops
 from .passes import CompileDiagnostics
 from .patterns import coarse_violations
-from .routing import (XLA_FUSED, ensure_kernel_patterns, match_group,
-                      pallas_disabled)
+from .routing import (XLA_FUSED, decide_route, ensure_kernel_patterns,
+                      match_group, pallas_disabled)
 from .schedule import ScheduleReport
 
-SCHEMA_VERSION = "1.1"
+SCHEMA_VERSION = "1.2"
 
 # Schema changelog
 # ----------------
+# 1.2  `tuning`: measured autotune results for the design's routed chains
+#      — `{"entries": [TuningRecord dicts]}` keyed on chain structural
+#      signature + backend + hw name (see repro.core.tuning).  Importers
+#      merge the entries into the process tuning database so measured
+#      routing decisions travel with the artifact; older readers ignore
+#      the section (unknown-field policy) and this reader accepts v1.0/
+#      v1.1 documents without it.  `diagnostics.group_kernels` values
+#      became per-group entry dicts (kernel + cost-gate decision +
+#      predicted cycles); bare v1.1 strings are still read.
 # 1.1  `fusion.kernels`: per-group kernel-routing decision ("xla-fused" or
 #      "pallas:<pattern>[+...]"), aligned with `fusion.groups`; advisory —
 #      readers re-derive routing against their own kernel registry and
@@ -133,15 +142,20 @@ def _group_kernels(graph: DataflowGraph, impl: dict[str, str],
                 if compiled is not None and compiled.diagnostics is not None
                 else {})
     if recorded and set(recorded) == {str(i) for i in range(len(groups))}:
-        return [recorded[str(i)] for i in range(len(groups))]
+        return [recorded[str(i)].get("kernel", XLA_FUSED)
+                if isinstance(recorded[str(i)], dict) else str(recorded[str(i)])
+                for i in range(len(groups))]
     ensure_kernel_patterns()     # best-effort; jax-less stays xla-fused
     if pallas_disabled():
         return [XLA_FUSED] * len(groups)
     out = []
     for names in groups:
-        routes = match_group(graph, names, impl) if len(names) > 1 else []
-        out.append("pallas:" + "+".join(p.name for p, _t in routes)
-                   if routes else XLA_FUSED)
+        routed = []
+        if len(names) > 1:
+            for pat, tasks in match_group(graph, names, impl):
+                if decide_route(graph, tasks, pat).routed:   # cost gate
+                    routed.append(pat.name)
+        out.append("pallas:" + "+".join(routed) if routed else XLA_FUSED)
     return out
 
 
@@ -171,6 +185,7 @@ def export_artifact(compiled: CompiledDataflow,
 
     impl = compiled.buffer_plan.impl if compiled.buffer_plan else {}
     groups = _fifo_groups(g, impl)
+    tuning = _design_tuning(g, impl, groups)
     doc: dict[str, Any] = {
         "schema_version": SCHEMA_VERSION,
         "generator": GENERATOR,
@@ -197,11 +212,32 @@ def export_artifact(compiled: CompiledDataflow,
         },
         "diagnostics": (compiled.diagnostics.to_dict()
                         if compiled.diagnostics else None),
+        "tuning": tuning,
         "integrity": {"structural_hash": g.structural_hash()},
     }
     if path is not None:
         Path(path).write_text(dumps(doc))
     return doc
+
+
+def _design_tuning(graph: DataflowGraph, impl: dict[str, str],
+                   groups: list[list[str]]) -> dict | None:
+    """The v1.2 ``tuning`` payload: every process tuning-database entry
+    whose chain signature occurs in this design (all backends/hardware —
+    the importer's routing picks the entries for its own environment).
+    ``None`` when no measured entries apply."""
+    from .tuning import chain_signature, default_tuning_db
+    ensure_kernel_patterns()
+    sigs = set()
+    for names in groups:
+        if len(names) < 2:
+            continue
+        for _pat, tasks in match_group(graph, names, impl):
+            sigs.add(chain_signature(graph, tasks))
+    entries = [r.to_dict() for k, r in
+               sorted(default_tuning_db().entries.items())
+               if r.signature in sigs]
+    return {"entries": entries} if entries else None
 
 
 def dumps(doc: dict) -> str:
@@ -229,6 +265,8 @@ _TOP_FIELDS = {
     "fusion": ((dict, type(None)), False),
     "cost": ((dict, type(None)), False),
     "diagnostics": ((dict, type(None)), False),
+    # v1.2: measured autotune entries for the design's routed chains.
+    "tuning": ((dict, type(None)), False),
     "integrity": ((dict, type(None)), False),
 }
 
@@ -302,6 +340,24 @@ _COST_FIELDS = {
     "fifo_fraction": (_NUM, False),
     "bottleneck": (_OPT_STR, False),
     "units": (_NUM + (type(None),), False),
+}
+
+_TUNING_FIELDS = {
+    "entries": ((list,), True),
+}
+
+# Per-entry fields of the v1.2 `tuning.entries` records (TuningRecord).
+_TUNING_ENTRY_FIELDS = {
+    "signature": ((str,), True),
+    "backend": ((str,), True),
+    "hw": ((str,), True),
+    "pattern": ((str,), False),
+    "choice": ((str,), False),
+    "tile": ((dict, type(None)), False),
+    "routed_ms": (_NUM, False),
+    "generic_ms": (_NUM, False),
+    "workload": ((str,), False),
+    "tasks": ((list,), False),
 }
 
 _INTEGRITY_FIELDS = {
@@ -451,6 +507,16 @@ def validate_artifact(doc: Any) -> list[str]:
                           f"{len(groups)} groups (must align)")
     if isinstance(doc.get("cost"), dict):
         _check_fields(doc["cost"], "cost", _COST_FIELDS, errors, notes)
+    tuning = doc.get("tuning")
+    if isinstance(tuning, dict):
+        _check_fields(tuning, "tuning", _TUNING_FIELDS, errors, notes)
+        for i, entry in enumerate(tuning.get("entries") or ()):
+            if not isinstance(entry, dict):
+                errors.append(f"tuning.entries[{i}]: expected dict, got "
+                              f"{type(entry).__name__}")
+                continue
+            _check_fields(entry, f"tuning.entries[{i}]",
+                          _TUNING_ENTRY_FIELDS, errors, notes)
     if isinstance(doc.get("integrity"), dict):
         _check_fields(doc["integrity"], "integrity", _INTEGRITY_FIELDS,
                       errors, notes)
@@ -613,6 +679,21 @@ def import_artifact(source: str | Path | dict, *,
                       f"{sum(1 for k in local if k != XLA_FUSED)} — routing "
                       "is re-derived against the local kernel registry at "
                       "lower() time")
+
+    # v1.2 tuning entries: merge the measured routing decisions into the
+    # process tuning database so this design (and any same-shaped chain)
+    # routes on measurement here too.  The DB digest is part of the
+    # lowering memo key, so the merge invalidates stale lowerings.
+    tuning = doc.get("tuning") or {}
+    if tuning.get("entries"):
+        from .tuning import TuningRecord, default_tuning_db
+        try:
+            default_tuning_db().merge(
+                TuningRecord.from_dict(e) for e in tuning["entries"])
+        except (KeyError, TypeError, ValueError) as e:
+            raise ArtifactError(
+                f"tuning does not reconstruct ({type(e).__name__}: {e}) — "
+                "corrupted values?") from e
 
     # The final cost is recomputed (the model is deterministic pure Python
     # over the stored graph); the recorded summary cross-checks for

@@ -580,13 +580,25 @@ def _register_kernel_patterns() -> None:
 
 def routing_table(results) -> str:
     """The ``--profile`` kernel-routing table: per grid cell, how many
-    fusion groups route to Pallas kernels and through which patterns.
-    Derived structurally (:func:`repro.core.routing.route_plan`) — no
-    lowering, no jax execution."""
+    fusion groups the cost gate routes to Pallas kernels, and per matched
+    chain the predicted speedup vs the measured one (when the tuning
+    database has an entry) — predicted-vs-measured at a glance.  Derived
+    structurally (:func:`repro.core.routing.route_plan`) — no lowering,
+    no jax execution."""
     from .routing import XLA_FUSED, route_plan
-    lines = ["-- kernel routing (fusion groups -> implementation) --"]
+    lines = ["-- kernel routing (cost-gated; predicted vs measured) --"]
     pattern_counts: dict[str, int] = {}
     total = routed = 0
+
+    def _chain_line(c: dict, verdict: str) -> str:
+        pred = (c["predicted_generic_cycles"]
+                / max(c["predicted_routed_cycles"], 1e-9))
+        measured = c.get("measured_speedup")
+        meas = f"{measured:.3f}x" if measured is not None else "--"
+        return (f"    {c['kernel']:<24s} {verdict:<16s} "
+                f"pred={pred:.3f}x meas={meas} "
+                f"({'+'.join(c['tasks'])})")
+
     for r in results:
         if not r.ok:
             continue
@@ -603,9 +615,50 @@ def routing_table(results) -> str:
                   if cell_routed else "")
         lines.append(f"  {r.config}/{r.preset}: {len(cell_routed)}/"
                      f"{len(plan)} groups pallas-routed{detail}")
+        for p in plan:
+            for c in p["routes"]:
+                lines.append(_chain_line(c, c.get("decision", "?")))
+            for c in p.get("rejected", ()):
+                lines.append(_chain_line(c, c.get("decision", "?")))
     pats = (", ".join(f"{k} x{v}" for k, v in sorted(pattern_counts.items()))
             or "none")
     lines.append(f"  total: {routed}/{total} groups routed; patterns: {pats}")
+    return "\n".join(lines)
+
+
+def autotune_results(results, cache=None, *, repeats: int = 5,
+                     warmup: int = 2) -> str:
+    """The ``--autotune`` verb: measure routed-vs-generic (sweeping tile
+    candidates) for every compiled cell, persist the winners in the
+    process tuning database (and the cache's disk tier when present), and
+    return a per-chain report."""
+    from .tuning import autotune_compiled, default_tuning_db
+    lines = ["-- autotune (measured routed-vs-generic per chain) --"]
+    tuned = 0
+    for r in results:
+        if not r.ok:
+            continue
+        try:
+            recs = autotune_compiled(r.compiled, repeats=repeats,
+                                     warmup=warmup)
+        except Exception as e:           # un-executable cells (stripped fns)
+            lines.append(f"  {r.config}/{r.preset}: skipped ({e})")
+            continue
+        tuned += len(recs)
+        for rec in recs:
+            tile = f" tile={rec.tile}" if rec.tile else ""
+            lines.append(
+                f"  {r.config}/{r.preset} {rec.pattern:<24s} -> "
+                f"{rec.choice:<9s} {rec.speedup:.3f}x "
+                f"(routed={rec.routed_ms:.3f}ms generic={rec.generic_ms:.3f}"
+                f"ms){tile}")
+    db = default_tuning_db()
+    where = ""
+    if cache is not None and getattr(cache, "disk_dir", None):
+        path = cache.save_tuning_db(db)
+        where = f"; persisted to {path}"
+    lines.append(f"  {tuned} chains measured; tuning DB has {len(db)} "
+                 f"entries{where}")
     return "\n".join(lines)
 
 
@@ -666,6 +719,11 @@ def main(argv=None) -> int:
     ap.add_argument("--profile", action="store_true",
                     help="print the per-pass timing table aggregated from "
                          "CompileDiagnostics")
+    ap.add_argument("--autotune", action="store_true",
+                    help="after the grid, measure routed-vs-generic per "
+                         "matched chain (sweeping each kernel's tile "
+                         "candidates), persist the winners in the tuning "
+                         "database, and print the measured table")
     ap.add_argument("--export", default="", metavar="DIR",
                     help="export every compiled cell as a versioned JSON "
                          "artifact to DIR (docs/artifact_format.md)")
@@ -715,6 +773,8 @@ def main(argv=None) -> int:
         cache = CompileCache(disk_dir=args.cache_dir or None)
         if args.clear_cache:
             cache.clear(disk=True)
+        # Measured routing decisions persist next to the compiles.
+        cache.load_tuning_db()
 
     budgets = None
     if args.pass_budget or args.enforce_budgets:
@@ -729,7 +789,7 @@ def main(argv=None) -> int:
                          f"{sorted(budgets)}, got {item!r}")
             budgets[pname] = float(val)
 
-    if args.profile or args.export:
+    if args.profile or args.export or args.autotune:
         _register_kernel_patterns()     # routing verbs see the real registry
     jobs = ablation_jobs(workloads, presets, budget_units=args.budget,
                          pass_budgets=budgets)
@@ -765,6 +825,9 @@ def main(argv=None) -> int:
             print(cache.stats.summary())
     for r in errors:
         print(f"ERROR {r.config}/{r.preset}: {r.error}", file=sys.stderr)
+    if args.autotune:
+        print()
+        print(autotune_results(results, cache))
     if args.profile:
         print()
         print(profile_table(r.compiled.diagnostics for r in results if r.ok))

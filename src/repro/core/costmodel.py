@@ -264,3 +264,182 @@ def sequential_latency(graph: DataflowGraph, hw: HwParams = V5E) -> GraphCost:
         for l in t.loops:
             l.parallel = 1
     return graph_latency(g, hw, sequential=True)
+
+
+# --------------------------------------------------------------------------
+# Routing predictor (ISSUE 6): routed-kernel vs generic-XLA latency per
+# pattern-matched chain.  Same II/trip-count arithmetic as above, plus a
+# small per-backend parameter vector calibrated from the measured routing
+# bench (results/bench/routing_groups.json).
+# --------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class RoutingCostParams:
+    """Calibration constants the routing gate combines with structural
+    :func:`task_cost` cycles.
+
+    ``efficiency[pattern]`` is the kernel's measured throughput relative
+    to the generic path for same-shaped work (geomean of bench speedups —
+    1.0 means parity).  ``generic_spill``/``stream_overlap`` model what
+    the kernel *structurally* changes: on TPU the generic path bounces
+    chain interiors through HBM (spill=1) while the kernel pipelines
+    stages (overlap=1); on CPU hosts both sides are one XLA:CPU fusion,
+    so neither effect materializes and only the calibrated efficiency and
+    the per-kernel dispatch overhead separate them.
+    """
+
+    backend: str = "cpu"
+    efficiency: tuple[tuple[str, float], ...] = ()
+    default_efficiency: float = 1.0
+    overhead_cycles: float = 2600.0    # per-kernel dispatch/setup
+    generic_spill: float = 0.0         # fraction of interior HBM round-trip
+    stream_overlap: float = 0.0        # 0 = stages run back-to-back
+    slack: float = 0.02                # noise band: route down to this loss
+
+    def eff(self, pattern: str) -> float:
+        return dict(self.efficiency).get(pattern, self.default_efficiency)
+
+    def digest(self) -> str:
+        import hashlib
+        canon = (self.backend, tuple(sorted(self.efficiency)),
+                 self.default_efficiency, self.overhead_cycles,
+                 self.generic_spill, self.stream_overlap, self.slack)
+        return hashlib.sha256(repr(canon).encode()).hexdigest()[:16]
+
+
+# Defaults calibrated from the recorded CPU routing bench (nightly
+# routing_groups.json; see calibrate_routing_params): conv chains sit at
+# ~0.99x parity, mmchains at parity, and the softmaxmm tail measures 0.97x
+# — below the slack band, so the gate routes it to generic XLA on CPU.
+_CPU_PARAMS = RoutingCostParams(
+    backend="cpu",
+    efficiency=(("streamfuse.conv", 0.99), ("streamfuse.mmchain", 1.0),
+                ("streamfuse.softmaxmm", 0.97)))
+DEFAULT_ROUTING_PARAMS: dict[str, RoutingCostParams] = {
+    "cpu": _CPU_PARAMS,
+    # GPU hosts run the same fused-jnp reference path as CPU.
+    "gpu": RoutingCostParams(backend="gpu",
+                             efficiency=_CPU_PARAMS.efficiency),
+    # On TPU the kernel is the real Pallas implementation: stages pipeline
+    # through VMEM (overlap=1) and the generic path pays the interior HBM
+    # round-trips (spill=1) — the paper's §VII-C win.
+    "tpu": RoutingCostParams(backend="tpu", generic_spill=1.0,
+                             stream_overlap=1.0, slack=0.0),
+}
+
+
+def routing_backend() -> str:
+    """The backend the routing gate prices against: ``CODO_BACKEND`` when
+    set, else jax's default backend, else ``"cpu"`` (jax-less hosts)."""
+    import os
+    env = os.environ.get("CODO_BACKEND", "").strip().lower()
+    if env:
+        return env
+    try:
+        import jax
+        return str(jax.default_backend())
+    except Exception:                        # pragma: no cover — stub builds
+        return "cpu"
+
+
+def calibrate_routing_params(doc: dict,
+                             base: RoutingCostParams | None = None,
+                             ) -> RoutingCostParams:
+    """Fit per-pattern efficiency from a ``routing_groups.json`` document:
+    the geomean of each pattern's measured ``speedup`` (xla_ms/pallas_ms),
+    clamped to a sane band.  Everything else comes from ``base`` (defaults
+    for the document's backend)."""
+    from dataclasses import replace
+    backend = str(doc.get("backend", "cpu"))
+    if base is None:
+        base = DEFAULT_ROUTING_PARAMS.get(
+            backend, replace(_CPU_PARAMS, backend=backend))
+    logs: dict[str, list[float]] = {}
+    for r in doc.get("records", ()):
+        s = float(r.get("speedup", 0.0) or 0.0)
+        if s > 0:
+            logs.setdefault(str(r.get("kernel", "?")), []).append(np.log(s))
+    eff = dict(base.efficiency)
+    for pat, ls in logs.items():
+        eff[pat] = float(np.clip(np.exp(np.mean(ls)), 0.5, 2.0))
+    return replace(base, backend=backend,
+                   efficiency=tuple(sorted(eff.items())))
+
+
+_CALIBRATION_CACHE: dict[str, RoutingCostParams] = {}
+
+
+def routing_params(backend: str | None = None) -> RoutingCostParams:
+    """Active gate parameters: defaults for ``backend`` (detected when
+    ``None``), recalibrated from the ``CODO_ROUTING_CALIBRATION`` bench
+    JSON when that points at a readable document for the same backend."""
+    import json
+    import os
+    from dataclasses import replace
+    backend = backend or routing_backend()
+    base = DEFAULT_ROUTING_PARAMS.get(
+        backend, replace(_CPU_PARAMS, backend=backend))
+    path = os.environ.get("CODO_ROUTING_CALIBRATION", "").strip()
+    if not path:
+        return base
+    key = f"{path}:{backend}"
+    hit = _CALIBRATION_CACHE.get(key)
+    if hit is not None:
+        return hit
+    try:
+        doc = json.loads(open(path).read())
+    except (OSError, ValueError):
+        return base
+    if str(doc.get("backend", backend)) != backend:
+        params = base
+    else:
+        params = calibrate_routing_params(doc, base)
+    _CALIBRATION_CACHE[key] = params
+    return params
+
+
+@dataclass(frozen=True)
+class ChainEstimate:
+    """Predicted latency of one pattern-matched chain both ways."""
+
+    pattern: str
+    tasks: tuple[str, ...]
+    routed_cycles: float
+    generic_cycles: float
+    win: bool
+
+    @property
+    def predicted_speedup(self) -> float:
+        return self.generic_cycles / max(self.routed_cycles, 1e-9)
+
+
+def estimate_chain(graph: DataflowGraph, tasks: list[Task],
+                   pattern: str, hw: HwParams = V5E,
+                   params: RoutingCostParams | None = None) -> ChainEstimate:
+    """Price a matched chain both ways with :func:`task_cost` cycles.
+
+    generic = sum of stage latencies + the interior HBM round-trips the
+    un-routed path materializes (backend-scaled); routed = the pipelined
+    stage latencies at the kernel's calibrated efficiency plus a fixed
+    dispatch overhead.  The gate routes iff routed is predicted no slower
+    than generic beyond the noise band (``params.slack``).
+    """
+    if params is None:
+        params = routing_params()
+    costs = [task_cost(graph, t, hw) for t in tasks]
+    total = sum(c.latency for c in costs)
+    peak = max(c.latency for c in costs)
+    interior_bytes = 0
+    for t in tasks[:-1]:
+        outs = {a.buffer for a in t.writes}
+        for b in outs:
+            interior_bytes += graph.buffers[b].nbytes
+    spill = (2.0 * interior_bytes / hw.hbm_bytes_per_cycle
+             * params.generic_spill)               # write + re-read
+    generic = total + spill
+    pipelined = total - params.stream_overlap * (total - peak)
+    routed = pipelined / params.eff(pattern) + params.overhead_cycles
+    win = routed <= generic * (1.0 + params.slack)
+    return ChainEstimate(pattern, tuple(t.name for t in tasks),
+                         routed, generic, win)

@@ -44,9 +44,9 @@ from .compiler import CompiledDataflow
 from .graph import FIFO, DataflowGraph, GraphError, Task
 from .ops import registry_epoch as _ops_epoch
 from .routing import (XLA_FUSED, KernelPattern, RoutedKernel,
-                      ensure_kernel_patterns, pallas_disabled,
-                      pallas_interpret_forced, register_kernel_pattern,
-                      route_groups, routing_epoch)
+                      ensure_kernel_patterns, pallas_interpret_forced,
+                      register_kernel_pattern, route_groups,
+                      routing_state_key)
 
 def register_group_kernel(pattern: tuple[str, ...],
                           factory: Callable[..., Callable]) -> None:
@@ -74,6 +74,12 @@ class FusionGroup:
     ops: tuple[str, ...]
     kernel: str = XLA_FUSED       # or "pallas:<pattern>[+<pattern>...]"
     routes: list[RoutedKernel] = field(default_factory=list)
+    # Cost-gate record (ISSUE 6): structural matches the gate turned down,
+    # the group-level decision, and predicted cycles both ways.
+    rejected: list[RoutedKernel] = field(default_factory=list)
+    decision: str = "generic"     # "routed" | "generic" | "disabled"
+    predicted_routed_cycles: float = 0.0
+    predicted_generic_cycles: float = 0.0
 
 
 @dataclass
@@ -163,20 +169,31 @@ def _build_steps(graph: DataflowGraph, groups: list[FusionGroup],
             for route in g.routes:
                 pat = pats.get(route.kernel)
                 tasks = [graph.task(n) for n in route.tasks]
-                step = pat.factory(graph, g, tasks) if pat else None
+                if pat is None:
+                    step = None
+                elif route.tile is not None:    # tuned blocking wins
+                    step = pat.factory(graph, g, tasks, tile=route.tile)
+                else:
+                    step = pat.factory(graph, g, tasks)
                 if step is None:        # factory declined at build time
                     continue
                 built.append(route)
                 step_at[route.tasks[-1]] = step
                 skip.update(route.tasks[:-1])
             if len(built) != len(g.routes):
+                for r in g.routes:
+                    if r not in built:
+                        r.decision = "declined"     # factory said no
+                        g.rejected.append(r)
                 g.routes = built
                 g.kernel = ("pallas:" + "+".join(r.kernel for r in built)
                             if built else XLA_FUSED)
+                g.decision = "routed" if built else "generic"
     else:
         for g in groups:
-            g.routes = []
+            g.routes, g.rejected = [], []
             g.kernel = XLA_FUSED
+            g.decision = "generic"
 
     steps: list[Callable[[dict], dict]] = []
     for t in graph.toposort():
@@ -202,12 +219,13 @@ def lower(compiled: CompiledDataflow, jit: bool = True,
             "(repro.core.ops) for executable cache entries, or recompile "
             "with an in-memory cache / cache=None before lowering.")
     # Key covers fusion decisions (via the structural hash), the flags, and
-    # every routing-relevant switch: the CODO_DISABLE_PALLAS escape hatch,
-    # the kernel-pattern registry epoch, and the op-impl registry epoch —
-    # flipping any of them must never serve a stale program.
+    # every routing-relevant switch (routing_state_key: the disable/force
+    # escape hatches, the registry epoch, the priced backend, the
+    # calibration digest, and the tuning-DB digest) plus the op-impl
+    # registry epoch — flipping any of them must never serve a stale
+    # program.
     key = (graph.structural_hash(), bool(jit), bool(use_registered_kernels),
-           pallas_disabled(), pallas_interpret_forced(), routing_epoch(),
-           _ops_epoch())
+           pallas_interpret_forced(), *routing_state_key(), _ops_epoch())
     if memo:
         with _LOWER_LOCK:
             hit = _LOWER_CACHE.get(key)
@@ -227,7 +245,7 @@ def lower(compiled: CompiledDataflow, jit: bool = True,
     impl = compiled.buffer_plan.impl if compiled.buffer_plan else {}
     groups = fusion_groups(graph, impl)
     if use_registered_kernels:
-        route_groups(graph, groups, impl)
+        route_groups(graph, groups, impl, hw=compiled.options.hw)
     steps = _build_steps(graph, groups, use_registered_kernels)
 
     outputs = [b.name for b in graph.outputs()]
@@ -261,10 +279,21 @@ def lower(compiled: CompiledDataflow, jit: bool = True,
 def _record_routing(compiled: CompiledDataflow,
                     groups: list[FusionGroup]) -> None:
     """Surface the routing decision on the design's diagnostics so it
-    travels with reports, ``--profile`` tables, and exported artifacts."""
+    travels with reports, ``--profile`` tables, and exported artifacts.
+    Every entry records the cost gate's verdict and the predicted cycles
+    both ways (ISSUE 6), not just the winning kernel name."""
     if compiled.diagnostics is not None:
         compiled.diagnostics.group_kernels = {
-            str(g.gid): g.kernel for g in groups}
+            str(g.gid): {
+                "kernel": g.kernel,
+                "decision": g.decision,
+                "predicted_routed_cycles": round(
+                    g.predicted_routed_cycles, 1),
+                "predicted_generic_cycles": round(
+                    g.predicted_generic_cycles, 1),
+                "routes": [r.to_dict() for r in g.routes],
+                "rejected": [r.to_dict() for r in g.rejected],
+            } for g in groups}
 
 
 def lower_artifact(source, *, jit: bool = True,

@@ -132,10 +132,12 @@ class CompileDiagnostics:
     total_seconds: float = 0.0
     cache_hit: bool = False
     cache_key: str = ""
-    # Kernel-routing decision per fusion group (gid -> "xla-fused" or
-    # "pallas:<pattern>[+...]").  Populated by lowering.lower() — empty
-    # until the design has been lowered at least once.
-    group_kernels: dict[str, str] = field(default_factory=dict)
+    # Kernel-routing record per fusion group (gid -> entry dict with the
+    # winning "kernel", the cost gate's "decision", the predicted
+    # routed/generic cycles, and the per-chain "routes"/"rejected"
+    # verdicts).  Populated by lowering.lower() — empty until the design
+    # has been lowered at least once.
+    group_kernels: dict[str, dict] = field(default_factory=dict)
 
     @property
     def pass_names(self) -> list[str]:
@@ -155,9 +157,9 @@ class CompileDiagnostics:
                 for r in self.records if r.over_budget]
 
     def routed_kernels(self) -> dict[str, str]:
-        """Only the groups routed off the generic path."""
-        return {gid: k for gid, k in self.group_kernels.items()
-                if k != "xla-fused"}
+        """Only the groups routed off the generic path (gid -> kernel)."""
+        return {gid: e["kernel"] for gid, e in self.group_kernels.items()
+                if e.get("kernel", "xla-fused") != "xla-fused"}
 
     def summary(self) -> str:
         src = "cache" if self.cache_hit else f"{len(self.records)} passes"
@@ -180,19 +182,25 @@ class CompileDiagnostics:
                "total_seconds": self.total_seconds,
                "cache_hit": self.cache_hit, "cache_key": self.cache_key}
         if self.group_kernels:
-            out["group_kernels"] = dict(self.group_kernels)
+            out["group_kernels"] = {k: dict(v)
+                                    for k, v in self.group_kernels.items()}
         return out
 
     @classmethod
     def from_dict(cls, doc: dict) -> "CompileDiagnostics":
+        # Pre-1.2 artifacts recorded bare kernel strings per gid; wrap
+        # them in the entry shape so consumers see one format.
+        kernels = {}
+        for k, v in (doc.get("group_kernels") or {}).items():
+            kernels[str(k)] = dict(v) if isinstance(v, dict) else {
+                "kernel": str(v)}
         return cls(graph=doc.get("graph", "?"),
                    records=[PassRecord.from_dict(r)
                             for r in doc.get("records", ())],
                    total_seconds=float(doc.get("total_seconds", 0.0)),
                    cache_hit=bool(doc.get("cache_hit", False)),
                    cache_key=doc.get("cache_key", ""),
-                   group_kernels={str(k): str(v) for k, v in
-                                  (doc.get("group_kernels") or {}).items()})
+                   group_kernels=kernels)
 
 
 # --------------------------------------------------------------------------

@@ -37,18 +37,33 @@ stays importable without jax (the artifact exporter records routing
 decisions jax-free).  The ``factory(graph, group, tasks)`` that builds the
 executable step is only called from the lowering and may import jax.
 
-Escape hatch
-------------
+Cost gate (ISSUE 6)
+-------------------
+
+A structural match is necessary but not sufficient: each matched chain is
+priced both ways by the cost model (:func:`repro.core.costmodel.
+estimate_chain`) and routed only on predicted win — small chains whose
+dispatch overhead would dominate, and patterns the calibration says lose
+on this backend (the CPU softmaxmm tail), fall back to generic XLA.  A
+measured :class:`~repro.core.tuning.TuningDB` verdict beats the
+predictor when one exists for the chain's structural signature.
+
+Escape hatches
+--------------
 
 ``CODO_DISABLE_PALLAS=1`` disables all routing — every group falls back
-to ``xla-fused``.  The flag (and the registry epoch) enter the lowering
-memo key, so toggling it never serves a stale program.
+to ``xla-fused``.  ``CODO_FORCE_PALLAS=1`` routes every structural match
+regardless of the gate's prediction (disable wins over force).  Both
+flags — plus the registry epoch, the backend, the calibration digest,
+and the tuning-DB digest — enter the lowering memo key via
+:func:`routing_state_key`, so toggling any of them never serves a stale
+program.
 """
 
 from __future__ import annotations
 
 import os
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 from typing import Any, Callable, Sequence
 
 from .graph import DataflowGraph, Task
@@ -68,6 +83,14 @@ def pallas_disabled() -> bool:
     return _truthy("CODO_DISABLE_PALLAS")
 
 
+def pallas_forced() -> bool:
+    """The ``CODO_FORCE_PALLAS`` override: truthy values route every
+    structural match regardless of the cost gate's prediction (useful for
+    A/B measurement and for exercising kernels on shapes the gate would
+    reject).  :func:`pallas_disabled` wins when both are set."""
+    return _truthy("CODO_FORCE_PALLAS")
+
+
 def pallas_interpret_forced() -> bool:
     """``CODO_PALLAS_INTERPRET=1`` forces routed kernels to run the real
     Pallas body in interpret mode on non-TPU hosts (the CI numerics path).
@@ -82,7 +105,10 @@ class KernelPattern:
 
     ``factory(graph, group, tasks)`` returns an ``env -> {out: array}``
     callable (it may import jax lazily); returning ``None`` declines the
-    match at build time (treated like an infeasible guard).
+    match at build time (treated like an infeasible guard).  Patterns
+    whose kernels take tile/block parameters declare a ``tiles(graph,
+    tasks)`` candidate enumerator and accept the winning candidate as a
+    ``tile=`` keyword on the factory (``None`` = kernel default).
     """
 
     name: str
@@ -90,6 +116,7 @@ class KernelPattern:
     factory: Callable[[DataflowGraph, Any, list[Task]], Callable | None]
     feasible: Callable[[DataflowGraph, list[Task]], bool] | None = None
     description: str = ""
+    tiles: Callable[[DataflowGraph, list[Task]], list[dict | None]] | None = None
 
     def __post_init__(self):
         if not self.pattern:
@@ -102,14 +129,42 @@ class KernelPattern:
 
 @dataclass
 class RoutedKernel:
-    """One routing decision inside a fusion group: these tasks execute as
-    this registered kernel instead of task-by-task."""
+    """One gate decision inside a fusion group: a structurally matched
+    chain, the cost model's verdict on it, and — when the decision came
+    from the tuning database — the measured numbers.  Chains whose
+    ``decision`` is in :data:`ROUTED_DECISIONS` execute as the registered
+    kernel; the rest stay on the generic path (recorded for the
+    diagnostics/--profile predicted-vs-measured table)."""
 
     kernel: str                  # KernelPattern.name
     tasks: list[str]             # matched chain, dataflow order
+    decision: str = "predicted-win"
+    predicted_routed_cycles: float = 0.0
+    predicted_generic_cycles: float = 0.0
+    tile: dict | None = None     # tuned blocking (None = kernel default)
+    measured_speedup: float | None = None   # generic/routed, tuning DB
+
+    @property
+    def routed(self) -> bool:
+        return self.decision in ROUTED_DECISIONS
 
     def to_dict(self) -> dict:
-        return {"kernel": self.kernel, "tasks": list(self.tasks)}
+        out = {"kernel": self.kernel, "tasks": list(self.tasks),
+               "decision": self.decision,
+               "predicted_routed_cycles": round(
+                   self.predicted_routed_cycles, 1),
+               "predicted_generic_cycles": round(
+                   self.predicted_generic_cycles, 1)}
+        if self.tile is not None:
+            out["tile"] = dict(self.tile)
+        if self.measured_speedup is not None:
+            out["measured_speedup"] = round(self.measured_speedup, 4)
+        return out
+
+
+# Decisions that put a chain on the kernel path; everything else
+# ("predicted-loss", "tuned-generic") stays generic.
+ROUTED_DECISIONS = frozenset({"predicted-win", "forced", "tuned"})
 
 
 # --------------------------------------------------------------------------
@@ -280,52 +335,129 @@ def match_group(graph: DataflowGraph, group_tasks: Sequence[str],
     return out
 
 
+def decide_route(graph: DataflowGraph, tasks: list[Task],
+                 pattern: KernelPattern, *, hw=None, params=None,
+                 db=None) -> RoutedKernel:
+    """The cost gate for one structurally matched chain.
+
+    Precedence: a measured :class:`~repro.core.tuning.TuningDB` entry for
+    the chain's signature on this backend/hardware (``tuned`` /
+    ``tuned-generic``), then the ``CODO_FORCE_PALLAS`` override
+    (``forced``), then the predictor (``predicted-win`` /
+    ``predicted-loss``).  The predicted cycles are recorded on the result
+    either way.
+    """
+    from .costmodel import V5E, estimate_chain, routing_backend
+    from .tuning import chain_signature, default_tuning_db
+    hw = hw if hw is not None else V5E
+    est = estimate_chain(graph, tasks, pattern.name, hw, params)
+    route = RoutedKernel(pattern.name, [t.name for t in tasks],
+                         predicted_routed_cycles=est.routed_cycles,
+                         predicted_generic_cycles=est.generic_cycles)
+    if db is None:
+        db = default_tuning_db()
+    rec = db.lookup(chain_signature(graph, tasks), routing_backend(), hw.name)
+    if rec is not None:
+        route.decision = "tuned" if rec.choice == "pallas" else "tuned-generic"
+        route.tile = dict(rec.tile) if rec.tile else None
+        route.measured_speedup = rec.speedup
+    elif pallas_forced():
+        route.decision = "forced"
+    else:
+        route.decision = "predicted-win" if est.win else "predicted-loss"
+    return route
+
+
 def route_groups(graph: DataflowGraph, groups, impl: dict[str, str], *,
-                 enabled: bool | None = None) -> None:
+                 enabled: bool | None = None, hw=None, params=None,
+                 db=None) -> None:
     """Annotate each :class:`~repro.core.lowering.FusionGroup` in
-    ``groups`` with its routing decision (``kernel`` + ``routes``).
+    ``groups`` with its routing decision: cost-gate-accepted chains in
+    ``routes``, gate-rejected structural matches in ``rejected``, and the
+    group-level predicted cycles both ways.
 
     ``enabled=None`` consults :func:`pallas_disabled`.  jax-free: only the
     lowering turns the resulting decisions into executable steps.
     """
+    from .costmodel import V5E, routing_params, task_cost
     if enabled is None:
         enabled = not pallas_disabled()
+    if params is None and enabled:
+        params = routing_params()
+    hw_ = hw if hw is not None else V5E
     for g in groups:
-        g.routes = []
+        g.routes, g.rejected = [], []
         g.kernel = XLA_FUSED
-        if not enabled or len(g.tasks) < 2:
-            continue
-        for pat, tasks in match_group(graph, g.tasks, impl):
-            g.routes.append(RoutedKernel(pat.name, [t.name for t in tasks]))
+        g.decision = "disabled" if not enabled else "generic"
+        chained: set[str] = set()
+        if enabled and len(g.tasks) >= 2:
+            for pat, tasks in match_group(graph, g.tasks, impl):
+                route = decide_route(graph, tasks, pat, hw=hw,
+                                     params=params, db=db)
+                (g.routes if route.routed else g.rejected).append(route)
+                if route.routed:
+                    chained.update(route.tasks)
+        # Group-level estimate: unmatched/rejected tasks run generically
+        # on both sides; accepted chains contribute their two estimates.
+        rest = sum(task_cost(graph, graph.task(n), hw_).latency
+                   for n in g.tasks if n not in chained)
+        g.predicted_generic_cycles = rest + sum(
+            r.predicted_generic_cycles for r in g.routes)
+        g.predicted_routed_cycles = rest + sum(
+            r.predicted_routed_cycles for r in g.routes)
         if g.routes:
             g.kernel = "pallas:" + "+".join(r.kernel for r in g.routes)
+            g.decision = "routed"
 
 
 def route_plan(graph: DataflowGraph, impl: dict[str, str], *,
-               enabled: bool | None = None) -> list[dict]:
+               enabled: bool | None = None, hw=None, params=None,
+               db=None) -> list[dict]:
     """The per-group routing table for a compiled design, as plain data
     (what the artifact exporter and the CLI ``--profile`` report).  Group
     membership mirrors ``lowering.fusion_groups`` without mutating task
-    ``fused_group`` ids."""
+    ``fused_group`` ids; the cost gate (and tuning DB) apply exactly as in
+    :func:`route_groups`."""
     from .artifact import _fifo_groups  # jax-free, same grouping
+    from .costmodel import routing_params
     ensure_kernel_patterns()
     if enabled is None:
         enabled = not pallas_disabled()
+    if params is None and enabled:
+        params = routing_params()
     plan = []
     for gid, names in enumerate(_fifo_groups(graph, impl)):
-        routes = (match_group(graph, names, impl) if enabled and len(names) > 1
-                  else [])
-        kernel = ("pallas:" + "+".join(p.name for p, _t in routes)
+        routes: list[RoutedKernel] = []
+        rejected: list[RoutedKernel] = []
+        if enabled and len(names) > 1:
+            for pat, tasks in match_group(graph, names, impl):
+                route = decide_route(graph, tasks, pat, hw=hw,
+                                     params=params, db=db)
+                (routes if route.routed else rejected).append(route)
+        kernel = ("pallas:" + "+".join(r.kernel for r in routes)
                   if routes else XLA_FUSED)
         plan.append({"gid": gid, "tasks": list(names), "kernel": kernel,
-                     "routes": [RoutedKernel(p.name,
-                                             [t.name for t in ts]).to_dict()
-                                for p, ts in routes]})
+                     "routes": [r.to_dict() for r in routes],
+                     "rejected": [r.to_dict() for r in rejected]})
     return plan
 
 
-__all__ = ["KernelPattern", "RoutedKernel", "XLA_FUSED",
-           "clear_kernel_patterns", "ensure_kernel_patterns", "match_group",
-           "pallas_disabled", "pallas_interpret_forced",
-           "register_kernel_pattern", "registered_patterns", "route_groups",
-           "route_plan", "routing_epoch"]
+def routing_state_key() -> tuple:
+    """Every process-global switch a routing decision can depend on — the
+    lowering memo key ingredient.  Covers the disable/force escape
+    hatches, the pattern-registry epoch, the priced backend, the active
+    calibration constants, and the tuning-database contents: flipping any
+    of them must never serve a stale program."""
+    from .costmodel import routing_backend, routing_params
+    from .tuning import default_tuning_db
+    backend = routing_backend()
+    return (pallas_disabled(), pallas_forced(), routing_epoch(), backend,
+            routing_params(backend).digest(), default_tuning_db().digest())
+
+
+__all__ = ["KernelPattern", "ROUTED_DECISIONS", "RoutedKernel", "XLA_FUSED",
+           "clear_kernel_patterns", "decide_route", "ensure_kernel_patterns",
+           "match_group", "pallas_disabled", "pallas_forced",
+           "pallas_interpret_forced", "register_kernel_pattern",
+           "registered_patterns", "route_groups", "route_plan",
+           "routing_epoch", "routing_state_key"]

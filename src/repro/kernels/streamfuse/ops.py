@@ -109,7 +109,7 @@ def _conv_feasible(graph, tasks) -> bool:
     return _f32(graph, x_buf, w_buf, relu_t.spec.outs[0])
 
 
-def _conv_factory(graph, group, tasks):
+def _conv_factory(graph, group, tasks, tile=None):
     import jax
 
     pad_t, conv_t, relu_t = tasks
@@ -165,7 +165,18 @@ def _ew_applier(ew_tasks):
     return ew
 
 
-def _mm_chain_factory(graph, group, tasks):
+def _mm_chain_tiles(graph, tasks):
+    """Autotune candidates: row-block sizes for the streamed activation
+    (``None`` = the kernel's 128 default).  Reference mode has no blocking
+    to sweep — routed-vs-generic is the only question there."""
+    if _mode() == "reference":
+        return [None]
+    m = graph.buffers[tasks[0].spec.ins[0]].shape[0]
+    return [None] + [{"block_m": b} for b in (64, 256)
+                     if b <= max(m, 64)]
+
+
+def _mm_chain_factory(graph, group, tasks, tile=None):
     import jax
     from .chain import fused_matmul_chain
 
@@ -182,7 +193,9 @@ def _mm_chain_factory(graph, group, tasks):
     if mode == "reference":
         fn = jax.jit(lambda a, w1, w2: matmul_chain_ref(a, w1, w2, ew))
     else:
+        block_m = int((tile or {}).get("block_m", 128))
         fn = jax.jit(functools.partial(fused_matmul_chain, ew=ew,
+                                       block_m=block_m,
                                        interpret=(mode == "interpret")))
 
     def run(env):
@@ -214,7 +227,20 @@ def _softmax_mm_feasible(graph, tasks) -> bool:
     return _f32(graph, sm.spec.ins[0], v_buf, mm.spec.outs[0])
 
 
-def _softmax_mm_factory(graph, group, tasks):
+def _softmax_mm_tiles(graph, tasks):
+    """Autotune candidates: (row, contraction) block pairs for the online
+    softmax·V stream (``None`` = the kernel's 128/128 default)."""
+    if _mode() == "reference":
+        return [None]
+    s, k = graph.buffers[tasks[0].spec.ins[0]].shape
+    out = [None]
+    for bm, bk in ((64, 128), (128, 256)):
+        if bm <= max(s, 64) and bk <= max(k, 128):
+            out.append({"block_m": bm, "block_k": bk})
+    return out
+
+
+def _softmax_mm_factory(graph, group, tasks, tile=None):
     import jax
     from .chain import fused_softmax_matmul
 
@@ -227,8 +253,12 @@ def _softmax_mm_factory(graph, group, tasks):
     if mode == "reference":
         fn = jax.jit(softmax_matmul_ref)
     else:
-        fn = jax.jit(functools.partial(fused_softmax_matmul,
-                                       interpret=(mode == "interpret")))
+        tile = tile or {}
+        fn = jax.jit(functools.partial(
+            fused_softmax_matmul,
+            block_m=int(tile.get("block_m", 128)),
+            block_k=int(tile.get("block_k", 128)),
+            interpret=(mode == "interpret")))
 
     def run(env):
         return {out_buf: fn(env[s_buf], env[v_buf])}
@@ -258,8 +288,10 @@ def register() -> None:
     register_kernel_pattern(KernelPattern(
         name="streamfuse.mmchain", pattern=("matmul", "*ewise", "matmul"),
         factory=_mm_chain_factory, feasible=_mm_chain_feasible,
+        tiles=_mm_chain_tiles,
         description="ew(a@w1)@w2 with the activation row-block in VMEM"))
     register_kernel_pattern(KernelPattern(
         name="streamfuse.softmaxmm", pattern=("softmax", "matmul"),
         factory=_softmax_mm_factory, feasible=_softmax_mm_feasible,
+        tiles=_softmax_mm_tiles,
         description="online-softmax(s)@v streaming attention tail"))

@@ -85,7 +85,7 @@ def test_ssd_sweep(nc, BH, P, N):
                                rtol=1e-5, atol=1e-5)
 
 
-def test_streamfuse_registered_in_lowering():
+def test_streamfuse_registered_in_lowering(monkeypatch):
     """The motivating chain lowers through the Pallas kernel."""
     import jax
 
@@ -94,6 +94,7 @@ def test_streamfuse_registered_in_lowering():
     from repro.models.dataflow_models import GB, random_inputs
 
     register_all()
+    monkeypatch.setenv("CODO_FORCE_PALLAS", "1")   # tiny conv: skip cost gate
     b = GB("chain")
     x = b.input("x", (1, 3, 12, 12))
     y = b.conv(x, 4, 3, relu=True)

@@ -5,7 +5,12 @@ fusion-group OpSpec chains, feasibility guards, routed-vs-generic
 numerics on ``gpt2_block``/``resnet18`` (both the fused-reference backend
 and the true Pallas interpret path), the ``CODO_DISABLE_PALLAS`` escape
 hatch and its lowering-memo-key coverage, routing decisions riding on
-diagnostics and v1.1 artifacts, and the CLI ``--profile`` routing table.
+diagnostics and artifacts, and the CLI ``--profile`` routing table.
+
+Since ISSUE 6 routing is cost-gated: tiny unit-test shapes fall below
+the predictor's win threshold, so shape-dependent routing tests pin
+``CODO_FORCE_PALLAS=1`` to exercise the kernel path deterministically.
+The gate itself is covered in ``tests/test_costmodel_routing.py``.
 """
 
 import numpy as np
@@ -147,7 +152,8 @@ def test_legacy_register_group_kernel_shim():
 # --------------------------------------------------------------------------
 
 
-def test_gpt2_block_routes_and_verifies():
+def test_gpt2_block_routes_and_verifies(monkeypatch):
+    monkeypatch.setenv("CODO_FORCE_PALLAS", "1")   # tiny shapes: skip gate
     c = _gpt2()
     low = lower(c, jit=False)
     routed = [g for g in low.groups if g.routes]
@@ -157,8 +163,11 @@ def test_gpt2_block_routes_and_verifies():
     assert "streamfuse.softmaxmm" in kernels
     env = dm.random_inputs(c.graph)
     verify_routing(c, env, rtol=3e-4, atol=3e-4)
-    # the decision rides on the diagnostics
-    assert any(k != XLA_FUSED for k in c.diagnostics.group_kernels.values())
+    # the decision rides on the diagnostics, with the gate's estimates
+    entries = c.diagnostics.group_kernels.values()
+    assert any(e["kernel"] != XLA_FUSED for e in entries)
+    assert all(e["decision"] and "predicted_routed_cycles" in e
+               for e in entries)
     assert "pallas-routed" in c.diagnostics.summary()
 
 
@@ -187,6 +196,7 @@ def test_true_pallas_interpret_path(monkeypatch):
     interpret mode on CPU) through the routed lowering — the mmchain and
     softmaxmm kernels via gpt2, the conv kernel via the Fig. 2 chain."""
     monkeypatch.setenv("CODO_PALLAS_INTERPRET", "1")
+    monkeypatch.setenv("CODO_FORCE_PALLAS", "1")   # tiny shapes: skip gate
     c = _gpt2()
     env = dm.random_inputs(c.graph)
     routed = verify_routing(c, env, rtol=3e-4, atol=3e-4)
@@ -241,13 +251,15 @@ def test_disable_pallas_routes_everything_to_xla(monkeypatch):
     low = lower(c, jit=False)
     assert all(g.kernel == XLA_FUSED and not g.routes for g in low.groups)
     verify_routing(c, dm.random_inputs(c.graph))   # trivially equal
-    assert all(k == XLA_FUSED for k in c.diagnostics.group_kernels.values())
+    assert all(e["kernel"] == XLA_FUSED
+               for e in c.diagnostics.group_kernels.values())
 
 
 def test_flipping_disable_flag_relowers(monkeypatch):
     """Toggling CODO_DISABLE_PALLAS must never serve a memoized program
     built under the other setting — the flag is part of the memo key."""
     monkeypatch.delenv("CODO_DISABLE_PALLAS", raising=False)
+    monkeypatch.setenv("CODO_FORCE_PALLAS", "1")   # tiny shapes: skip gate
     c = _gpt2()
     lower(c, jit=False)          # assigns fused_group ids (hash settles)
     clear_lower_cache()
@@ -280,16 +292,17 @@ def test_interpret_flag_is_in_memo_key(monkeypatch):
 
 
 # --------------------------------------------------------------------------
-# Routing rides on artifacts (v1.1) and the CLI --profile table
+# Routing rides on artifacts (v1.2) and the CLI --profile table
 # --------------------------------------------------------------------------
 
 
-def test_artifact_records_group_kernels():
+def test_artifact_records_group_kernels(monkeypatch):
     from repro.core import export_artifact, import_artifact
+    monkeypatch.setenv("CODO_FORCE_PALLAS", "1")   # tiny shapes: skip gate
     c = _gpt2()
     lower(c, jit=False)
     doc = export_artifact(c)
-    assert doc["schema_version"] == "1.1"
+    assert doc["schema_version"] == "1.2"
     kernels = doc["fusion"]["kernels"]
     assert len(kernels) == len(doc["fusion"]["groups"])
     assert any(k.startswith("pallas:") for k in kernels)
@@ -297,12 +310,14 @@ def test_artifact_records_group_kernels():
     assert restored.diagnostics.group_kernels == c.diagnostics.group_kernels
 
 
-def test_route_plan_is_jax_free_view():
+def test_route_plan_is_jax_free_view(monkeypatch):
+    monkeypatch.setenv("CODO_FORCE_PALLAS", "1")   # tiny shapes: skip gate
     c = _gpt2()
     impl = c.buffer_plan.impl if c.buffer_plan else {}
     plan = route_plan(c.graph, impl)
     assert any(p["kernel"].startswith("pallas:") for p in plan)
-    assert all(set(p) == {"gid", "tasks", "kernel", "routes"} for p in plan)
+    assert all(set(p) == {"gid", "tasks", "kernel", "routes", "rejected"}
+               for p in plan)
 
 
 def test_cli_profile_prints_routing_table(tmp_path, capsys):
