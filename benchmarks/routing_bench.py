@@ -49,6 +49,13 @@ OUT = Path(__file__).resolve().parents[1] / "results" / "bench"
 WORKLOADS = {
     "gpt2_block": lambda dm: dm.gpt2_block(),
     "resnet18": lambda dm: dm.resnet18(32),
+    # Attention/recurrence families (ROADMAP item 4): the flashattn chain
+    # plus the two chunked-scan recurrences.  On CPU the gate predicts a
+    # loss for the scans (sequential reference vs XLA's fused scan), so
+    # they are measured as rejected evidence, not judged by --check-gate.
+    "mha_batched": lambda dm: dm.mha_batched(BH=8, S=128, hd=64),
+    "rglru_block": lambda dm: dm.rglru_block(B=4, S=256, D=128),
+    "ssd_block": lambda dm: dm.ssd_block(nc=16, BH=16, P=32, N=32),
 }
 
 # PR-gate shapes: big enough that the gate's accepted set is non-trivial
@@ -57,6 +64,9 @@ WORKLOADS = {
 QUICK_WORKLOADS = {
     "gpt2_block": lambda dm: dm.gpt2_block(S=64),
     "resnet18": lambda dm: dm.resnet18(32),
+    "mha_batched": lambda dm: dm.mha_batched(BH=4, S=64, hd=32),
+    "rglru_block": lambda dm: dm.rglru_block(B=2, S=128, D=64),
+    "ssd_block": lambda dm: dm.ssd_block(nc=8, BH=8, P=32, N=32),
 }
 
 WARMUP = 3

@@ -246,9 +246,27 @@ class GB:
         return out
 
     def matmul(self, a: str, b: str) -> str:
-        m, k = self.shape[a]
-        k2, n = self.shape[b]
-        assert k == k2, (self.shape[a], self.shape[b])
+        """2-D ``(M, K) @ (K, N)`` or batched 3-D ``(B, M, K) @ (B, K, N)``
+        (one leading batch dim; the batch loop prefixes all three
+        accesses)."""
+        sa, sb = self.shape[a], self.shape[b]
+        if len(sa) == 3 or len(sb) == 3:
+            if len(sa) != 3 or len(sb) != 3:
+                raise TraceError(
+                    f"batched matmul needs two 3-D operands (got {sa} and "
+                    f"{sb}); lift the 2-D side explicitly")
+            bt, m, k = sa
+            bt2, k2, n = sb
+            if bt != bt2 or k != k2:
+                raise TraceError(f"batched matmul shape mismatch: {sa} @ {sb}")
+            out = self.buf(self.fresh("bmm"), (bt, m, n))
+            self.g.add_task(matmul_task(
+                self.fresh("bmm_t"), out, a, b, m, n, k, batch=bt,
+                spec=OpSpec("matmul", (a, b), (out,))))
+            return out
+        m, k = sa
+        k2, n = sb
+        assert k == k2, (sa, sb)
         out = self.buf(self.fresh("mm"), (m, n))
         self.g.add_task(matmul_task(
             self.fresh("mm_t"), out, a, b, m, n, k,
@@ -256,7 +274,22 @@ class GB:
         return out
 
     def transpose(self, x: str) -> str:
-        m, n = self.shape[x]
+        """2-D transpose, or a last-two-dims swap for 3-D (batched)
+        operands (spec attr ``perm=(0, 2, 1)``)."""
+        shp = self.shape[x]
+        if len(shp) == 3:
+            bt, m, n = shp
+            out = self.buf(self.fresh("tr"), (bt, n, m))
+            t = Task(self.fresh("transpose_t"),
+                     loops=[Loop("b", bt), Loop("i", m), Loop("j", n)],
+                     reads=[Access(x, (idx("b"), idx("i"), idx("j")), False)],
+                     writes=[Access(out, (idx("b"), idx("j"), idx("i")), True)],
+                     op="copy", flops_per_iter=0.0,
+                     spec=OpSpec("transpose", (x,), (out,),
+                                 {"perm": (0, 2, 1)}))
+            self.g.add_task(t)
+            return out
+        m, n = shp
         out = self.buf(self.fresh("tr"), (n, m))
         t = Task(self.fresh("transpose_t"),
                  loops=[Loop("i", m), Loop("j", n)],
@@ -386,6 +419,121 @@ class GB:
                  spec=OpSpec("const", (), (out,),
                              {"value": arr.tolist(), "dtype": arr.dtype.name,
                               "shape": arr.shape}))
+        self.g.add_task(t)
+        return out
+
+    # ---- shape algebra -----------------------------------------------------
+
+    def concat(self, xs: Sequence[str], axis: int = 0) -> str:
+        """Concatenate along ``axis``; all other dims must agree."""
+        shapes = [self.shape[x] for x in xs]
+        if not xs:
+            raise TraceError("concat needs at least one operand")
+        rank = len(shapes[0])
+        axis = axis % rank
+        for s in shapes[1:]:
+            if len(s) != rank or any(a != b for d, (a, b)
+                                     in enumerate(zip(shapes[0], s))
+                                     if d != axis):
+                raise TraceError(f"concat operand shapes disagree off axis "
+                                 f"{axis}: {shapes}")
+        oshape = list(shapes[0])
+        oshape[axis] = sum(s[axis] for s in shapes)
+        out = self.buf(self.fresh("cat"), tuple(oshape))
+        dims = [f"i{k}" for k in range(rank)]
+        t = Task(self.fresh("concat_t"),
+                 loops=[Loop(d, int(n)) for d, n in zip(dims, oshape)],
+                 reads=[Access(x, full_index(dims), False) for x in xs],
+                 writes=[Access(out, full_index(dims), True)],
+                 op="copy", flops_per_iter=0.0,
+                 spec=OpSpec("concat", tuple(xs), (out,), {"axis": axis}))
+        self.g.add_task(t)
+        return out
+
+    def split(self, x: str, sizes: Sequence[int], axis: int = 0) -> tuple[str, ...]:
+        """Partition ``axis`` into ``sizes`` pieces (the inverse of
+        :meth:`concat`); one multi-output task, one buffer per piece."""
+        shp = self.shape[x]
+        axis = axis % len(shp)
+        sizes = tuple(int(s) for s in sizes)
+        if sum(sizes) != shp[axis] or any(s <= 0 for s in sizes):
+            raise TraceError(f"split sizes {sizes} do not partition axis "
+                             f"{axis} of shape {shp}")
+        outs = []
+        for s in sizes:
+            oshape = list(shp)
+            oshape[axis] = s
+            outs.append(self.buf(self.fresh("sp"), tuple(oshape)))
+        dims = [f"i{k}" for k in range(len(shp))]
+        t = Task(self.fresh("split_t"),
+                 loops=[Loop(d, int(n)) for d, n in zip(dims, shp)],
+                 reads=[Access(x, full_index(dims), False)],
+                 writes=[Access(o, full_index(dims), True) for o in outs],
+                 op="copy", flops_per_iter=0.0,
+                 spec=OpSpec("split", (x,), tuple(outs),
+                             {"axis": axis, "sizes": sizes}))
+        self.g.add_task(t)
+        return tuple(outs)
+
+    def slice(self, x: str, starts: Sequence[int],
+              sizes: Sequence[int]) -> str:
+        """Static rectangular window ``x[starts : starts + sizes]``."""
+        shp = self.shape[x]
+        starts = tuple(int(s) for s in starts)
+        sizes = tuple(int(s) for s in sizes)
+        if len(starts) != len(shp) or len(sizes) != len(shp):
+            raise TraceError(f"slice needs one (start, size) per dim of "
+                             f"{shp}; got starts={starts} sizes={sizes}")
+        for st, sz, n in zip(starts, sizes, shp):
+            if st < 0 or sz <= 0 or st + sz > n:
+                raise TraceError(f"slice window starts={starts} "
+                                 f"sizes={sizes} exceeds shape {shp}")
+        out = self.buf(self.fresh("slc"), sizes)
+        dims = [f"i{k}" for k in range(len(shp))]
+        t = Task(self.fresh("slice_t"),
+                 loops=[Loop(d, int(n)) for d, n in zip(dims, sizes)],
+                 reads=[Access(x, full_index(dims), False)],
+                 writes=[Access(out, full_index(dims), True)],
+                 op="copy", flops_per_iter=0.0,
+                 spec=OpSpec("slice", (x,), (out,),
+                             {"starts": starts, "sizes": sizes}))
+        self.g.add_task(t)
+        return out
+
+    # ---- recurrences -------------------------------------------------------
+
+    def rglru_scan(self, a: str, b: str) -> str:
+        """RG-LRU linear recurrence h_t = a_t*h_{t-1} + b_t over axis 1 of
+        (B, S, D) operands — the scan-style recurrence op."""
+        sa, sb = self.shape[a], self.shape[b]
+        if sa != sb or len(sa) != 3:
+            raise TraceError(f"rglru_scan needs matching (B, S, D) operands "
+                             f"(got {sa} and {sb})")
+        out = self.buf(self.fresh("scan"), sa)
+        self.g.add_task(ewise_task(
+            self.fresh("rglru_scan_t"), out, [a, b], sa, op="scan",
+            flops_per_iter=2.0,
+            spec=OpSpec("rglru_scan", (a, b), (out,))))
+        return out
+
+    def ssd_scan(self, states: str, decay: str) -> str:
+        """SSD inter-chunk state recurrence over per-chunk end states
+        (nc, BH, P, N) and decays (nc, BH, 1, 1); emits carried-in
+        states."""
+        ss, sd = self.shape[states], self.shape[decay]
+        if len(ss) != 4 or len(sd) != 4 or sd[:2] != ss[:2] or sd[2:] != (1, 1):
+            raise TraceError(f"ssd_scan needs (nc, BH, P, N) states and "
+                             f"(nc, BH, 1, 1) decay (got {ss} and {sd})")
+        out = self.buf(self.fresh("scan"), ss)
+        dims = ["c", "h", "p", "n"]
+        t = Task(self.fresh("ssd_scan_t"),
+                 loops=[Loop(d, int(n)) for d, n in zip(dims, ss)],
+                 reads=[Access(states, full_index(dims), False),
+                        Access(decay, (idx("c"), idx("h"), idx(("p", 0)),
+                                       idx(("n", 0))), False)],
+                 writes=[Access(out, full_index(dims), True)],
+                 op="scan", flops_per_iter=2.0,
+                 spec=OpSpec("ssd_scan", (states, decay), (out,)))
         self.g.add_task(t)
         return out
 
@@ -782,6 +930,8 @@ def transpose(x):
     tr = _tracer_of(x)
     if tr is not None:
         return tr.wrap(tr.gb.transpose(tr.name_of(x)))
+    if getattr(x, "ndim", 2) == 3:       # batched: swap the last two dims
+        return _eager("transpose", (x,), {"perm": (0, 2, 1)})
     return _eager("transpose", (x,))
 
 
@@ -823,11 +973,66 @@ def load(x):
     return _eager("identity", (x,))
 
 
+def concat(xs, axis: int = 0):
+    """Concatenate a sequence of same-rank tensors along ``axis``."""
+    xs = tuple(xs)
+    tr = _tracer_of(*xs)
+    if tr is not None:
+        return tr.wrap(tr.gb.concat([_lift(tr, x) for x in xs], axis=axis))
+    return _eager("concat", xs, {"axis": int(axis)})
+
+
+def split(x, sizes, axis: int = 0):
+    """Partition ``axis`` into ``len(sizes)`` pieces; inverse of
+    :func:`concat`.  Returns a tuple of tensors."""
+    sizes = tuple(int(s) for s in sizes)
+    tr = _tracer_of(x)
+    if tr is not None:
+        return tuple(tr.wrap(o) for o in
+                     tr.gb.split(tr.name_of(x), sizes, axis=axis))
+    # Eager multi-output: _eager() is single-out, so build the spec inline.
+    outs = tuple(f"out{i}" for i in range(len(sizes)))
+    spec = OpSpec("split", ("in0",), outs,
+                  {"axis": int(axis), "sizes": sizes})
+    res = materialize(spec)({"in0": x})
+    return tuple(res[o] for o in outs)
+
+
+def slice_(x, starts, sizes):
+    """Static window ``x[starts : starts + sizes]`` (one entry per dim)."""
+    starts = tuple(int(s) for s in starts)
+    sizes = tuple(int(s) for s in sizes)
+    tr = _tracer_of(x)
+    if tr is not None:
+        return tr.wrap(tr.gb.slice(tr.name_of(x), starts, sizes))
+    return _eager("slice", (x,), {"starts": starts, "sizes": sizes})
+
+
+def rglru_scan(a, b):
+    """Gated linear recurrence ``h_t = a_t * h_{t-1} + b_t`` along axis 1
+    of ``(B, S, D)`` operands, ``h_{-1} = 0``."""
+    tr = _tracer_of(a, b)
+    if tr is not None:
+        na, nb = _lift_ewise(tr, a, b)
+        return tr.wrap(tr.gb.rglru_scan(na, nb))
+    return _eager("rglru_scan", (a, b))
+
+
+def ssd_scan(states, decay):
+    """SSD inter-chunk recurrence: carried-in states per chunk from
+    per-chunk end ``states (nc, BH, P, N)`` and ``decay (nc, BH, 1, 1)``."""
+    tr = _tracer_of(states, decay)
+    if tr is not None:
+        return tr.wrap(tr.gb.ssd_scan(_lift(tr, states), _lift(tr, decay)))
+    return _eager("ssd_scan", (states, decay))
+
+
 __all__ = [
     "GB", "ShapedBuffer", "TraceError", "Tracer", "buffer", "trace",
     "trace_io", "weight_init",
     # ops
-    "add", "conv", "div", "fc", "flatten", "gelu", "global_avgpool", "load",
-    "matmul", "maxpool", "mul", "mv", "pad", "relu", "scale", "softmax",
+    "add", "concat", "conv", "div", "fc", "flatten", "gelu",
+    "global_avgpool", "load", "matmul", "maxpool", "mul", "mv", "pad",
+    "relu", "rglru_scan", "scale", "slice_", "softmax", "split", "ssd_scan",
     "sub", "transpose", "vadd",
 ]

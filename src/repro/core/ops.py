@@ -403,7 +403,13 @@ def _mv(spec: OpSpec, env: dict) -> dict:
 
 @register_op("transpose")
 def _transpose(spec: OpSpec, env: dict) -> dict:
-    return {spec.outs[0]: env[spec.ins[0]].T}
+    """2-D transpose by default; an optional ``perm`` attr generalizes to
+    any rank (the frontend emits ``perm=(0, 2, 1)`` for batched operands)."""
+    x = env[spec.ins[0]]
+    perm = spec.attrs.get("perm")
+    if perm is not None:
+        return {spec.outs[0]: x.transpose(tuple(int(p) for p in perm))}
+    return {spec.outs[0]: x.T}
 
 
 @register_op("maxpool2d")
@@ -426,6 +432,79 @@ def _mean(spec: OpSpec, env: dict) -> dict:
 def _reshape(spec: OpSpec, env: dict) -> dict:
     shape = tuple(int(s) for s in spec.attrs["shape"])
     return {spec.outs[0]: env[spec.ins[0]].reshape(shape)}
+
+
+@register_op("concat")
+def _concat(spec: OpSpec, env: dict) -> dict:
+    import jax.numpy as jnp
+    axis = int(spec.attrs.get("axis", 0))
+    return {spec.outs[0]: jnp.concatenate([env[b] for b in spec.ins],
+                                          axis=axis)}
+
+
+@register_op("split")
+def _split(spec: OpSpec, env: dict) -> dict:
+    """Multi-output inverse of concat: ``sizes`` partitions ``axis``.
+    Pure indexing, so it stays tracer-safe under jit."""
+    axis = int(spec.attrs.get("axis", 0))
+    x = env[spec.ins[0]]
+    out, off = {}, 0
+    for o, s in zip(spec.outs, spec.attrs["sizes"]):
+        ix = [slice(None)] * x.ndim
+        ix[axis] = slice(off, off + int(s))
+        out[o] = x[tuple(ix)]
+        off += int(s)
+    return out
+
+
+@register_op("slice")
+def _slice(spec: OpSpec, env: dict) -> dict:
+    """Static rectangular window: ``starts``/``sizes`` per dimension."""
+    x = env[spec.ins[0]]
+    ix = tuple(slice(int(st), int(st) + int(sz))
+               for st, sz in zip(spec.attrs["starts"], spec.attrs["sizes"]))
+    return {spec.outs[0]: x[ix]}
+
+
+@register_op("rglru_scan")
+def _rglru_scan(spec: OpSpec, env: dict) -> dict:
+    """RG-LRU linear recurrence h_t = a_t * h_{t-1} + b_t over axis 1 of
+    (B, S, D) operands, h_{-1} = 0.  This is the *generic* sequential
+    definition (``lax.scan``); the routed ``rglru.scan`` kernel replaces
+    it with the chunked Pallas stream."""
+    import jax
+    import jax.numpy as jnp
+    a = jnp.asarray(env[spec.ins[0]])
+    b = jnp.asarray(env[spec.ins[1]])
+
+    def step(h, ab):
+        at, bt = ab
+        h = at * h + bt
+        return h, h
+
+    _, hs = jax.lax.scan(step, jnp.zeros_like(a[:, 0]),
+                         (jnp.swapaxes(a, 0, 1), jnp.swapaxes(b, 0, 1)))
+    return {spec.outs[0]: jnp.swapaxes(hs, 0, 1)}
+
+
+@register_op("ssd_scan")
+def _ssd_scan(spec: OpSpec, env: dict) -> dict:
+    """Mamba-2 SSD inter-chunk state recurrence over per-chunk end states
+    (nc, BH, P, N) and scalar decays (nc, BH, 1, 1): emits the state
+    carried *into* each chunk (h_0 = 0).  Generic sequential definition;
+    the routed ``ssd.scan`` kernel is the chunked Pallas stream."""
+    import jax
+    import jax.numpy as jnp
+    states = jnp.asarray(env[spec.ins[0]])
+    decay = jnp.asarray(env[spec.ins[1]])
+
+    def step(h, inp):
+        st, dec = inp
+        return h * dec + st, h
+
+    h0 = jnp.zeros(states.shape[1:], states.dtype)
+    _, prevs = jax.lax.scan(step, h0, (states, decay))
+    return {spec.outs[0]: prevs}
 
 
 __all__ = ["OpSpec", "UnknownOpError", "materialize", "op_impl",

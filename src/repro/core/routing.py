@@ -117,6 +117,10 @@ class KernelPattern:
     feasible: Callable[[DataflowGraph, list[Task]], bool] | None = None
     description: str = ""
     tiles: Callable[[DataflowGraph, list[Task]], list[dict | None]] | None = None
+    # Recurrence kernels (rglru/ssd chunked scans) replace ONE task whose
+    # generic form is sequential — for them a single-task "chain" is the
+    # whole point, so they opt out of the >=2-task floor below.
+    allow_single: bool = False
 
     def __post_init__(self):
         if not self.pattern:
@@ -306,33 +310,41 @@ def match_group(graph: DataflowGraph, group_tasks: Sequence[str],
                 ) -> list[tuple[KernelPattern, list[Task]]]:
     """All non-overlapping pattern matches inside one fusion group.
 
-    Tasks are scanned in the group's (topological) order; at each
-    unclaimed anchor the registered patterns are tried in registration
-    order and the first structurally-matching, feasible one claims its
-    chain.  Purely structural — no jax, no kernel construction.
+    Two phases, purely structural (no jax, no kernel construction):
+    every (anchor, pattern) pair is first matched independently, then
+    candidates claim tasks **longest chain first** (ties: anchor topo
+    order, then pattern registration order).  Longest-first is what lets
+    a wide pattern supersede narrower ones over the same tasks — e.g.
+    ``flashattn.mha`` takes ``matmul→scale→softmax→matmul`` whole even
+    though ``streamfuse.mmchain`` could claim the score matmul from the
+    projection anchor and ``streamfuse.softmaxmm`` could claim the tail.
+    The result is returned in anchor topo order.
     """
     pats = list(patterns) if patterns is not None else registered_patterns()
     if not pats:
         return []
     members = set(group_tasks)
-    claimed: set[str] = set()
-    out: list[tuple[KernelPattern, list[Task]]] = []
-    for name in group_tasks:
-        if name in claimed:
-            continue
+    candidates: list[tuple[int, int, int, KernelPattern, list[Task]]] = []
+    for a_idx, name in enumerate(group_tasks):
         anchor = graph.task(name)
-        for pat in pats:
+        for p_idx, pat in enumerate(pats):
             tasks = _match_chain(graph, members, impl, anchor, pat.pattern)
-            if not tasks or len(tasks) < 2:
+            min_len = 1 if pat.allow_single else 2
+            if not tasks or len(tasks) < min_len:
                 continue            # single-task "chains" stay with XLA
-            if any(t.name in claimed for t in tasks):
-                continue
             if pat.feasible is not None and not pat.feasible(graph, tasks):
                 continue
-            claimed.update(t.name for t in tasks)
-            out.append((pat, tasks))
-            break
-    return out
+            candidates.append((-len(tasks), a_idx, p_idx, pat, tasks))
+    claimed: set[str] = set()
+    out: list[tuple[int, KernelPattern, list[Task]]] = []
+    for neg_len, a_idx, _p_idx, pat, tasks in sorted(
+            candidates, key=lambda c: c[:3]):
+        if any(t.name in claimed for t in tasks):
+            continue
+        claimed.update(t.name for t in tasks)
+        out.append((a_idx, pat, tasks))
+    return [(pat, tasks) for _a, pat, tasks in sorted(out,
+                                                      key=lambda c: c[0])]
 
 
 def decide_route(graph: DataflowGraph, tasks: list[Task],
@@ -390,7 +402,7 @@ def route_groups(graph: DataflowGraph, groups, impl: dict[str, str], *,
         g.kernel = XLA_FUSED
         g.decision = "disabled" if not enabled else "generic"
         chained: set[str] = set()
-        if enabled and len(g.tasks) >= 2:
+        if enabled and g.tasks:
             for pat, tasks in match_group(graph, g.tasks, impl):
                 route = decide_route(graph, tasks, pat, hw=hw,
                                      params=params, db=db)
@@ -429,7 +441,7 @@ def route_plan(graph: DataflowGraph, impl: dict[str, str], *,
     for gid, names in enumerate(_fifo_groups(graph, impl)):
         routes: list[RoutedKernel] = []
         rejected: list[RoutedKernel] = []
-        if enabled and len(names) > 1:
+        if enabled and names:
             for pat, tasks in match_group(graph, names, impl):
                 route = decide_route(graph, tasks, pat, hw=hw,
                                      params=params, db=db)

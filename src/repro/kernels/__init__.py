@@ -15,5 +15,14 @@ from . import flashattn, matmul, rglru, ssd, streamfuse
 
 
 def register_all() -> None:
-    """Hook hand-written kernels into the CODO lowering registry."""
+    """Hook hand-written kernels into the CODO lowering registry.
+
+    Order matters only for patterns sharing an anchor op: streamfuse
+    first (the PR-6 families), then the attention/recurrence families
+    (ROADMAP item 4).  ``flashattn.mha`` anchors at the score *matmul*,
+    which precedes the softmax in topo order, so it claims the full
+    chain before ``streamfuse.softmaxmm`` can anchor at the tail."""
     streamfuse.register()
+    flashattn.register()
+    rglru.register()
+    ssd.register()

@@ -1,5 +1,6 @@
 from .flashattn import flash_attention
 from .ops import flash_attn
+from .patterns import register
 from .ref import attention_ref
 
-__all__ = ["attention_ref", "flash_attention", "flash_attn"]
+__all__ = ["attention_ref", "flash_attention", "flash_attn", "register"]

@@ -1,0 +1,159 @@
+"""CODO kernel-pattern registration: the full attention chain.
+
+``flashattn.mha`` claims ``matmul -> *ewise -> softmax -> matmul`` — the
+whole ``softmax(c * q @ kᵀ) @ v`` chain a traced attention block emits
+(2-D single-head or 3-D heads-folded-batched operands).  It anchors at
+the *first* attention matmul, which precedes the softmax in topo order,
+so a feasible match supersedes the narrower ``streamfuse.softmaxmm``
+tail: the online-softmax stream starts at the score matmul and the S×S
+score matrix never materializes in HBM.
+
+The chain carries no mask, so the kernel runs with ``causal=False,
+window=0``; interior ``scale`` tasks fold into the kernel's internal
+1/√hd by pre-scaling q with ``c·√hd``.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+from ...core.routing import KernelPattern, register_kernel_pattern
+from ..common import all_f32, kernel_mode, pow2_block, vmem_ok
+
+
+def _chain_parts(tasks):
+    """(mm1, interior ewise list, softmax, mm2) or None if kinds drift."""
+    if any(t.spec is None for t in tasks) or len(tasks) < 3:
+        return None
+    mm1, sm, mm2 = tasks[0], tasks[-2], tasks[-1]
+    ews = tasks[1:-2]
+    if (mm1.spec.kind, sm.spec.kind, mm2.spec.kind) != (
+            "matmul", "softmax", "matmul"):
+        return None
+    return mm1, ews, sm, mm2
+
+
+def _feasible(graph, tasks) -> bool:
+    parts = _chain_parts(tasks)
+    if parts is None:
+        return False
+    mm1, ews, sm, mm2 = parts
+    # Interiors must be pure rescales of the chain value (the 1/√hd).
+    prev = mm1.spec.outs[0]
+    for t in ews:
+        if t.spec.kind != "scale" or t.spec.ins != (prev,):
+            return False
+        prev = t.spec.outs[0]
+    if sm.spec.ins[0] != prev or mm2.spec.ins[0] != sm.spec.outs[0]:
+        return False
+    q_buf, kt_buf = mm1.spec.ins
+    v_buf, out_buf = mm2.spec.ins[1], mm2.spec.outs[0]
+    q_shape = graph.buffers[q_buf].shape
+    kt_shape = graph.buffers[kt_buf].shape
+    v_shape = graph.buffers[v_buf].shape
+    if len(q_shape) not in (2, 3) or len(kt_shape) != len(q_shape) \
+            or len(v_shape) != len(q_shape):
+        return False
+    hd = q_shape[-1]
+    if kt_shape[-2] != hd or v_shape[-1] != hd:       # kt is (.., hd, Sk)
+        return False
+    if v_shape[-2] != kt_shape[-1]:                   # Sk agreement
+        return False
+    if len(q_shape) == 3 and not (q_shape[0] == kt_shape[0] == v_shape[0]):
+        return False
+    axis = int(sm.spec.attrs.get("axis", -1))
+    if axis not in (-1, len(q_shape) - 1):
+        return False
+    return all_f32(graph, q_buf, kt_buf, v_buf, out_buf)
+
+
+def _scale_of(ews) -> float:
+    c = 1.0
+    for t in ews:
+        c *= float(t.spec.attrs.get("s", 1.0))
+    return c
+
+
+def tiles(graph, tasks):
+    """(block_q, block_k) candidates; ``None`` = divisor-derived default."""
+    if kernel_mode() == "reference":
+        return [None]
+    q_shape = graph.buffers[tasks[0].spec.ins[0]].shape
+    sk = graph.buffers[tasks[0].spec.ins[1]].shape[-1]
+    sq = q_shape[-2]
+    out = [None]
+    for bq, bk in ((64, 64), (128, 128)):
+        if sq % bq == 0 and sk % bk == 0:
+            out.append({"block_q": bq, "block_k": bk})
+    return out
+
+
+def factory(graph, group, tasks, tile=None):
+    import jax
+    import jax.numpy as jnp
+
+    parts = _chain_parts(tasks)
+    mm1, ews, sm, mm2 = parts
+    q_buf, kt_buf = mm1.spec.ins
+    v_buf, out_buf = mm2.spec.ins[1], mm2.spec.outs[0]
+    q_shape = graph.buffers[q_buf].shape
+    sq, hd = q_shape[-2], q_shape[-1]
+    sk = graph.buffers[kt_buf].shape[-1]
+    c = _scale_of(ews)
+
+    mode = kernel_mode()
+    if mode == "pallas" and not vmem_ok(graph.buffers[kt_buf].shape,
+                                        graph.buffers[v_buf].shape):
+        return None                     # resident K/V exceed VMEM
+
+    if mode == "reference":
+        # Exactly the chain's computation, fused under one jit.
+        def mha_ref(q, kt, v, _c=c):
+            p = jax.nn.softmax(_c * jnp.matmul(q, kt), axis=-1)
+            return jnp.matmul(p, v)
+        fn = jax.jit(mha_ref)
+    else:
+        from .flashattn import flash_attention
+        tile = tile or {}
+        bq = int(tile.get("block_q", pow2_block(sq)))
+        bk = int(tile.get("block_k", pow2_block(sk)))
+        kernel = functools.partial(flash_attention, causal=False, window=0,
+                                   block_q=bq, block_k=bk,
+                                   interpret=(mode == "interpret"))
+        # The kernel divides scores by √hd internally; fold the chain's
+        # scale c in by pre-scaling q with c·√hd.
+        pre = c * math.sqrt(hd)
+
+        def mha_kernel(q, kt, v, _pre=pre, _kernel=kernel):
+            batched = q.ndim == 3
+            if not batched:
+                q, kt, v = q[None], kt[None], v[None]
+            qq = (q * _pre)[:, None]                      # (BH, 1, Sq, hd)
+            kk = jnp.swapaxes(kt, -1, -2)[:, None]        # (BH, 1, Sk, hd)
+            vv = v[:, None]
+            o = _kernel(qq, kk, vv)[:, 0]
+            return o if batched else o[0]
+        fn = jax.jit(mha_kernel)
+
+    def run(env):
+        return {out_buf: fn(env[q_buf], env[kt_buf], env[v_buf])}
+
+    return run
+
+
+_REGISTERED = False
+
+
+def register() -> None:
+    """Register the flashattn kernel pattern (idempotent)."""
+    global _REGISTERED
+    if _REGISTERED:
+        return
+    _REGISTERED = True
+    register_kernel_pattern(KernelPattern(
+        name="flashattn.mha",
+        pattern=("matmul", "*ewise", "softmax", "matmul"),
+        factory=factory, feasible=_feasible, tiles=tiles,
+        description="full softmax(c·q@kᵀ)@v chain via online-softmax "
+                    "streaming (supersedes the softmaxmm tail)"))

@@ -1,5 +1,6 @@
 from .ops import rglru
+from .patterns import register
 from .ref import rglru_ref
 from .rglru import rglru_scan
 
-__all__ = ["rglru", "rglru_ref", "rglru_scan"]
+__all__ = ["register", "rglru", "rglru_ref", "rglru_scan"]

@@ -1,5 +1,6 @@
 from .ops import ssd_states
+from .patterns import register
 from .ref import ssd_chunk_scan_ref
 from .ssd import ssd_chunk_scan
 
-__all__ = ["ssd_chunk_scan", "ssd_chunk_scan_ref", "ssd_states"]
+__all__ = ["register", "ssd_chunk_scan", "ssd_chunk_scan_ref", "ssd_states"]

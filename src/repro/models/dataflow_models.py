@@ -2,13 +2,14 @@
 
 Every workload the paper evaluates is defined here — since the
 traced-function frontend (:mod:`repro.core.frontend`) landed, the Table II
-kernels plus the flagship ResNet-18 and GPT-2 block are **plain Python
-functions** over symbolic :class:`~repro.core.frontend.ShapedBuffer`
-arguments, traced into graphs by :func:`~repro.core.frontend.trace`.  The
-remaining DNNs (VGG/MobileNet/ZFNet/YOLO) and the architecture-config
+kernels and **every** DNN (ResNet-18, VGG-16, MobileNet, ZFNet,
+YOLO-tiny, the GPT-2 block) plus the attention/recurrence routing
+workloads are **plain Python functions** over symbolic
+:class:`~repro.core.frontend.ShapedBuffer` arguments, traced into graphs
+by :func:`~repro.core.frontend.trace`.  Only the architecture-config
 block graphs still use the low-level :class:`~repro.core.frontend.GB`
-builder directly — the documented escape hatch for graphs that want manual
-control.
+builder directly — the documented escape hatch for graphs that want
+manual control.
 
 Both roads emit identical structure: a traced builder and its hand-built
 twin produce the same ``structural_hash`` — the same compile-cache key —
@@ -218,70 +219,71 @@ def resnet18(H: int = 32) -> DataflowGraph:
     return trace(resnet18_fn, (1, 3, H, H), name=f"resnet18_{H}")
 
 
-def vgg16(H: int = 32) -> DataflowGraph:
-    b = GB(f"vgg16_{H}")
-    x = b.input("x", (1, 3, H, H))
+def vgg16_fn(x):
     h = x
     for c, reps in [(64, 2), (128, 2), (256, 3), (512, 3), (512, 3)]:
         for _ in range(reps):
-            h = b.conv(h, c, 3)
-        h = b.maxpool(h, 2)
-    h = b.flatten(h)
-    h = b.fc(h, 512, relu=True)
-    h = b.fc(h, 512, relu=True)
-    o = b.fc(h, 1000)
-    b.mark_output(o)
-    return b.g
+            h = F.conv(h, c, 3)
+        h = F.maxpool(h, 2)
+    h = F.flatten(h)
+    h = F.fc(h, 512, relu=True)
+    h = F.fc(h, 512, relu=True)
+    return F.fc(h, 1000)
 
 
-def mobilenet(H: int = 32) -> DataflowGraph:
-    b = GB(f"mobilenet_{H}")
-    x = b.input("x", (1, 3, H, H))
-    h = b.conv(x, 32, 3, stride=2 if H >= 224 else 1)
+def vgg16(H: int = 32) -> DataflowGraph:
+    return trace(vgg16_fn, (1, 3, H, H), name=f"vgg16_{H}")
+
+
+def mobilenet_fn(x):
+    H = x.shape[2]
+    h = F.conv(x, 32, 3, stride=2 if H >= 224 else 1)
     plan = [(64, 1), (128, 2), (128, 1), (256, 2), (256, 1), (512, 2)] + \
            [(512, 1)] * 5 + [(1024, 2), (1024, 1)]
     for c, s in plan:
-        h = b.conv(h, 0, 3, stride=s, depthwise=True)
-        h = b.conv(h, c, 1, pad=0)
-    h = b.global_avgpool(h)
-    o = b.fc(h, 1000)
-    b.mark_output(o)
-    return b.g
+        h = F.conv(h, 0, 3, stride=s, depthwise=True)
+        h = F.conv(h, c, 1, pad=0)
+    h = F.global_avgpool(h)
+    return F.fc(h, 1000)
+
+
+def mobilenet(H: int = 32) -> DataflowGraph:
+    return trace(mobilenet_fn, (1, 3, H, H), name=f"mobilenet_{H}")
+
+
+def zfnet_fn(x):
+    h = F.conv(x, 96, 7, stride=2, pad=3)
+    h = F.maxpool(h, 2)
+    h = F.conv(h, 256, 5, stride=2, pad=2)
+    h = F.maxpool(h, 2)
+    h = F.conv(h, 384, 3)
+    h = F.conv(h, 384, 3)
+    h = F.conv(h, 256, 3)
+    h = F.maxpool(h, 2)
+    h = F.flatten(h)
+    h = F.fc(h, 4096, relu=True)
+    h = F.fc(h, 4096, relu=True)
+    return F.fc(h, 1000)
 
 
 def zfnet(H: int = 224) -> DataflowGraph:
-    b = GB(f"zfnet_{H}")
-    x = b.input("x", (1, 3, H, H))
-    h = b.conv(x, 96, 7, stride=2, pad=3)
-    h = b.maxpool(h, 2)
-    h = b.conv(h, 256, 5, stride=2, pad=2)
-    h = b.maxpool(h, 2)
-    h = b.conv(h, 384, 3)
-    h = b.conv(h, 384, 3)
-    h = b.conv(h, 256, 3)
-    h = b.maxpool(h, 2)
-    h = b.flatten(h)
-    h = b.fc(h, 4096, relu=True)
-    h = b.fc(h, 4096, relu=True)
-    o = b.fc(h, 1000)
-    b.mark_output(o)
-    return b.g
+    return trace(zfnet_fn, (1, 3, H, H), name=f"zfnet_{H}")
+
+
+def yolo_tiny_fn(x):
+    h = x
+    c = 16
+    for _ in range(6):
+        h = F.conv(h, c, 3)
+        h = F.maxpool(h, 2)
+        c = min(c * 2, 512)
+    h = F.conv(h, 512, 3)
+    h = F.conv(h, 256, 1, pad=0)
+    return F.conv(h, 255, 1, pad=0, relu=False)
 
 
 def yolo_tiny(H: int = 384, W: int = 1280) -> DataflowGraph:
-    b = GB("yolo")
-    x = b.input("x", (1, 3, H, W))
-    h = x
-    c = 16
-    for i in range(6):
-        h = b.conv(h, c, 3)
-        h = b.maxpool(h, 2)
-        c = min(c * 2, 512)
-    h = b.conv(h, 512, 3)
-    h = b.conv(h, 256, 1, pad=0)
-    o = b.conv(h, 255, 1, pad=0, relu=False)
-    b.mark_output(o)
-    return b.g
+    return trace(yolo_tiny_fn, (1, 3, H, W), name="yolo")
 
 
 def gpt2_block_fn(x):
@@ -307,6 +309,37 @@ def gpt2_block_fn(x):
 
 def gpt2_block(S: int = 128, D: int = 1024) -> DataflowGraph:
     return trace(gpt2_block_fn, (S, D), name="gpt2_block")
+
+
+# --------------------------------------------------------------------------
+# Attention / recurrence families (ROADMAP item 4).  The workload bodies
+# live next to their reference models (models/transformer.py, rglru.py,
+# ssm.py); the builders below trace them at routing-bench sizes.  The
+# model modules import jax at top level, hence the lazy imports — building
+# these graphs still does not require jax.
+# --------------------------------------------------------------------------
+
+
+def mha_batched(BH: int = 4, S: int = 64, hd: int = 32) -> DataflowGraph:
+    """One attention head over (BH, S, hd) operands — the batched
+    matmul->scale->softmax->matmul chain the flashattn pattern routes."""
+    from .transformer import mha_batched_fn
+    sh = (BH, S, hd)
+    return trace(mha_batched_fn, sh, sh, sh, name="mha_batched")
+
+
+def rglru_block(B: int = 2, S: int = 128, D: int = 64) -> DataflowGraph:
+    """Gated linear recurrence + residual (RG-LRU core)."""
+    from .rglru import rglru_block_fn
+    sh = (B, S, D)
+    return trace(rglru_block_fn, sh, sh, sh, name="rglru_block")
+
+
+def ssd_block(nc: int = 8, BH: int = 8, P: int = 32, N: int = 32) -> DataflowGraph:
+    """SSD inter-chunk state recurrence + residual combine."""
+    from .ssm import ssd_block_fn
+    return trace(ssd_block_fn, (nc, BH, P, N), (nc, BH, 1, 1),
+                 name="ssd_block")
 
 
 # --------------------------------------------------------------------------
@@ -415,6 +448,13 @@ KERNEL_FNS = {
 DNN_BENCHES = {
     "resnet18": resnet18, "vgg16": vgg16, "mobilenet": mobilenet,
     "zfnet": zfnet, "yolo": yolo_tiny, "gpt2_block": gpt2_block,
+}
+
+# Attention / recurrence routing workloads (ROADMAP item 4): traced
+# builders whose chains the flashattn / rglru / ssd kernel patterns claim.
+RECURRENCE_BENCHES = {
+    "mha_batched": mha_batched, "rglru_block": rglru_block,
+    "ssd_block": ssd_block,
 }
 
 
@@ -618,6 +658,108 @@ def gpt2_block_handbuilt(S: int = 128, D: int = 1024) -> DataflowGraph:
     return b.g
 
 
+def vgg16_handbuilt(H: int = 32) -> DataflowGraph:
+    b = GB(f"vgg16_{H}")
+    x = b.input("x", (1, 3, H, H))
+    h = x
+    for c, reps in [(64, 2), (128, 2), (256, 3), (512, 3), (512, 3)]:
+        for _ in range(reps):
+            h = b.conv(h, c, 3)
+        h = b.maxpool(h, 2)
+    h = b.flatten(h)
+    h = b.fc(h, 512, relu=True)
+    h = b.fc(h, 512, relu=True)
+    o = b.fc(h, 1000)
+    b.mark_output(o)
+    return b.g
+
+
+def mobilenet_handbuilt(H: int = 32) -> DataflowGraph:
+    b = GB(f"mobilenet_{H}")
+    x = b.input("x", (1, 3, H, H))
+    h = b.conv(x, 32, 3, stride=2 if H >= 224 else 1)
+    plan = [(64, 1), (128, 2), (128, 1), (256, 2), (256, 1), (512, 2)] + \
+           [(512, 1)] * 5 + [(1024, 2), (1024, 1)]
+    for c, s in plan:
+        h = b.conv(h, 0, 3, stride=s, depthwise=True)
+        h = b.conv(h, c, 1, pad=0)
+    h = b.global_avgpool(h)
+    o = b.fc(h, 1000)
+    b.mark_output(o)
+    return b.g
+
+
+def zfnet_handbuilt(H: int = 224) -> DataflowGraph:
+    b = GB(f"zfnet_{H}")
+    x = b.input("x", (1, 3, H, H))
+    h = b.conv(x, 96, 7, stride=2, pad=3)
+    h = b.maxpool(h, 2)
+    h = b.conv(h, 256, 5, stride=2, pad=2)
+    h = b.maxpool(h, 2)
+    h = b.conv(h, 384, 3)
+    h = b.conv(h, 384, 3)
+    h = b.conv(h, 256, 3)
+    h = b.maxpool(h, 2)
+    h = b.flatten(h)
+    h = b.fc(h, 4096, relu=True)
+    h = b.fc(h, 4096, relu=True)
+    o = b.fc(h, 1000)
+    b.mark_output(o)
+    return b.g
+
+
+def yolo_tiny_handbuilt(H: int = 384, W: int = 1280) -> DataflowGraph:
+    b = GB("yolo")
+    x = b.input("x", (1, 3, H, W))
+    h = x
+    c = 16
+    for _ in range(6):
+        h = b.conv(h, c, 3)
+        h = b.maxpool(h, 2)
+        c = min(c * 2, 512)
+    h = b.conv(h, 512, 3)
+    h = b.conv(h, 256, 1, pad=0)
+    o = b.conv(h, 255, 1, pad=0, relu=False)
+    b.mark_output(o)
+    return b.g
+
+
+def mha_batched_handbuilt(BH: int = 4, S: int = 64, hd: int = 32) -> DataflowGraph:
+    b = GB("mha_batched")
+    q = b.input("q", (BH, S, hd))
+    k = b.input("k", (BH, S, hd))
+    v = b.input("v", (BH, S, hd))
+    kt = b.transpose(k)
+    s = b.scale(b.matmul(q, kt), 1.0 / math.sqrt(hd))
+    p = b.softmax(s)
+    o = b.matmul(p, v)
+    b.mark_output(o)
+    return b.g
+
+
+def rglru_block_handbuilt(B: int = 2, S: int = 128, D: int = 64) -> DataflowGraph:
+    b = GB("rglru_block")
+    a = b.input("a", (B, S, D))
+    gate = b.input("gate", (B, S, D))
+    x = b.input("x", (B, S, D))
+    bb = b.mul(gate, x)
+    h = b.rglru_scan(a, bb)
+    o = b.add(h, x)
+    b.mark_output(o)
+    return b.g
+
+
+def ssd_block_handbuilt(nc: int = 8, BH: int = 8, P: int = 32,
+                        N: int = 32) -> DataflowGraph:
+    b = GB("ssd_block")
+    states = b.input("states", (nc, BH, P, N))
+    decay = b.input("decay", (nc, BH, 1, 1))
+    prev = b.ssd_scan(states, decay)
+    o = b.add(prev, states)
+    b.mark_output(o)
+    return b.g
+
+
 # name -> (traced builder, hand-built twin); both zero-arg-callable at the
 # paper's default sizes.  tests/test_frontend.py asserts hash parity.
 HANDBUILT_BENCHES = {
@@ -635,4 +777,11 @@ HANDBUILT_BENCHES = {
     "multi_head_attention": (multi_head_attention, multi_head_attention_handbuilt),
     "resnet18": (resnet18, resnet18_handbuilt),
     "gpt2_block": (gpt2_block, gpt2_block_handbuilt),
+    "vgg16": (vgg16, vgg16_handbuilt),
+    "mobilenet": (mobilenet, mobilenet_handbuilt),
+    "zfnet": (zfnet, zfnet_handbuilt),
+    "yolo": (yolo_tiny, yolo_tiny_handbuilt),
+    "mha_batched": (mha_batched, mha_batched_handbuilt),
+    "rglru_block": (rglru_block, rglru_block_handbuilt),
+    "ssd_block": (ssd_block, ssd_block_handbuilt),
 }

@@ -104,3 +104,19 @@ def rglru_block_decode(p: Params, xin: jax.Array, cfg: ArchConfig, *,
     hnew = a[:, 0] * h_state + b[:, 0]
     y = (hnew.astype(xin.dtype) * gate[:, 0])[:, None]
     return xin + linear(p["out"], y), hnew, conv_buf
+
+
+# --------------------------------------------------------------------------
+# CODO traced form (ROADMAP item 4): the gated recurrence core as a
+# dataflow-frontend function, so the ``rglru_scan`` op reaches the
+# chunked-scan kernel through routing.
+# --------------------------------------------------------------------------
+
+
+def rglru_block_fn(a, gate, x):
+    """Gated linear-recurrence block over ``(B, S, D)`` operands:
+    ``h = scan(a, gate*x)`` with a residual skip."""
+    from ..core import frontend as F
+    b = F.mul(gate, x)
+    h = F.rglru_scan(a, b)
+    return F.add(h, x)

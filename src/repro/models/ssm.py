@@ -182,3 +182,19 @@ def ssm_block_decode(p: Params, xin: jax.Array, cfg: ArchConfig, *,
     y = y + x.astype(jnp.float32) * p["D"][None, :, None]
     y = y.reshape(Bsz, 1, d_in).astype(xin.dtype) * jax.nn.silu(z)
     return xin + linear(p["out_proj"], y), state, conv_buf
+
+
+# --------------------------------------------------------------------------
+# CODO traced form (ROADMAP item 4): the SSD inter-chunk state recurrence
+# as a dataflow-frontend function, so the ``ssd_scan`` op reaches the
+# chunked-scan kernel through routing.
+# --------------------------------------------------------------------------
+
+
+def ssd_block_fn(states, decay):
+    """Inter-chunk SSD recurrence over per-chunk end ``states
+    (nc, BH, P, N)`` and scalar ``decay (nc, BH, 1, 1)``; returns the
+    carried-in states combined with the locals (residual form)."""
+    from ..core import frontend as F
+    prev = F.ssd_scan(states, decay)
+    return F.add(prev, states)

@@ -452,3 +452,24 @@ def decode_step(params: Params, tokens: jax.Array, cache: Params,
     x = apply_norm(params["final_norm"], x, cfg.norm)
     logits = unembed(params["embed"], params.get("lm_head"), x[:, 0], cfg)
     return shard_hint(logits, BATCH, "model"), new_cache
+
+
+# --------------------------------------------------------------------------
+# CODO traced form (ROADMAP item 4): one attention head over batched
+# (BH, S, hd) operands, expressed in the dataflow-frontend vocabulary so
+# ``codo.compile`` sees the matmul -> scale -> softmax -> matmul chain the
+# flashattn kernel pattern routes.
+# --------------------------------------------------------------------------
+
+
+def mha_batched_fn(q, k, v):
+    """Batched single-head attention ``softmax(q kᵀ / √hd) v``; operands
+    are ``(BH, S, hd)`` (heads folded into the leading batch dim)."""
+    import math
+
+    from ..core import frontend as F
+    hd = q.shape[-1]
+    kt = F.transpose(k)                       # (BH, hd, S)
+    s = F.scale(F.matmul(q, kt), 1.0 / math.sqrt(hd))
+    p = F.softmax(s)
+    return F.matmul(p, v)

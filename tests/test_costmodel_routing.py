@@ -111,7 +111,10 @@ def test_predictor_ranks_chains_like_recorded_bench():
 def test_softmaxmm_tail_stays_generic_on_cpu(monkeypatch):
     """The satellite bugfix, pinned: the bench measures the softmaxmm
     kernel at ~0.97x on CPU, so the calibrated gate must route the
-    attention tail to generic XLA there — at any size."""
+    attention tail to generic XLA there — at any size.  In gpt2_block the
+    full-chain ``flashattn.mha`` now supersedes this tail (see
+    test_flashattn_supersedes_softmaxmm_in_gpt2), so the bare tail is
+    exercised on a graph whose chain *starts* at the softmax."""
     monkeypatch.delenv("CODO_FORCE_PALLAS", raising=False)
     monkeypatch.delenv("CODO_DISABLE_PALLAS", raising=False)
     monkeypatch.delenv("CODO_ROUTING_CALIBRATION", raising=False)
@@ -121,7 +124,12 @@ def test_softmaxmm_tail_stays_generic_on_cpu(monkeypatch):
     # regardless of chain size.
     p = routing_params("cpu")
     assert p.eff("streamfuse.softmaxmm") * (1.0 + p.slack) < 1.0
-    c = _compile(dm.gpt2_block(S=16, D=64))
+    from repro.core.frontend import GB
+    b = GB("sm_tail")
+    s = b.input("s", (64, 64))
+    v = b.input("v", (64, 64))
+    b.mark_output(b.matmul(b.softmax(s), v))
+    c = _compile(b.g)
     low = lower(c, jit=False)
     assert all(r.kernel != "streamfuse.softmaxmm"
                for g in low.groups for r in g.routes)

@@ -18,6 +18,7 @@ def _tol(dtype):
         else dict(rtol=2e-5, atol=2e-5)
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("B,Hq,Hkv,S,hd", [
     (1, 2, 2, 128, 64), (2, 4, 2, 256, 64), (1, 8, 1, 256, 128),
     (2, 2, 2, 384, 32),
@@ -34,6 +35,7 @@ def test_flashattn_sweep(B, Hq, Hkv, S, hd, causal, window, dtype):
                                np.asarray(want, np.float32), **_tol(dtype))
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("M,N,K", [(128, 128, 128), (256, 128, 384),
                                    (128, 384, 256), (512, 128, 128)])
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
@@ -85,6 +87,14 @@ def test_ssd_sweep(nc, BH, P, N):
                                rtol=1e-5, atol=1e-5)
 
 
+# --------------------------------------------------------------------------
+# Lowering-path coverage: the sweeps above call kernels directly, so a
+# factory regression (wrong wiring, silent decline) would never surface
+# there.  These route tiny graphs through lower() and check the kernel
+# actually ran — and matched the generic path.
+# --------------------------------------------------------------------------
+
+
 def test_streamfuse_registered_in_lowering(monkeypatch):
     """The motivating chain lowers through the Pallas kernel."""
     import jax
@@ -110,3 +120,66 @@ def test_streamfuse_registered_in_lowering(monkeypatch):
     for k in want:
         np.testing.assert_allclose(np.asarray(got[k]), np.asarray(want[k]),
                                    rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("builder,kname", [
+    ("mha_batched", "flashattn.mha"),
+    ("rglru_block", "rglru.scan"),
+    ("ssd_block", "ssd.scan"),
+])
+def test_recurrence_factories_exercised_through_lowering(monkeypatch,
+                                                         builder, kname):
+    """Each recurrence family's factory builds a runnable step through
+    lower() whose output matches the generic execution."""
+    from repro.core import codo_opt, lower
+    from repro.kernels import register_all
+    from repro.models import dataflow_models as dm
+
+    register_all()
+    monkeypatch.setenv("CODO_FORCE_PALLAS", "1")   # tiny shapes: skip gate
+    g = getattr(dm, builder)()
+    c = codo_opt(g)
+    low = lower(c, jit=False)
+    assert any(r.kernel == kname for grp in low.groups for r in grp.routes)
+    env = dm.random_inputs(g)
+    got = low(env)
+    want = g.execute(env)
+    for k in want:
+        np.testing.assert_allclose(np.asarray(got[k]), np.asarray(want[k]),
+                                   rtol=1e-4, atol=1e-4)
+
+
+def test_factory_decline_falls_back_to_generic(monkeypatch):
+    """A factory returning None (backend decline) must not vanish: the
+    chain lands in rejected[] as "declined" and the group still executes
+    correctly on the generic path."""
+    from dataclasses import replace
+
+    from repro.core import codo_opt, lower
+    from repro.core.routing import (register_kernel_pattern,
+                                    registered_patterns)
+    from repro.kernels import register_all
+    from repro.models import dataflow_models as dm
+
+    register_all()
+    monkeypatch.setenv("CODO_FORCE_PALLAS", "1")
+    orig = next(p for p in registered_patterns() if p.name == "rglru.scan")
+    register_kernel_pattern(replace(orig, factory=lambda *a, **k: None))
+    try:
+        g = dm.rglru_block(B=1, S=16, D=8)
+        c = codo_opt(g)
+        low = lower(c, jit=False)
+        assert all(r.kernel != "rglru.scan"
+                   for grp in low.groups for r in grp.routes)
+        rej = [r for grp in low.groups for r in grp.rejected
+               if r.kernel == "rglru.scan"]
+        assert rej and all(r.decision == "declined" for r in rej)
+        env = dm.random_inputs(g)
+        got = low(env)
+        want = g.execute(env)
+        for k in want:
+            np.testing.assert_allclose(np.asarray(got[k]),
+                                       np.asarray(want[k]),
+                                       rtol=1e-5, atol=1e-5)
+    finally:
+        register_kernel_pattern(orig)

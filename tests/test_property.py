@@ -19,6 +19,8 @@ from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import (codo_opt, coarse_violations, fine_violations, lower,
                         verify_violation_free)
+from repro.core import frontend as F
+from repro.core.frontend import TraceError
 from repro.core.reuse import parallel_safety
 from repro.models.dataflow_models import GB
 
@@ -91,3 +93,117 @@ def test_fifo_fraction_bounds(n_layers, seed):
     assert 0.0 <= c.fifo_fraction <= 1.0
     # pure fc/relu chains are fully streamable after rewriting
     assert c.fifo_fraction == 1.0
+
+
+# --------------------------------------------------------------------------
+# ISSUE-7 frontend vocabulary: concat/split/slice, batched matmul, scans
+# --------------------------------------------------------------------------
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.lists(st.integers(1, 4), min_size=2, max_size=4),
+       st.integers(0, 1), st.integers(1, 3))
+def test_concat_split_roundtrip(sizes, axis, width):
+    """split(concat(xs)) recovers every part exactly, for any partition
+    on either axis of a rank-2 tensor."""
+    rng = np.random.default_rng(0)
+
+    def shp(s):
+        return (s, width) if axis == 0 else (width, s)
+
+    xs = [jnp.asarray(rng.standard_normal(shp(s)), jnp.float32)
+          for s in sizes]
+    cat = F.concat(xs, axis=axis)
+    assert cat.shape[axis] == sum(sizes)
+    parts = F.split(cat, sizes, axis=axis)
+    assert len(parts) == len(xs)
+    for p, x in zip(parts, xs):
+        np.testing.assert_array_equal(np.asarray(p), np.asarray(x))
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(1, 8), st.integers(1, 8), st.data())
+def test_slice_window_bounds(n0, n1, data):
+    """Any in-range window equals numpy basic slicing; any out-of-range
+    window is a TraceError at trace time, never a silent clamp."""
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.standard_normal((n0, n1)), jnp.float32)
+    s0 = data.draw(st.integers(0, n0 - 1), label="start0")
+    z0 = data.draw(st.integers(1, n0 - s0), label="size0")
+    s1 = data.draw(st.integers(0, n1 - 1), label="start1")
+    z1 = data.draw(st.integers(1, n1 - s1), label="size1")
+    got = F.slice_(x, (s0, s1), (z0, z1))
+    np.testing.assert_array_equal(
+        np.asarray(got), np.asarray(x)[s0:s0 + z0, s1:s1 + z1])
+
+    def overrun(z):
+        return F.slice_(z, (s0, s1), (n0 - s0 + 1, z1))
+
+    with pytest.raises(TraceError):
+        F.trace(overrun, (n0, n1), name="overrun_slice")
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(1, 3), st.integers(1, 6), st.integers(1, 6),
+       st.integers(1, 6))
+def test_batched_matmul_shape_inference(B, M, K, N):
+    """Traced (B,M,K)@(B,K,N) infers (B,M,N) and executes to jnp.matmul;
+    a mismatched contraction dim is rejected at trace time."""
+    def f(a, b):
+        return F.matmul(a, b)
+
+    g = F.trace(f, (B, M, K), (B, K, N), name="bmm_prop")
+    (out,) = g.outputs()
+    assert tuple(out.shape) == (B, M, N)
+    rng = np.random.default_rng(2)
+    env = {"a": jnp.asarray(rng.standard_normal((B, M, K)), jnp.float32),
+           "b": jnp.asarray(rng.standard_normal((B, K, N)), jnp.float32)}
+    want = jnp.matmul(env["a"], env["b"])
+    got = g.execute(dict(env))[out.name]
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+    with pytest.raises(TraceError):
+        F.trace(f, (B, M, K), (B, K + 1, N), name="bmm_bad")
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(1, 3), st.integers(1, 24), st.integers(1, 8))
+def test_rglru_scan_matches_sequential_recurrence(B, S, D):
+    """The associative-scan reference and the frontend op both equal the
+    sequential recurrence h_t = a_t * h_{t-1} + b_t (h_0 = 0) — the
+    associativity the chunked kernel relies on."""
+    from repro.kernels.rglru import rglru_ref
+    rng = np.random.default_rng(3)
+    a = jnp.asarray(rng.uniform(0.5, 0.999, (B, S, D)), jnp.float32)
+    b = jnp.asarray(rng.standard_normal((B, S, D)) * 0.1, jnp.float32)
+    want = np.zeros((B, S, D), np.float32)
+    h = np.zeros((B, D), np.float32)
+    for t in range(S):
+        h = np.asarray(a)[:, t] * h + np.asarray(b)[:, t]
+        want[:, t] = h
+    np.testing.assert_allclose(np.asarray(rglru_ref(a, b)), want,
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(F.rglru_scan(a, b)), want,
+                               rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(1, 12), st.integers(1, 4), st.integers(1, 6),
+       st.integers(1, 6))
+def test_ssd_scan_matches_sequential_recurrence(nc, BH, P, N):
+    """The chunked-state reference and the frontend op both emit the
+    carried-in state h_c (h_0 = 0; h_{c+1} = h_c * dec_c + st_c)."""
+    from repro.kernels.ssd import ssd_chunk_scan_ref
+    rng = np.random.default_rng(4)
+    states = jnp.asarray(rng.standard_normal((nc, BH, P, N)) * 0.1,
+                         jnp.float32)
+    decay = jnp.asarray(rng.uniform(0.5, 0.99, (nc, BH, 1, 1)), jnp.float32)
+    want = np.zeros((nc, BH, P, N), np.float32)
+    h = np.zeros((BH, P, N), np.float32)
+    for c in range(nc):
+        want[c] = h
+        h = h * np.asarray(decay)[c] + np.asarray(states)[c]
+    np.testing.assert_allclose(np.asarray(ssd_chunk_scan_ref(states, decay)),
+                               want, rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(F.ssd_scan(states, decay)),
+                               want, rtol=1e-5, atol=1e-5)

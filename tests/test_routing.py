@@ -159,8 +159,11 @@ def test_gpt2_block_routes_and_verifies(monkeypatch):
     routed = [g for g in low.groups if g.routes]
     assert routed, "gpt2_block must route at least one fusion group"
     kernels = {r.kernel for g in routed for r in g.routes}
-    assert "streamfuse.mmchain" in kernels
-    assert "streamfuse.softmaxmm" in kernels
+    assert "streamfuse.mmchain" in kernels           # the FFN chain
+    # The full attention chain goes to flashattn — which supersedes the
+    # softmaxmm tail (matmul -> scale -> softmax -> matmul claimed whole).
+    assert "flashattn.mha" in kernels
+    assert "streamfuse.softmaxmm" not in kernels
     env = dm.random_inputs(c.graph)
     verify_routing(c, env, rtol=3e-4, atol=3e-4)
     # the decision rides on the diagnostics, with the gate's estimates
@@ -194,7 +197,7 @@ def test_routed_interior_buffers_never_materialize():
 def test_true_pallas_interpret_path(monkeypatch):
     """CODO_PALLAS_INTERPRET=1 runs the real Pallas kernel bodies (in
     interpret mode on CPU) through the routed lowering — the mmchain and
-    softmaxmm kernels via gpt2, the conv kernel via the Fig. 2 chain."""
+    flashattn kernels via gpt2, the conv kernel via the Fig. 2 chain."""
     monkeypatch.setenv("CODO_PALLAS_INTERPRET", "1")
     monkeypatch.setenv("CODO_FORCE_PALLAS", "1")   # tiny shapes: skip gate
     c = _gpt2()
