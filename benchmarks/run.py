@@ -18,7 +18,8 @@ from pathlib import Path
 
 sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
 
-from benchmarks import roofline, routing_bench, tables  # noqa: E402
+from benchmarks import (roofline, routing_bench, serving_bench,  # noqa: E402
+                        tables)
 
 OUT = Path(__file__).resolve().parents[1] / "results" / "bench"
 
@@ -35,6 +36,9 @@ SUITES = {
     # per-group pallas-vs-xla latency pairs; also writes
     # results/bench/routing_groups.json (uploaded by the nightly CI job)
     "routing": routing_bench.routing_groups,
+    # batched-vs-sequential serving throughput + p50/p99; also writes
+    # results/bench/serving.json (uploaded by the nightly CI job)
+    "serving": serving_bench.serving_rows,
 }
 
 

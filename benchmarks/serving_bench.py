@@ -1,0 +1,195 @@
+"""Serving-runtime benchmark: batched vs sequential throughput + latency.
+
+Drives the :class:`repro.serving.ServingRuntime` against the ``gpt2_block``
+workload and measures the dynamic-batching win directly: N requests served
+one at a time (the pre-runtime ``launch/serve.py`` regime) vs the same N
+coalesced into leading-batch-dim dispatches of ``--batch`` (default 8).
+Reports throughput (req/s) and p50/p99 request latency for both regimes —
+under queued load for the batched path, so the tail includes queueing —
+and writes the machine-readable document the nightly CI job uploads::
+
+    results/bench/serving.json
+
+CLI (the CI ``serving-smoke`` job runs ``--quick --min-speedup 2``)::
+
+    PYTHONPATH=src python -m benchmarks.serving_bench --quick
+    PYTHONPATH=src python -m benchmarks.serving_bench          # full load
+
+``--quick`` shrinks the block (S=16, D=64) and the request count for PR
+latency; the full run uses the paper-scale block at more requests.
+``--min-speedup X`` exits 1 if batched throughput is below X× sequential
+— the acceptance bar is 2× at batch 8 on CPU.
+
+The suite is also registered in ``benchmarks.run`` as ``serving`` (quick
+mode), so the nightly ``--json`` collection carries its rows.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import statistics
+import sys
+import time
+from pathlib import Path
+
+OUT = Path(__file__).resolve().parents[1] / "results" / "bench"
+
+
+def _pctl(values: list[float], q: float) -> float:
+    if not values:
+        return 0.0
+    ordered = sorted(values)
+    idx = min(len(ordered) - 1, max(0, round(q * (len(ordered) - 1))))
+    return ordered[idx]
+
+
+def _lat_summary(lat_s: list[float], total_s: float) -> dict:
+    return {
+        "requests": len(lat_s),
+        "total_s": round(total_s, 6),
+        "throughput_rps": round(len(lat_s) / max(total_s, 1e-9), 3),
+        "p50_ms": round(_pctl(lat_s, 0.50) * 1e3, 4),
+        "p99_ms": round(_pctl(lat_s, 0.99) * 1e3, 4),
+        "mean_ms": round(statistics.fmean(lat_s) * 1e3, 4)
+        if lat_s else 0.0,
+    }
+
+
+def run_bench(*, quick: bool = False, batch: int = 8,
+              requests: int | None = None, seed: int = 0) -> dict:
+    """One measured comparison; returns the ``serving.json`` document."""
+    import jax
+    import numpy as np
+
+    from repro import api as codo
+    from repro.core.cache import CompileCache
+    from repro.kernels import register_all
+    from repro.models import dataflow_models as dm
+    from repro.serving import ServeConfig, ServingRuntime
+
+    register_all()
+    S, D = (16, 64) if quick else (64, 256)
+    if requests is None:
+        requests = 4 * batch if quick else 16 * batch
+    requests = max(batch, (requests // batch) * batch)   # whole windows
+
+    cache = CompileCache()
+    graph = dm.gpt2_block(S, D)
+    program = codo.compile(graph, cache=cache)
+    rng = np.random.default_rng(seed)
+    envs = [{n: rng.standard_normal(
+        tuple(graph.buffers[n].shape)).astype("float32")
+        for n in program.input_names} for _ in range(requests)]
+
+    # -- sequential per-request baseline (the old launch/serve.py regime) --
+    low = program.lower(jit=True)
+    jax.block_until_ready(low(program.make_env(**envs[0])))   # warm
+    seq_lat: list[float] = []
+    t0 = time.perf_counter()
+    for env in envs:
+        s = time.perf_counter()
+        jax.block_until_ready(low(program.make_env(**env)))
+        seq_lat.append(time.perf_counter() - s)
+    seq_total = time.perf_counter() - t0
+
+    # -- batched through the runtime (queued load: p99 includes queueing) --
+    cfg = ServeConfig(batch_window_ms=5.0, max_batch=batch,
+                      max_queue=max(1024, 2 * requests))
+    with ServingRuntime(cfg, cache=cache) as rt:
+        rt.add_model("bench", program, warm=False)
+        # Warm one window untimed: compiles the leading-batch-dim design
+        # (a one-time cost shared by every later window via the cache).
+        warm = [rt.submit("bench", **envs[i % len(envs)])
+                for i in range(batch)]
+        for f in warm:
+            f.result(timeout=600)
+        bat_lat = []
+        t0 = time.perf_counter()
+        submit_at, futs = [], []
+        for env in envs:
+            submit_at.append(time.perf_counter())
+            futs.append(rt.submit("bench", **env))
+        for at, f in zip(submit_at, futs):
+            f.result(timeout=600)
+            bat_lat.append(time.perf_counter() - at)
+        bat_total = time.perf_counter() - t0
+        stats = rt.stats.snapshot()
+
+    seq = _lat_summary(seq_lat, seq_total)
+    bat = _lat_summary(bat_lat, bat_total)
+    return {
+        "workload": f"gpt2_block(S={S},D={D})",
+        "backend": jax.default_backend(),
+        "quick": quick,
+        "batch": batch,
+        "requests": requests,
+        "sequential": seq,
+        "batched": bat,
+        "speedup": round(bat["throughput_rps"]
+                         / max(seq["throughput_rps"], 1e-9), 3),
+        "runtime_stats": stats,
+    }
+
+
+def serving_rows():
+    """The ``benchmarks.run`` suite entry: quick-mode rows + serving.json."""
+    from benchmarks.tables import Row
+    doc = run_bench(quick=True)
+    OUT.mkdir(parents=True, exist_ok=True)
+    (OUT / "serving.json").write_text(
+        json.dumps(doc, indent=2, sort_keys=True) + "\n")
+    return [
+        Row("serving/sequential_rps", doc["sequential"]["throughput_rps"],
+            f"p50_ms={doc['sequential']['p50_ms']};"
+            f"p99_ms={doc['sequential']['p99_ms']}"),
+        Row("serving/batched_rps", doc["batched"]["throughput_rps"],
+            f"p50_ms={doc['batched']['p50_ms']};"
+            f"p99_ms={doc['batched']['p99_ms']};batch={doc['batch']}"),
+        Row("serving/speedup", doc["speedup"],
+            f"{doc['workload']};backend={doc['backend']}"),
+    ]
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="Batched-vs-sequential serving throughput/latency.")
+    ap.add_argument("--quick", action="store_true",
+                    help="small block + fewer requests (PR/CI latency)")
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--requests", type=int, default=0,
+                    help="total requests (0 = scaled from --batch)")
+    ap.add_argument("--json", default=str(OUT / "serving.json"),
+                    metavar="PATH", help="output document path")
+    ap.add_argument("--min-speedup", type=float, default=0.0,
+                    help="exit 1 if batched/sequential throughput is "
+                         "below this (CI gate; 0 disables)")
+    args = ap.parse_args(argv)
+
+    doc = run_bench(quick=args.quick, batch=args.batch,
+                    requests=args.requests or None)
+    path = Path(args.json)
+    path.parent.mkdir(parents=True, exist_ok=True)
+    path.write_text(json.dumps(doc, indent=2, sort_keys=True) + "\n")
+
+    seq, bat = doc["sequential"], doc["batched"]
+    print(f"serving {doc['workload']} [{doc['backend']}] "
+          f"batch={doc['batch']} requests={doc['requests']}")
+    print(f"  sequential: {seq['throughput_rps']:.1f} req/s  "
+          f"p50 {seq['p50_ms']:.2f} ms  p99 {seq['p99_ms']:.2f} ms")
+    print(f"  batched:    {bat['throughput_rps']:.1f} req/s  "
+          f"p50 {bat['p50_ms']:.2f} ms  p99 {bat['p99_ms']:.2f} ms")
+    print(f"  speedup:    {doc['speedup']:.2f}x  "
+          f"(batched dispatches: "
+          f"{doc['runtime_stats']['batched_requests']} requests in "
+          f"{doc['runtime_stats']['batches']} batches)")
+    print(f"wrote {path}", file=sys.stderr)
+    if args.min_speedup and doc["speedup"] < args.min_speedup:
+        print(f"FAIL: speedup {doc['speedup']:.2f}x < "
+              f"--min-speedup {args.min_speedup}x", file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -228,12 +228,27 @@ class CompiledProgram:
         return records
 
     # ---- artifacts -------------------------------------------------------
-    def export(self, path: str | None = None):
+    def export(self, path: str | None = None, *,
+               weights: "bool | dict | None" = None, sidecar: bool = False):
         """Write (or return) the versioned JSON artifact of this design
         (docs/artifact_format.md).  Tuning-database entries matching the
-        design's chains travel in the v1.2 ``tuning`` section."""
+        design's chains travel in the v1.2 ``tuning`` section.
+
+        ``weights=True`` embeds every weight buffer's concrete array —
+        bound values first, the deterministic initializer for the rest —
+        so the artifact is a *self-contained served model* (v1.3
+        ``weights`` section; ``codo.load`` binds them back, no
+        ``weight_init`` needed at the serving end).  Pass a dict to ship
+        specific arrays, and ``sidecar=True`` to write them to
+        ``<path>.weights.npz`` instead of base64-in-JSON."""
         from repro.core.artifact import export_artifact  # lazy
-        return export_artifact(self.compiled, path)
+        if weights is True:
+            weights = {b.name: (self._bindings.get(b.name)
+                                if b.name in self._bindings
+                                else frontend.weight_init(b.shape, b.dtype))
+                       for b in self.graph.weights()}
+        return export_artifact(self.compiled, path, weights=weights,
+                               weights_sidecar=sidecar)
 
 
 def _io_from_graph(graph: DataflowGraph) -> tuple[list[str], list[str]]:
@@ -277,12 +292,18 @@ def compile(fn: Callable | DataflowGraph, *specs,  # noqa: A001 — the API name
 def load(path) -> CompiledProgram:
     """Reconstruct a :class:`CompiledProgram` from an exported artifact
     (path or parsed document) — no recompile, any process; op kinds
-    resolve against this process's registry."""
-    from repro.core.artifact import import_artifact  # lazy
+    resolve against this process's registry.  Bound-weight payloads (v1.3)
+    are hash-verified and re-bound, so a weight-carrying artifact executes
+    without ever reaching the shape-keyed initializer."""
+    from repro.core.artifact import artifact_weights, import_artifact  # lazy
     compiled = import_artifact(path)
     # The artifact carries the optimized graph only; it is its own oracle.
     ins, outs = _io_from_graph(compiled.graph)
-    return CompiledProgram(compiled.graph, compiled, ins, outs)
+    program = CompiledProgram(compiled.graph, compiled, ins, outs)
+    bound = artifact_weights(path)
+    if bound:
+        program.bind(**bound)
+    return program
 
 
 # --------------------------------------------------------------------------

@@ -7,8 +7,8 @@ Public API:
 """
 
 from .artifact import (SCHEMA_VERSION, ArtifactError, ArtifactWarning,
-                       artifact_summary, export_artifact, import_artifact,
-                       validate_artifact)
+                       artifact_summary, artifact_weights, export_artifact,
+                       import_artifact, validate_artifact)
 from .buffers import BufferPlan, determine_buffers, downgrade_to_pingpong
 from .cache import CacheStats, CompileCache
 from .coarse import eliminate_coarse
@@ -56,6 +56,7 @@ __all__ = [
     "Tracer", "TransferPlan", "UnknownOpError",
     "V5E",
     "ablation_jobs", "access_sig", "arrival_order", "artifact_summary",
+    "artifact_weights",
     "assign_stages", "batch_workloads", "enforce_pass_budgets",
     "kernel_workloads",
     "autoschedule", "clear_lower_cache", "coarse_violations", "codo_opt",

@@ -43,11 +43,15 @@ transforms; only lowering/executing the imported design needs jax.
 
 from __future__ import annotations
 
+import base64
 import dataclasses
+import hashlib
 import json
 import warnings
 from pathlib import Path
 from typing import Any
+
+import numpy as np
 
 from .buffers import BufferPlan
 from .compiler import CodoOptions, CompiledDataflow
@@ -61,10 +65,18 @@ from .routing import (XLA_FUSED, decide_route, ensure_kernel_patterns,
                       match_group, pallas_disabled)
 from .schedule import ScheduleReport
 
-SCHEMA_VERSION = "1.2"
+SCHEMA_VERSION = "1.3"
 
 # Schema changelog
 # ----------------
+# 1.3  `weights`: bound weight payloads — content-hashed arrays either
+#      embedded (base64 of the raw little-endian bytes) or referenced from
+#      an ``.npz`` sidecar next to the document, one entry per weight
+#      buffer with its dtype/shape/sha256.  A weight-carrying artifact is
+#      a *self-contained served model*: ``codo.load`` binds the arrays, so
+#      execution never reaches ``weight_init``.  Older readers ignore the
+#      section (unknown-field policy) and this reader accepts v1.0–v1.2
+#      documents without it.
 # 1.2  `tuning`: measured autotune results for the design's routed chains
 #      — `{"entries": [TuningRecord dicts]}` keyed on chain structural
 #      signature + backend + hw name (see repro.core.tuning).  Importers
@@ -159,8 +171,67 @@ def _group_kernels(graph: DataflowGraph, impl: dict[str, str],
     return out
 
 
+def _hash_array(arr: np.ndarray) -> str:
+    """Content hash of a weight payload: sha256 over the raw (C-contiguous,
+    native-endian) bytes."""
+    return hashlib.sha256(np.ascontiguousarray(arr).tobytes()).hexdigest()
+
+
+def sidecar_path(path: str | Path) -> Path:
+    """Where a sidecar-weights export puts its ``.npz`` — next to the JSON
+    document, same stem."""
+    return Path(path).with_suffix(".weights.npz")
+
+
+def _weights_section(graph: DataflowGraph, weights: dict,
+                     path: str | Path | None, sidecar: bool) -> dict:
+    """Build (and, for sidecar format, write) the v1.3 ``weights`` payload.
+    Every array is validated against the graph's weight-buffer table so a
+    weight-carrying artifact can never ship values its design cannot bind.
+    """
+    by_name = {b.name: b for b in graph.weights()}
+    unknown = sorted(set(weights) - set(by_name))
+    if unknown:
+        raise ArtifactError(
+            f"cannot export weights {unknown}: not weight buffers of "
+            f"{graph.name!r} (weights: {sorted(by_name)})")
+    if sidecar and path is None:
+        raise ArtifactError("sidecar weights need a document path — the "
+                            ".npz lives next to the JSON (pass path=, or "
+                            "use embedded weights for in-memory documents)")
+    arrays: dict[str, dict] = {}
+    payload: dict[str, np.ndarray] = {}
+    for name in sorted(weights):
+        buf = by_name[name]
+        arr = np.asarray(weights[name])
+        if tuple(arr.shape) != tuple(buf.shape):
+            raise ArtifactError(
+                f"weight {name!r} has shape {tuple(arr.shape)}, buffer "
+                f"expects {tuple(buf.shape)}")
+        arr = arr.astype(np.dtype(buf.dtype), copy=False)
+        entry = {"dtype": np.dtype(buf.dtype).name,
+                 "shape": [int(s) for s in arr.shape],
+                 "sha256": _hash_array(arr)}
+        if not sidecar:
+            entry["data"] = base64.b64encode(
+                np.ascontiguousarray(arr).tobytes()).decode("ascii")
+        arrays[name] = entry
+        payload[name] = arr
+    section: dict[str, Any] = {
+        "format": "sidecar" if sidecar else "embedded",
+        "arrays": arrays,
+    }
+    if sidecar:
+        sc = sidecar_path(path)
+        np.savez(sc, **payload)
+        section["file"] = sc.name
+    return section
+
+
 def export_artifact(compiled: CompiledDataflow,
-                    path: str | Path | None = None) -> dict:
+                    path: str | Path | None = None, *,
+                    weights: dict | None = None,
+                    weights_sidecar: bool = False) -> dict:
     """Serialize a compiled design to the versioned JSON artifact format.
 
     Returns the document as a dict; when ``path`` is given, also writes it
@@ -168,6 +239,12 @@ def export_artifact(compiled: CompiledDataflow,
     :class:`ArtifactError` for closure-built tasks — closures cannot
     serialize; build graphs with declarative ``OpSpec``s (``repro.core.
     ops``) so the artifact stays executable after import.
+
+    ``weights`` (v1.3) binds concrete arrays to the design's weight
+    buffers: content-hashed payloads embedded in the document, or — with
+    ``weights_sidecar`` — written to ``<path>.weights.npz`` next to it.
+    ``codo.load`` binds them back, so a weight-carrying artifact serves
+    with no model code and no initializer in reach.
     """
     g = compiled.graph
     closures = [t.name for t in g.tasks if t.fn_is_closure]
@@ -215,6 +292,8 @@ def export_artifact(compiled: CompiledDataflow,
         "tuning": tuning,
         "integrity": {"structural_hash": g.structural_hash()},
     }
+    if weights is not None:
+        doc["weights"] = _weights_section(g, weights, path, weights_sidecar)
     if path is not None:
         Path(path).write_text(dumps(doc))
     return doc
@@ -267,6 +346,8 @@ _TOP_FIELDS = {
     "diagnostics": ((dict, type(None)), False),
     # v1.2: measured autotune entries for the design's routed chains.
     "tuning": ((dict, type(None)), False),
+    # v1.3: bound weight payloads (embedded base64 or .npz sidecar).
+    "weights": ((dict, type(None)), False),
     "integrity": ((dict, type(None)), False),
 }
 
@@ -359,6 +440,22 @@ _TUNING_ENTRY_FIELDS = {
     "workload": ((str,), False),
     "tasks": ((list,), False),
 }
+
+# v1.3 `weights` section and its per-array entries.
+_WEIGHTS_FIELDS = {
+    "format": ((str,), True),
+    "file": ((str,), False),
+    "arrays": ((dict,), True),
+}
+
+_WEIGHT_ENTRY_FIELDS = {
+    "dtype": ((str,), True),
+    "shape": ((list,), True),
+    "sha256": ((str,), True),
+    "data": ((str,), False),
+}
+
+_WEIGHT_FORMATS = ("embedded", "sidecar")
 
 _INTEGRITY_FIELDS = {
     "structural_hash": ((str,), False),
@@ -517,6 +614,31 @@ def validate_artifact(doc: Any) -> list[str]:
                 continue
             _check_fields(entry, f"tuning.entries[{i}]",
                           _TUNING_ENTRY_FIELDS, errors, notes)
+    wts = doc.get("weights")
+    if isinstance(wts, dict):
+        _check_fields(wts, "weights", _WEIGHTS_FIELDS, errors, notes)
+        fmt = wts.get("format")
+        if isinstance(fmt, str) and fmt not in _WEIGHT_FORMATS:
+            errors.append(f"weights.format: {fmt!r} not one of "
+                          f"{_WEIGHT_FORMATS}")
+        if fmt == "sidecar" and not isinstance(wts.get("file"), str):
+            errors.append("weights.file: required for sidecar format "
+                          "(names the .npz next to the document)")
+        weight_bufs = {b.get("name") for b in
+                       (doc.get("graph") or {}).get("buffers") or ()
+                       if isinstance(b, dict) and b.get("kind") == "weight"}
+        for name, entry in (wts.get("arrays") or {}).items():
+            p = f"weights.arrays.{name}"
+            if not isinstance(entry, dict):
+                errors.append(f"{p}: expected object, "
+                              f"got {type(entry).__name__}")
+                continue
+            _check_fields(entry, p, _WEIGHT_ENTRY_FIELDS, errors, notes)
+            if name not in weight_bufs:
+                errors.append(f"{p}: {name!r} is not a weight buffer of "
+                              "the graph")
+            if fmt == "embedded" and not isinstance(entry.get("data"), str):
+                errors.append(f"{p}.data: required for embedded format")
     if isinstance(doc.get("integrity"), dict):
         _check_fields(doc["integrity"], "integrity", _INTEGRITY_FIELDS,
                       errors, notes)
@@ -726,6 +848,74 @@ def import_artifact(source: str | Path | dict, *,
     return out
 
 
+def artifact_weights(source: str | Path | dict, *,
+                     base_dir: str | Path | None = None) -> dict:
+    """The bound weight arrays of a v1.3 artifact, verified against their
+    recorded content hashes.
+
+    Returns ``{buffer_name: np.ndarray}`` — empty for documents without a
+    ``weights`` section (v1.0–v1.2).  ``source`` is a path or a parsed
+    document; for sidecar-format weights the ``.npz`` is resolved relative
+    to ``base_dir`` (default: the source path's directory, or the current
+    directory for dict sources).  Raises :class:`ArtifactError` on a
+    missing sidecar, an array the sidecar does not contain, undecodable
+    payload bytes, or any sha256 mismatch — corruption never loads.
+    """
+    doc = _load(source)
+    wts = doc.get("weights")
+    if not wts:
+        return {}
+    fmt = wts.get("format")
+    arrays = wts.get("arrays") or {}
+    if base_dir is None:
+        base_dir = (Path(source).parent
+                    if not isinstance(source, dict) else Path("."))
+    npz = None
+    if fmt == "sidecar":
+        sc = Path(base_dir) / wts.get("file", "")
+        try:
+            npz = np.load(sc)
+        except OSError as e:
+            raise ArtifactError(
+                f"weights sidecar {sc} is missing or unreadable ({e}) — "
+                "the artifact's .npz must travel next to its JSON") from e
+    elif fmt != "embedded":
+        raise ArtifactError(f"weights.format: {fmt!r} not one of "
+                            f"{_WEIGHT_FORMATS}")
+    out: dict[str, np.ndarray] = {}
+    for name in sorted(arrays):
+        entry = arrays[name]
+        dtype = np.dtype(entry["dtype"])
+        shape = tuple(int(s) for s in entry["shape"])
+        if npz is not None:
+            if name not in npz.files:
+                raise ArtifactError(
+                    f"weights.arrays.{name}: not present in sidecar "
+                    f"{wts.get('file')!r} (has {sorted(npz.files)})")
+            arr = np.asarray(npz[name])
+            if arr.dtype != dtype or arr.shape != shape:
+                raise ArtifactError(
+                    f"weights.arrays.{name}: sidecar holds "
+                    f"{arr.dtype.name}{list(arr.shape)}, document records "
+                    f"{dtype.name}{list(shape)}")
+        else:
+            try:
+                raw = base64.b64decode(entry["data"], validate=True)
+                arr = np.frombuffer(raw, dtype=dtype).reshape(shape).copy()
+            except (ValueError, KeyError) as e:
+                raise ArtifactError(
+                    f"weights.arrays.{name}: embedded payload does not "
+                    f"decode to {dtype.name}{list(shape)} ({e})") from e
+        got = _hash_array(arr)
+        if got != entry["sha256"]:
+            raise ArtifactError(
+                f"weights.arrays.{name}: content hash mismatch — payload "
+                f"hashes to {got[:16]}…, document records "
+                f"{entry['sha256'][:16]}… (corrupted or tampered weights)")
+        out[name] = arr
+    return out
+
+
 # --------------------------------------------------------------------------
 # Inspection
 # --------------------------------------------------------------------------
@@ -764,5 +954,5 @@ def artifact_summary(source: str | Path | dict) -> str:
 
 
 __all__ = ["SCHEMA_VERSION", "ArtifactError", "ArtifactWarning",
-           "artifact_summary", "dumps", "export_artifact", "import_artifact",
-           "validate_artifact"]
+           "artifact_summary", "artifact_weights", "dumps", "export_artifact",
+           "import_artifact", "sidecar_path", "validate_artifact"]

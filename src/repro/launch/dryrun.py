@@ -39,7 +39,7 @@ from repro.distributed.sharding import (as_shardings, batch_specs,
                                         cache_specs, param_specs, use_mesh)
 from repro.training.train_loop import build_train_step
 from repro.training.optimizer import OptConfig
-from repro.serving.serve import build_prefill_step, build_serve_step
+from repro.serving.generator import build_prefill_step, build_serve_step
 
 RESULTS = Path(__file__).resolve().parents[3] / "results" / "dryrun"
 

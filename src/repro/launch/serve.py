@@ -1,196 +1,27 @@
-"""Serving launcher: batched greedy generation with slot-based batching,
-plus a mode that serves a *compiled-design artifact* directly.
+"""Deprecated alias — the serving CLI moved to :mod:`repro.serving.cli`
+(the launcher now rides on the :class:`~repro.serving.runtime.
+ServingRuntime`: dynamic batching, worker pool, hot-swap; see
+``docs/serving.md``).
 
-CPU-scale LM demo:
-    PYTHONPATH=src python -m repro.launch.serve --arch gpt2-medium --smoke \\
-        --requests 6 --batch 4 --max-new 8
-
-Artifact serving — no recompile, no model code: ``codo.load`` a versioned
-JSON artifact (docs/artifact_format.md) into a ``CompiledProgram`` and run
-a request loop against the jitted design.  By default each request gets
-random inputs; production-style serving feeds real tensors from an npz
-archive (one array per input buffer, validated against the artifact's
-buffer table):
-
-    PYTHONPATH=src python -m repro.core.compiler --configs gpt2-medium \\
-        --opts opt5 --export artifacts/
-    PYTHONPATH=src python -m repro.launch.serve \\
-        --artifact artifacts/gpt2-medium-opt5.json --requests 8 \\
-        --inputs batch.npz
+This shim warns once on import and delegates everything — ``python -m
+repro.launch.serve`` keeps working, as do the documented
+:class:`InputError` / :func:`load_input_env` / :func:`main` entry points.
 """
 
 from __future__ import annotations
 
-import argparse
-import sys
-import time
+import warnings
 
-import jax
-import numpy as np
+warnings.warn(
+    "repro.launch.serve is deprecated: use repro.serving.cli "
+    "(python -m repro.serving.cli) instead",
+    DeprecationWarning, stacklevel=2)
 
+from repro.serving.cli import (InputError, load_input_env,  # noqa: E402
+                               main, serve_artifact, serve_lm)
 
-class InputError(ValueError):
-    """An --inputs npz archive does not match the artifact's buffers."""
-
-
-def load_input_env(path: str, graph) -> dict:
-    """Load real input tensors for ``graph`` from an ``.npz`` archive.
-
-    Every ``input`` buffer must be present with the exact declared shape;
-    dtypes are normalized *before* validation: arrays are cast to the
-    buffer dtype (an information-losing cast — e.g. float64 data under
-    disabled x64, or int labels into a float buffer — is allowed,
-    mirroring jnp's weak-dtype behavior), and a non-numeric array that
-    cannot cast is an :class:`InputError`, never a raw traceback.  Weight
-    buffers may optionally be supplied too; unknown array names are an
-    error, so a typo'd key cannot silently fall back to random data.
-    Every failure mode — unreadable archive, pickled object arrays, 0-d
-    scalars, shape or name mismatches — reports as :class:`InputError`
-    (CLI exit code 2).
-    """
-    try:
-        with np.load(path) as npz:
-            arrays = {k: npz[k] for k in npz.files}
-    except InputError:
-        raise
-    except Exception as e:      # OSError, BadZipFile, pickle-disabled, ...
-        raise InputError(f"{path}: not a readable npz archive "
-                         f"({type(e).__name__}: {e})") from e
-    bindable = {b.name: b for b in graph.buffers.values()
-                if b.kind in ("input", "weight")}
-    unknown = sorted(set(arrays) - set(bindable))
-    if unknown:
-        raise InputError(f"{path}: unknown array names {unknown}; "
-                         f"bindable buffers: {sorted(bindable)}")
-    missing = sorted(b.name for b in graph.inputs() if b.name not in arrays)
-    if missing:
-        raise InputError(f"{path}: missing input arrays {missing} "
-                         f"(inputs: {sorted(b.name for b in graph.inputs())})")
-    env = {}
-    for name, arr in arrays.items():
-        buf = bindable[name]
-        # Normalize the dtype first: validation below then reasons about
-        # clean, buffer-typed arrays only.
-        try:
-            arr = np.asarray(arr).astype(np.dtype(buf.dtype), copy=False)
-        except (TypeError, ValueError) as e:
-            raise InputError(
-                f"{path}: array {name!r} (dtype {np.asarray(arr).dtype}) "
-                f"does not cast to buffer dtype "
-                f"{np.dtype(buf.dtype).name}: {e}") from e
-        if arr.ndim == 0 and tuple(buf.shape):
-            raise InputError(
-                f"{path}: array {name!r} is 0-d (a Python scalar saved "
-                f"with np.savez?); buffer {name!r} expects shape "
-                f"{tuple(buf.shape)}")
-        if tuple(arr.shape) != tuple(buf.shape):
-            raise InputError(f"{path}: array {name!r} has shape "
-                             f"{tuple(arr.shape)}, buffer expects "
-                             f"{tuple(buf.shape)}")
-        env[name] = arr
-    return env
-
-
-def serve_artifact(args) -> int:
-    """Serve straight from an imported artifact: the design the compiler
-    exported is the unit of deployment — this launcher never sees the
-    model-building code that produced it."""
-    from repro import api as codo
-    from repro.core.artifact import artifact_summary
-    from repro.kernels import register_all
-    from repro.models.dataflow_models import random_inputs
-
-    register_all()     # fused-group kinds resolve against this process
-    program = codo.load(args.artifact)          # validates before anything
-    print(artifact_summary(args.artifact))
-    low = program.lower(jit=True)
-    print(low.summary())
-
-    if args.inputs:
-        env = load_input_env(args.inputs, program.graph)
-        try:
-            envs = [program.make_env(**env)] * args.requests
-        except (KeyError, TypeError, ValueError) as e:
-            # Anything load_input_env's checks missed still reports as the
-            # documented InputError (exit 2), never a raw traceback.
-            raise InputError(f"{args.inputs}: {e}") from e
-        print(f"serving real inputs from {args.inputs} "
-              f"({sorted(env)})")
-    else:
-        envs = [random_inputs(program.graph, seed=args.seed + i)
-                for i in range(args.requests)]
-    outs = low(envs[0])            # warmup: trace + compile
-    jax.block_until_ready(outs)
-
-    t0 = time.time()
-    for env in envs:
-        jax.block_until_ready(low(env))
-    dt = time.time() - t0
-    print(f"{args.requests} requests in {dt * 1e3:.1f} ms "
-          f"({args.requests / max(dt, 1e-9):.1f} req/s); "
-          f"outputs {sorted(program.output_names)}")
-    return 0
-
-
-def serve_lm(args) -> int:
-    from repro.configs import get_config
-    from repro.models import transformer as tf
-    from repro.serving.serve import Generator, Request
-
-    cfg = get_config(args.arch)
-    if args.smoke:
-        cfg = cfg.smoke()
-    params = tf.init_params(cfg, jax.random.PRNGKey(args.seed))
-    gen = Generator(cfg, params, batch=args.batch, cache_len=args.cache_len)
-
-    rng = np.random.default_rng(args.seed)
-    for rid in range(args.requests):
-        gen.submit(Request(rid, prompt=list(
-            rng.integers(1, cfg.vocab, size=args.prompt_len)),
-            max_new=args.max_new))
-
-    t0 = time.time()
-    finished = gen.run(max_steps=args.cache_len - 1)
-    dt = time.time() - t0
-    for r in sorted(finished, key=lambda r: r.rid):
-        print(f"req {r.rid}: {len(r.out)} tokens -> {r.out[:8]}...")
-    print(f"{len(finished)}/{args.requests} finished; {gen.steps} decode "
-          f"steps, {gen.tokens_out} tokens, "
-          f"{gen.tokens_out / max(dt, 1e-9):.1f} tok/s (CPU smoke)")
-    return 0
-
-
-def main(argv=None) -> int:
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="",
-                    help="LM architecture to serve (token generation)")
-    ap.add_argument("--artifact", default="",
-                    help="serve a compiled-design JSON artifact instead "
-                         "(see docs/artifact_format.md)")
-    ap.add_argument("--inputs", default="",
-                    help="with --artifact: npz archive of real input "
-                         "tensors (one array per input buffer; shapes/"
-                         "dtypes validated) instead of random data")
-    ap.add_argument("--smoke", action="store_true")
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--cache-len", type=int, default=128)
-    ap.add_argument("--requests", type=int, default=6)
-    ap.add_argument("--prompt-len", type=int, default=8)
-    ap.add_argument("--max-new", type=int, default=8)
-    ap.add_argument("--seed", type=int, default=0)
-    args = ap.parse_args(argv)
-
-    if bool(args.arch) == bool(args.artifact):
-        ap.error("exactly one of --arch or --artifact is required")
-    if args.inputs and not args.artifact:
-        ap.error("--inputs only applies to --artifact serving")
-    if args.artifact and args.requests < 1:
-        ap.error("--requests must be >= 1 when serving an artifact")
-    try:
-        return serve_artifact(args) if args.artifact else serve_lm(args)
-    except InputError as e:
-        print(f"error: {e}", file=sys.stderr)
-        return 2
+__all__ = ["InputError", "load_input_env", "main", "serve_artifact",
+           "serve_lm"]
 
 
 if __name__ == "__main__":

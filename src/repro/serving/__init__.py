@@ -1,0 +1,19 @@
+"""repro.serving — the production serving stack.
+
+* :mod:`repro.serving.runtime` — :class:`ServingRuntime`: bounded queue,
+  dynamic batching, process worker pool, zero-downtime artifact hot-swap
+  (``docs/serving.md``).
+* :mod:`repro.serving.cli` — the ``python -m repro.serving.cli`` launcher
+  (``repro.launch.serve`` is its deprecated alias).
+* :mod:`repro.serving.generator` — slot-based LM token generation
+  (``repro.serving.serve`` is its deprecated alias).
+
+Only the runtime names are imported eagerly; the generator pulls in the
+transformer stack, so import it explicitly.
+"""
+
+from .runtime import (QueueFullError, ServeConfig, ServeError, ServeFuture,
+                      ServeStats, ServingRuntime)
+
+__all__ = ["QueueFullError", "ServeConfig", "ServeError", "ServeFuture",
+           "ServeStats", "ServingRuntime"]

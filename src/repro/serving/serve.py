@@ -1,139 +1,22 @@
-"""Serving: jitted decode/prefill steps + a batched generation driver.
+"""Deprecated alias — the generation driver lives in
+:mod:`repro.serving.generator` (the ``serve`` name now belongs to the
+serving *runtime* stack: ``repro.serving.runtime`` + ``repro.serving.cli``).
 
-``build_serve_step`` is what the decode-shape dry-run cells lower: one new
-token for every sequence in the batch against a KV cache / recurrent state
-of the cell's stated length, cache donated (in-place ring-buffer update).
-
-``Generator`` is the runnable driver (examples/serve_gpt2.py): greedy or
-top-k sampling, slot-based continuous batching (finished sequences are
-replaced by queued requests without re-compiling).
+This shim warns once on import and re-exports the public names so old
+imports keep working; new code should import ``repro.serving.generator``.
 """
 
 from __future__ import annotations
 
-import time
-from dataclasses import dataclass, field
-from typing import Any, Callable
+import warnings
 
-import jax
-import jax.numpy as jnp
-import numpy as np
+warnings.warn(
+    "repro.serving.serve is deprecated: import repro.serving.generator "
+    "(generation driver) or repro.serving.runtime (serving runtime) instead",
+    DeprecationWarning, stacklevel=2)
 
-from ..configs.base import ArchConfig
-from ..distributed.sharding import (as_shardings, batch_specs, cache_specs,
-                                    param_specs)
-from ..models import transformer as tf
+from .generator import (Generator, Request, build_prefill_step,  # noqa: E402
+                        build_serve_step, jit_prefill_step, jit_serve_step)
 
-
-def build_serve_step(cfg: ArchConfig) -> Callable:
-    def serve_step(params, tokens, cache):
-        logits, cache = tf.decode_step(params, tokens, cache, cfg)
-        next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-        return next_tok, logits, cache
-    return serve_step
-
-
-def jit_serve_step(cfg: ArchConfig, mesh, params_or_shapes, cache_like):
-    pspecs = param_specs(params_or_shapes, mesh, cfg)
-    cspecs = cache_specs(cache_like, mesh, cfg)
-    dp = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
-    # NamedShardings, not bare specs: older jax.jit rejects PartitionSpec.
-    pshard, tshard, cshard = (
-        as_shardings(s, mesh)
-        for s in (pspecs, jax.sharding.PartitionSpec(dp), cspecs))
-    return jax.jit(
-        build_serve_step(cfg),
-        in_shardings=(pshard, tshard, cshard),
-        out_shardings=(tshard, None, cshard),
-        donate_argnums=(2,),
-    )
-
-
-def build_prefill_step(cfg: ArchConfig) -> Callable:
-    def prefill_step(params, batch):
-        return tf.prefill(params, batch, cfg)
-    return prefill_step
-
-
-def jit_prefill_step(cfg: ArchConfig, mesh, params_or_shapes, batch_like):
-    pspecs = param_specs(params_or_shapes, mesh, cfg)
-    bspecs = batch_specs(batch_like, mesh)
-    return jax.jit(build_prefill_step(cfg),
-                   in_shardings=(as_shardings(pspecs, mesh),
-                                 as_shardings(bspecs, mesh)),
-                   out_shardings=None)
-
-
-# --------------------------------------------------------------------------
-# Generation driver
-# --------------------------------------------------------------------------
-
-
-@dataclass
-class Request:
-    rid: int
-    prompt: list[int]
-    max_new: int = 16
-    out: list[int] = field(default_factory=list)
-    done: bool = False
-
-
-class Generator:
-    """Slot-based batched decoding with greedy sampling."""
-
-    def __init__(self, cfg: ArchConfig, params, batch: int, cache_len: int):
-        self.cfg, self.params = cfg, params
-        self.batch, self.cache_len = batch, cache_len
-        self.cache = tf.init_cache(cfg, batch, cache_len)
-        self.step_fn = jax.jit(build_serve_step(cfg), donate_argnums=(2,))
-        self.slots: list[Request | None] = [None] * batch
-        self.queue: list[Request] = []
-        self.tokens = np.zeros((batch,), np.int32)
-        self.steps = 0
-        self.tokens_out = 0
-
-    def submit(self, req: Request) -> None:
-        self.queue.append(req)
-
-    def _fill_slots(self) -> None:
-        for i in range(self.batch):
-            if self.slots[i] is None and self.queue:
-                req = self.queue.pop(0)
-                self.slots[i] = req
-                # feed the prompt one token at a time (prefill-by-decode —
-                # fine at example scale; production prefill uses prefill())
-                self.tokens[i] = req.prompt[0]
-                req._cursor = 1  # type: ignore[attr-defined]
-
-    def step(self) -> None:
-        self._fill_slots()
-        tok = jnp.asarray(self.tokens)
-        nxt, _logits, self.cache = self.step_fn(self.params, tok, self.cache)
-        nxt = np.asarray(nxt)
-        self.steps += 1
-        for i, req in enumerate(self.slots):
-            if req is None:
-                continue
-            cur = getattr(req, "_cursor", len(req.prompt))
-            if cur < len(req.prompt):
-                self.tokens[i] = req.prompt[cur]
-                req._cursor = cur + 1  # type: ignore[attr-defined]
-            else:
-                req.out.append(int(nxt[i]))
-                self.tokens[i] = int(nxt[i])
-                self.tokens_out += 1
-                if len(req.out) >= req.max_new:
-                    req.done = True
-                    self.slots[i] = None
-
-    def run(self, max_steps: int = 256) -> list[Request]:
-        finished: list[Request] = []
-        pending = list(self.queue)
-        for _ in range(max_steps):
-            if not self.queue and all(s is None for s in self.slots):
-                break
-            self.step()
-            for r in pending:
-                if r.done and r not in finished:
-                    finished.append(r)
-        return finished
+__all__ = ["Generator", "Request", "build_prefill_step", "build_serve_step",
+           "jit_prefill_step", "jit_serve_step"]

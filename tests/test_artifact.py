@@ -256,7 +256,7 @@ def test_fusion_kernels_forward_compat_both_directions(tmp_path, monkeypatch):
                  cache=None)
     lower(c, jit=False)                          # record real routing
     doc = export_artifact(c)
-    assert doc["schema_version"] == "1.2"
+    assert doc["schema_version"] == "1.3"
     assert len(doc["fusion"]["kernels"]) == len(doc["fusion"]["groups"])
     assert any(k.startswith("pallas:") for k in doc["fusion"]["kernels"])
 
@@ -405,7 +405,7 @@ def test_cli_export_import_profile(tmp_path, capsys):
     rc = compiler_main(["--import-artifact", str(path), "--profile"])
     out = capsys.readouterr().out
     assert rc == 0
-    assert "artifact gpt2_medium (schema v1.2)" in out
+    assert "artifact gpt2_medium (schema v1.3)" in out
     assert "== codo_opt(gpt2_medium) ==" in out
     assert "-- passes(gpt2_medium) --" in out
 
@@ -447,3 +447,155 @@ def test_lowered_artifact_matches_direct_lowering():
                                    rtol=1e-6, atol=1e-6)
     assert [g.tasks for g in via_artifact.groups] == \
         [g.tasks for g in direct.groups]
+
+
+# --------------------------------------------------------------------------
+# Bound-weight payloads (schema v1.3): self-contained served models
+# --------------------------------------------------------------------------
+
+
+def _bound_mlp():
+    """A tiny compiled MLP with every weight bound to 1.5× the
+    deterministic initializer — outputs observably differ from what an
+    initializer fallback would produce."""
+    import repro.api as codo
+    from repro.core import frontend
+
+    def mlp(x):
+        h = frontend.fc(x, 8, relu=True)
+        return frontend.fc(h, 4)
+
+    p = codo.compile(mlp, (4, 6), cache=None)
+    p.bind(**{b.name: np.float32(1.5)
+              * frontend.weight_init(b.shape, b.dtype)
+              for b in p.graph.weights()})
+    return p
+
+
+def test_v13_weights_roundtrip_embedded_and_sidecar(tmp_path):
+    from repro.core.artifact import artifact_weights, sidecar_path
+    p = _bound_mlp()
+    want = dict(p._bindings)
+    assert want                                     # the test is non-vacuous
+
+    emb = tmp_path / "emb.json"
+    p.export(str(emb), weights=True)
+    doc = json.loads(emb.read_text())
+    assert doc["schema_version"] == "1.3"
+    assert doc["weights"]["format"] == "embedded"
+    got = artifact_weights(emb)
+    assert set(got) == set(want)
+    for k in want:
+        np.testing.assert_array_equal(got[k], np.asarray(want[k]))
+
+    sc = tmp_path / "sc.json"
+    p.export(str(sc), weights=True, sidecar=True)
+    assert sidecar_path(sc).exists()
+    doc = json.loads(sc.read_text())
+    assert doc["weights"]["format"] == "sidecar"
+    assert doc["weights"]["file"] == sidecar_path(sc).name
+    assert all("data" not in e for e in doc["weights"]["arrays"].values())
+    got = artifact_weights(sc)
+    for k in want:
+        np.testing.assert_array_equal(got[k], np.asarray(want[k]))
+
+
+def test_v13_fresh_interpreter_serves_without_weight_init(tmp_path):
+    """The self-contained-model property: a weight-carrying artifact
+    executes in a fresh interpreter with ``weight_init`` unreachable —
+    no model code, no initializer, bit-identical outputs."""
+    import repro.api as codo
+    p = _bound_mlp()
+    x = np.random.default_rng(0).standard_normal((4, 6)).astype("float32")
+    np.savez(tmp_path / "ref.npz", x=x, y=np.asarray(p(x)))
+    path = tmp_path / "m.json"
+    p.export(str(path), weights=True)
+    del codo
+
+    proc = _fresh_interpreter(f"""
+        import numpy as np
+        from repro.core import frontend
+
+        def boom(shape, dtype=np.float32):
+            raise AssertionError("weight_init reached while serving a "
+                                 "v1.3 weight-carrying artifact")
+        frontend.weight_init = boom
+
+        import repro.api as codo
+        p = codo.load({str(path)!r})
+        ref = np.load({str(tmp_path / "ref.npz")!r})
+        out = np.asarray(p(ref["x"]))
+        np.testing.assert_array_equal(out, ref["y"])
+        print("V13_SELF_CONTAINED_OK")
+    """)
+    assert proc.returncode == 0, proc.stderr
+    assert "V13_SELF_CONTAINED_OK" in proc.stdout
+
+
+def test_v13_hash_mismatch_fails(tmp_path):
+    from repro.core.artifact import artifact_weights
+    p = _bound_mlp()
+    doc = p.export(weights=True)
+    name = next(iter(doc["weights"]["arrays"]))
+
+    forged = json.loads(json.dumps(doc))
+    forged["weights"]["arrays"][name]["sha256"] = "0" * 64
+    with pytest.raises(ArtifactError, match="content hash mismatch"):
+        artifact_weights(forged)
+
+    import base64
+    tampered = json.loads(json.dumps(doc))
+    entry = tampered["weights"]["arrays"][name]
+    raw = bytearray(base64.b64decode(entry["data"]))
+    raw[0] ^= 0xFF                                  # flip payload bits
+    entry["data"] = base64.b64encode(bytes(raw)).decode()
+    with pytest.raises(ArtifactError, match="content hash mismatch"):
+        artifact_weights(tampered)
+
+
+def test_v13_missing_sidecar_fails(tmp_path):
+    import repro.api as codo
+    from repro.core.artifact import artifact_weights, sidecar_path
+    p = _bound_mlp()
+    path = tmp_path / "m.json"
+    p.export(str(path), weights=True, sidecar=True)
+    sidecar_path(path).unlink()
+    with pytest.raises(ArtifactError, match="missing or unreadable"):
+        artifact_weights(path)
+    with pytest.raises(ArtifactError, match="missing or unreadable"):
+        codo.load(path)                             # load never half-binds
+
+
+def test_v13_validation_rejects_malformed_weights():
+    doc = _bound_mlp().export(weights=True)
+    name = next(iter(doc["weights"]["arrays"]))
+
+    bad_fmt = json.loads(json.dumps(doc))
+    bad_fmt["weights"]["format"] = "carrier-pigeon"
+    with pytest.raises(ArtifactError, match="weights.format"):
+        validate_artifact(bad_fmt)
+
+    no_file = json.loads(json.dumps(doc))
+    no_file["weights"]["format"] = "sidecar"
+    with pytest.raises(ArtifactError, match="required for sidecar"):
+        validate_artifact(no_file)
+
+    no_data = json.loads(json.dumps(doc))
+    del no_data["weights"]["arrays"][name]["data"]
+    with pytest.raises(ArtifactError, match="required for embedded"):
+        validate_artifact(no_data)
+
+    not_weight = json.loads(json.dumps(doc))
+    arrays = not_weight["weights"]["arrays"]
+    arrays["x"] = dict(arrays[name])                # an *input* buffer
+    with pytest.raises(ArtifactError, match="not a weight buffer"):
+        validate_artifact(not_weight)
+
+
+def test_pre_v13_documents_without_weights_still_import():
+    from repro.core.artifact import artifact_weights
+    doc = export_artifact(_compile_block())         # no weights section
+    assert "weights" not in doc
+    assert artifact_weights(doc) == {}
+    c = import_artifact(json.loads(json.dumps(doc, sort_keys=True)))
+    assert c.graph.structural_hash() == doc["integrity"]["structural_hash"]
