@@ -19,7 +19,7 @@ from pathlib import Path
 sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
 
 from benchmarks import (roofline, routing_bench, serving_bench,  # noqa: E402
-                        tables)
+                        sharding_bench, tables)
 
 OUT = Path(__file__).resolve().parents[1] / "results" / "bench"
 
@@ -39,6 +39,9 @@ SUITES = {
     # batched-vs-sequential serving throughput + p50/p99; also writes
     # results/bench/serving.json (uploaded by the nightly CI job)
     "serving": serving_bench.serving_rows,
+    # per-device-count sharded scaling on gpt2_medium; also writes
+    # results/bench/sharding.json (uploaded by the sharding-smoke CI job)
+    "sharding": sharding_bench.sharding_rows,
 }
 
 

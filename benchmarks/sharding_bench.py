@@ -1,0 +1,182 @@
+"""Sharded-execution benchmark: per-device-count scaling on gpt2_medium.
+
+Compiles the ``gpt2_block`` workload (dimensions derived from
+``configs/gpt2_medium.py``) once per device count, partitions it over a
+``data x model`` mesh with ``strategy="auto"``, and measures wall time of
+the sharded program against the single-device lowering of the same
+design.  Writes the machine-readable document the CI ``sharding-smoke``
+job uploads::
+
+    results/bench/sharding.json
+
+CLI::
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \\
+        PYTHONPATH=src python -m benchmarks.sharding_bench --quick
+    PYTHONPATH=src python -m benchmarks.sharding_bench    # full-size block
+
+``--quick`` runs the smoke-scale block (S=32, D=64) at few iterations —
+the PR-latency mode; the full run uses the gpt2_medium width (D=1024).
+Device counts default to the powers of two available on the platform
+(``--devices 1,2,4,8`` to override).  On CPU hosts the sharded program
+is *not* expected to beat single-device wall time (every "device" shares
+the same cores); the record captures collective structure + modeled
+cycles per count, and the CI gate checks presence/shape, not speedup.
+
+The suite is registered in ``benchmarks.run`` as ``sharding`` (quick
+mode), so the nightly ``--json`` collection carries its rows.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+from pathlib import Path
+
+OUT = Path(__file__).resolve().parents[1] / "results" / "bench"
+
+
+def _mesh_shape(n: int) -> tuple[int, int]:
+    """(data, model) factorization for n devices: tensor axis capped at 2
+    so every count >= 2 exercises both parallelism families."""
+    if n <= 1:
+        return (1, 1)
+    return (n // 2, 2)
+
+
+def _time_program(fn, env, iters: int) -> float:
+    import jax
+    jax.block_until_ready(fn(env))          # warm / compile
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(env)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e3
+
+
+def run_bench(*, quick: bool = False, devices: list[int] | None = None,
+              iters: int | None = None, seed: int = 0) -> dict:
+    """One scaling sweep; returns the ``sharding.json`` document."""
+    import jax
+    import numpy as np
+
+    from repro import api as codo
+    from repro.configs import get_config
+    from repro.launch.mesh import make_debug_mesh
+    from repro.models import dataflow_models as dm
+
+    cfg = get_config("gpt2-medium")
+    S, D = (32, 64) if quick else (128, cfg.d_model)
+    iters = iters or (3 if quick else 10)
+    avail = len(jax.devices())
+    if devices is None:
+        devices = [n for n in (1, 2, 4, 8) if n <= avail]
+    bad = [n for n in devices if n > avail]
+    if bad:
+        raise SystemExit(
+            f"device counts {bad} exceed the {avail} available — run under "
+            f"XLA_FLAGS=--xla_force_host_platform_device_count={max(bad)}")
+
+    graph = dm.gpt2_block(S, D)
+    rng = np.random.default_rng(seed)
+    base = codo.compile(graph)
+    env = {n: rng.standard_normal(
+        tuple(graph.buffers[n].shape)).astype("float32")
+        for n in base.input_names}
+
+    single = base.lower(jit=True)
+    single_ms = _time_program(lambda e: single(base.make_env(**e)), env,
+                              iters)
+
+    records = []
+    for n in devices:
+        if n == 1:
+            records.append({"devices": 1, "mesh": "1x1",
+                            "strategy": "single", "ms": round(single_ms, 4),
+                            "est_cycles": int(base.cost.total_cycles),
+                            "collectives": 0, "collective_bytes": 0,
+                            "speedup_vs_1": 1.0})
+            continue
+        dp, tp = _mesh_shape(n)
+        mesh = make_debug_mesh((dp, tp), ("data", "model"))
+        prog = codo.compile(graph, mesh=mesh)
+        plan = prog.sharding
+        low = prog.lower(jit=True)
+        ms = _time_program(lambda e: low(prog.make_env(**e)), env, iters)
+        records.append({
+            "devices": n, "mesh": f"{dp}x{tp}",
+            "strategy": plan.strategy, "ms": round(ms, 4),
+            "est_cycles": int(plan.estimated_cycles),
+            "collectives": len(plan.steps),
+            "collective_bytes": int(plan.collective_bytes),
+            "speedup_vs_1": round(single_ms / max(ms, 1e-9), 3),
+        })
+
+    return {
+        "workload": f"gpt2_block(S={S},D={D})",
+        "config": cfg.name,
+        "backend": jax.default_backend(),
+        "quick": quick,
+        "iters": iters,
+        "available_devices": avail,
+        "single_device_ms": round(single_ms, 4),
+        "records": records,
+    }
+
+
+def sharding_rows():
+    """The ``benchmarks.run`` suite entry: quick-mode rows + sharding.json."""
+    from benchmarks.tables import Row
+    doc = run_bench(quick=True)
+    OUT.mkdir(parents=True, exist_ok=True)
+    (OUT / "sharding.json").write_text(
+        json.dumps(doc, indent=2, sort_keys=True) + "\n")
+    return [
+        Row(f"sharding/devices={r['devices']}", r["ms"],
+            f"mesh={r['mesh']};strategy={r['strategy']};"
+            f"collectives={r['collectives']};"
+            f"est_cycles={r['est_cycles']};"
+            f"speedup_vs_1={r['speedup_vs_1']}")
+        for r in doc["records"]
+    ]
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="Per-device-count sharded execution scaling.")
+    ap.add_argument("--quick", action="store_true",
+                    help="smoke-scale block + few iterations (PR/CI mode)")
+    ap.add_argument("--devices", default="",
+                    help="comma list of device counts (default: powers of "
+                         "two up to the platform's device count)")
+    ap.add_argument("--iters", type=int, default=0,
+                    help="timed iterations per count (0 = mode default)")
+    ap.add_argument("--json", default=str(OUT / "sharding.json"),
+                    metavar="PATH", help="output document path")
+    args = ap.parse_args(argv)
+
+    devices = ([int(x) for x in args.devices.split(",") if x.strip()]
+               or None)
+    doc = run_bench(quick=args.quick, devices=devices,
+                    iters=args.iters or None)
+    path = Path(args.json)
+    path.parent.mkdir(parents=True, exist_ok=True)
+    path.write_text(json.dumps(doc, indent=2, sort_keys=True) + "\n")
+
+    print(f"sharding {doc['workload']} [{doc['backend']}] "
+          f"iters={doc['iters']} devices_available="
+          f"{doc['available_devices']}")
+    for r in doc["records"]:
+        print(f"  {r['devices']:>2d} dev ({r['mesh']:>4s} {r['strategy']:<9s})"
+              f"  {r['ms']:8.3f} ms  est {r['est_cycles']:>12,d} cyc  "
+              f"{r['collectives']} collectives "
+              f"({r['collective_bytes']:,d} B)  "
+              f"{r['speedup_vs_1']:.2f}x vs 1")
+    print(f"wrote {path}", file=sys.stderr)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -81,7 +81,8 @@ class CompiledProgram:
         self.output_names = list(output_names)
         self._bindings: dict[str, Any] = {}
         self._lowered = None
-        self._lowered_jit = None
+        self._lowered_key = None
+        self._sharding = None
 
     # ---- introspection ---------------------------------------------------
     @property
@@ -152,13 +153,37 @@ class CompiledProgram:
             raise ValueError(f"buffer {buf.name!r} expects shape "
                              f"{tuple(buf.shape)}, got {shape}")
 
+    # ---- sharding --------------------------------------------------------
+    @property
+    def sharding(self):
+        """The :class:`~repro.distributed.plan.ShardingPlan`, or None for
+        a single-device program."""
+        return self._sharding
+
+    def shard(self, mesh, strategy: str = "auto") -> "CompiledProgram":
+        """Partition this design across ``mesh`` (a jax ``Mesh`` or a
+        pure-data :class:`~repro.distributed.plan.MeshSpec`).  The plan
+        enters the lowering memo key, travels in the v1.4 artifact, and
+        subsequent calls execute via ``shard_map`` with the plan's
+        collective schedule.  ``shard(None)`` reverts to single-device."""
+        if mesh is None:
+            self._sharding = None
+        else:
+            from repro.distributed.partition import partition
+            self._sharding = partition(self.compiled, mesh, strategy)
+        self._lowered = None
+        return self
+
     # ---- execution -------------------------------------------------------
     def lower(self, jit: bool = True):
-        """The lowered executable program (memoized per jit flag)."""
-        if self._lowered is None or self._lowered_jit != bool(jit):
+        """The lowered executable program (memoized per jit flag and
+        sharding-plan digest)."""
+        plan = self._sharding
+        key = (bool(jit), plan.digest() if plan is not None else "")
+        if self._lowered is None or self._lowered_key != key:
             from repro.core.lowering import lower  # lazy: jax
-            self._lowered = lower(self.compiled, jit=jit)
-            self._lowered_jit = bool(jit)
+            self._lowered = lower(self.compiled, jit=jit, sharding=plan)
+            self._lowered_key = key
         return self._lowered
 
     def make_env(self, *arrays, **named) -> dict[str, Any]:
@@ -199,9 +224,17 @@ class CompiledProgram:
         vals = tuple(out[n] for n in self.output_names)
         return vals[0] if len(vals) == 1 else vals
 
-    def verify(self, *arrays, rtol: float = 1e-5, atol: float = 1e-5, **named):
+    def verify(self, *arrays, rtol: float | None = None,
+               atol: float | None = None, **named):
         """Check the lowered design against the un-optimized oracle (the
-        source graph executed task by task) on these inputs."""
+        source graph executed task by task) on these inputs.  A sharded
+        program is verified through its multi-device lowering; the default
+        tolerance widens to the documented fp-reassociation band (psum
+        tree-reduces device partials, and local-shape matmuls may contract
+        in a different order) — see ``lowering.verify_sharding``."""
+        sharded = self._sharding is not None
+        rtol = (1e-4 if sharded else 1e-5) if rtol is None else rtol
+        atol = (5e-5 if sharded else 1e-5) if atol is None else atol
         env = self.make_env(*arrays, **named)
         got = self.lower(jit=False)(env)
         want = self.source.execute(env)
@@ -240,7 +273,11 @@ class CompiledProgram:
         ``weights`` section; ``codo.load`` binds them back, no
         ``weight_init`` needed at the serving end).  Pass a dict to ship
         specific arrays, and ``sidecar=True`` to write them to
-        ``<path>.weights.npz`` instead of base64-in-JSON."""
+        ``<path>.weights.npz`` instead of base64-in-JSON.
+
+        A sharded program additionally writes its :class:`ShardingPlan`
+        into the v1.4 ``sharding`` section, so ``codo.load`` reproduces
+        the multi-device program on any host with enough devices."""
         from repro.core.artifact import export_artifact  # lazy
         if weights is True:
             weights = {b.name: (self._bindings.get(b.name)
@@ -248,7 +285,8 @@ class CompiledProgram:
                                 else frontend.weight_init(b.shape, b.dtype))
                        for b in self.graph.weights()}
         return export_artifact(self.compiled, path, weights=weights,
-                               weights_sidecar=sidecar)
+                               weights_sidecar=sidecar,
+                               sharding=self._sharding)
 
 
 def _io_from_graph(graph: DataflowGraph) -> tuple[list[str], list[str]]:
@@ -258,7 +296,8 @@ def _io_from_graph(graph: DataflowGraph) -> tuple[list[str], list[str]]:
 
 def compile(fn: Callable | DataflowGraph, *specs,  # noqa: A001 — the API name
             options: CodoOptions | None = None, name: str | None = None,
-            cache=_UNSET, autotune: bool = False,
+            cache=_UNSET, autotune: bool = False, mesh=None,
+            sharding_strategy: str = "auto",
             **codo_kwargs) -> CompiledProgram:
     """Trace ``fn`` over ``specs`` (shape tuples / :func:`buffer` protos)
     and compile it through the ``codo_opt`` pipeline.
@@ -271,6 +310,14 @@ def compile(fn: Callable | DataflowGraph, *specs,  # noqa: A001 — the API name
     compile (see :meth:`CompiledProgram.autotune`) so the program routes
     on measurement instead of the cost model's prediction.  Extra keyword
     arguments are forwarded to :func:`~repro.core.compiler.codo_opt`.
+
+    ``mesh`` (a jax ``Mesh`` or a
+    :class:`~repro.distributed.plan.MeshSpec`) makes the result a
+    *multi-device* program: the partitioner runs after the single-device
+    pipeline (so the compile cache stays shared across meshes) and
+    ``sharding_strategy`` picks the placement — ``"auto"`` prices every
+    feasible candidate, or force one of ``replicate``/``dp``/``tp``/
+    ``dp_tp``.  See docs/sharding.md.
     """
     if isinstance(fn, DataflowGraph):
         if specs:
@@ -284,6 +331,8 @@ def compile(fn: Callable | DataflowGraph, *specs,  # noqa: A001 — the API name
         source, ins, outs = frontend.trace_io(fn, *specs, name=name)
     compiled = codo_opt(source, options, cache=cache, **codo_kwargs)
     program = CompiledProgram(source, compiled, ins, outs)
+    if mesh is not None:
+        program.shard(mesh, sharding_strategy)
     if autotune:
         program.autotune()
     return program
@@ -300,6 +349,12 @@ def load(path) -> CompiledProgram:
     # The artifact carries the optimized graph only; it is its own oracle.
     ins, outs = _io_from_graph(compiled.graph)
     program = CompiledProgram(compiled.graph, compiled, ins, outs)
+    plan = getattr(compiled, "sharding_plan", None)
+    if plan is not None:
+        # v1.4 sharding section: restore the multi-device program as-is
+        # (the jax Mesh is only rebuilt from the plan's MeshSpec at
+        # execution time, so loading needs no devices).
+        program._sharding = plan
     bound = artifact_weights(path)
     if bound:
         program.bind(**bound)

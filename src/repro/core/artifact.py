@@ -47,6 +47,7 @@ import base64
 import dataclasses
 import hashlib
 import json
+import sys
 import warnings
 from pathlib import Path
 from typing import Any
@@ -65,10 +66,19 @@ from .routing import (XLA_FUSED, decide_route, ensure_kernel_patterns,
                       match_group, pallas_disabled)
 from .schedule import ScheduleReport
 
-SCHEMA_VERSION = "1.3"
+SCHEMA_VERSION = "1.4"
 
 # Schema changelog
 # ----------------
+# 1.4  `sharding`: the multi-device ShardingPlan — pure-data mesh axes,
+#      per-buffer placements, and the typed collective schedule
+#      (all_gather / reduce_scatter / psum / ppermute steps with their
+#      FIFO-depth buffer sizing and decomposition choices), plus a
+#      content digest that is re-checked on import.  ``codo.load``
+#      restores the plan so a sharded design round-trips to the same
+#      ``shard_map`` execution; devices are only touched at run time.
+#      Older readers ignore the section (unknown-field policy) and this
+#      reader accepts v1.0–v1.3 documents without it.
 # 1.3  `weights`: bound weight payloads — content-hashed arrays either
 #      embedded (base64 of the raw little-endian bytes) or referenced from
 #      an ``.npz`` sidecar next to the document, one entry per weight
@@ -231,7 +241,8 @@ def _weights_section(graph: DataflowGraph, weights: dict,
 def export_artifact(compiled: CompiledDataflow,
                     path: str | Path | None = None, *,
                     weights: dict | None = None,
-                    weights_sidecar: bool = False) -> dict:
+                    weights_sidecar: bool = False,
+                    sharding=None) -> dict:
     """Serialize a compiled design to the versioned JSON artifact format.
 
     Returns the document as a dict; when ``path`` is given, also writes it
@@ -245,6 +256,11 @@ def export_artifact(compiled: CompiledDataflow,
     ``weights_sidecar`` — written to ``<path>.weights.npz`` next to it.
     ``codo.load`` binds them back, so a weight-carrying artifact serves
     with no model code and no initializer in reach.
+
+    ``sharding`` (v1.4) records the design's
+    :class:`~repro.distributed.plan.ShardingPlan` — placements +
+    collective schedule — so the importer reconstructs the same
+    multi-device program without re-partitioning.
     """
     g = compiled.graph
     closures = [t.name for t in g.tasks if t.fn_is_closure]
@@ -294,6 +310,8 @@ def export_artifact(compiled: CompiledDataflow,
     }
     if weights is not None:
         doc["weights"] = _weights_section(g, weights, path, weights_sidecar)
+    if sharding is not None:
+        doc["sharding"] = sharding.to_dict()
     if path is not None:
         Path(path).write_text(dumps(doc))
     return doc
@@ -348,7 +366,32 @@ _TOP_FIELDS = {
     "tuning": ((dict, type(None)), False),
     # v1.3: bound weight payloads (embedded base64 or .npz sidecar).
     "weights": ((dict, type(None)), False),
+    # v1.4: the multi-device ShardingPlan (mesh + placements + collectives).
+    "sharding": ((dict, type(None)), False),
     "integrity": ((dict, type(None)), False),
+}
+
+_SHARDING_FIELDS = {
+    "mesh": ((dict,), True),
+    "strategy": ((str,), True),
+    "specs": ((dict,), False),
+    "steps": ((list,), False),
+    "estimated_cycles": (_NUM, False),
+    "digest": ((str,), False),
+}
+
+_SHARDING_STEP_FIELDS = {
+    "kind": ((str,), True),
+    "buffer": ((str,), True),
+    "axis": ((str,), True),
+    "task": ((str,), True),
+    "where": ((str,), False),
+    "dim": (_NUM, False),
+    "bytes": (_NUM, False),
+    "chunk_bytes": (_NUM, False),
+    "depth": (_NUM, False),
+    "channel": (_NUM, False),
+    "via": ((str,), False),
 }
 
 _GRAPH_FIELDS = {
@@ -639,6 +682,60 @@ def validate_artifact(doc: Any) -> list[str]:
                               "the graph")
             if fmt == "embedded" and not isinstance(entry.get("data"), str):
                 errors.append(f"{p}.data: required for embedded format")
+    shard = doc.get("sharding")
+    if isinstance(shard, dict):
+        from repro.distributed.plan import COLLECTIVE_KINDS  # jax-free
+        _check_fields(shard, "sharding", _SHARDING_FIELDS, errors, notes)
+        mesh = shard.get("mesh")
+        axes = mesh.get("axes") if isinstance(mesh, dict) else None
+        axis_names = set()
+        if isinstance(axes, list):
+            for i, ax in enumerate(axes):
+                if (not isinstance(ax, list) or len(ax) != 2
+                        or not isinstance(ax[0], str)
+                        or not isinstance(ax[1], int)):
+                    errors.append(f"sharding.mesh.axes[{i}]: expected "
+                                  "[name, size]")
+                else:
+                    axis_names.add(ax[0])
+        elif mesh is not None:
+            errors.append("sharding.mesh.axes: missing or not a list")
+        buf_names = {b.get("name") for b in
+                     (doc.get("graph") or {}).get("buffers") or ()
+                     if isinstance(b, dict)}
+        task_names = {t.get("name") for t in
+                      (doc.get("graph") or {}).get("tasks") or ()
+                      if isinstance(t, dict)}
+        for name, spec in (shard.get("specs") or {}).items():
+            p = f"sharding.specs.{name}"
+            if name not in buf_names:
+                errors.append(f"{p}: not a graph buffer")
+            dims = spec.get("dims") if isinstance(spec, dict) else None
+            if not isinstance(dims, list):
+                errors.append(f"{p}.dims: missing or not a list")
+                continue
+            for d in dims:
+                if d is not None and d not in axis_names:
+                    errors.append(f"{p}.dims: {d!r} is not a mesh axis")
+        for i, step in enumerate(shard.get("steps") or ()):
+            p = f"sharding.steps[{i}]"
+            if not isinstance(step, dict):
+                errors.append(f"{p}: expected object, "
+                              f"got {type(step).__name__}")
+                continue
+            _check_fields(step, p, _SHARDING_STEP_FIELDS, errors, notes)
+            if step.get("kind") not in COLLECTIVE_KINDS:
+                errors.append(f"{p}.kind: {step.get('kind')!r} not one of "
+                              f"{COLLECTIVE_KINDS}")
+            if step.get("buffer") not in buf_names:
+                errors.append(f"{p}.buffer: {step.get('buffer')!r} is not "
+                              "a graph buffer")
+            if step.get("task") not in task_names:
+                errors.append(f"{p}.task: {step.get('task')!r} is not a "
+                              "graph task")
+            if step.get("axis") not in axis_names:
+                errors.append(f"{p}.axis: {step.get('axis')!r} is not a "
+                              "mesh axis")
     if isinstance(doc.get("integrity"), dict):
         _check_fields(doc["integrity"], "integrity", _INTEGRITY_FIELDS,
                       errors, notes)
@@ -817,6 +914,19 @@ def import_artifact(source: str | Path | dict, *,
                 f"tuning does not reconstruct ({type(e).__name__}: {e}) — "
                 "corrupted values?") from e
 
+    # v1.4 sharding section: reconstruct the pure-data plan (its stored
+    # digest is re-checked by from_dict) and attach it to the design —
+    # ``codo.load`` turns it back into a multi-device program.  No device
+    # or jax state is touched here.
+    if doc.get("sharding"):
+        from repro.distributed.plan import ShardingPlan
+        try:
+            out.sharding_plan = ShardingPlan.from_dict(doc["sharding"])
+        except (KeyError, TypeError, ValueError) as e:
+            raise ArtifactError(
+                f"sharding does not reconstruct ({type(e).__name__}: {e}) "
+                "— corrupted values?") from e
+
     # The final cost is recomputed (the model is deterministic pure Python
     # over the stored graph); the recorded summary cross-checks for
     # cost-model drift across versions.  The *baseline* measured the
@@ -953,6 +1063,118 @@ def artifact_summary(source: str | Path | dict) -> str:
     return "\n".join(lines)
 
 
+def diff_artifacts(a: str | Path | dict, b: str | Path | dict) -> list[str]:
+    """Compare two artifact documents; return human-readable differences.
+
+    An empty list means the artifacts agree on everything the compiler
+    decided: schema version, graph structure (structural hash + counts),
+    fusion grouping and kernel routing, autotuning entries, and the v1.4
+    ``sharding`` section.  Cosmetic fields (generator string, measured
+    milliseconds inside tuning records) are ignored so re-exports of the
+    same design diff clean.
+    """
+    da, db = _load(a), _load(b)
+    out: list[str] = []
+
+    def _field(label, va, vb):
+        if va != vb:
+            out.append(f"{label}: {va!r} != {vb!r}")
+
+    _field("schema_version", da.get("schema_version"), db.get("schema_version"))
+    ha = (da.get("integrity") or {}).get("structural_hash")
+    hb = (db.get("integrity") or {}).get("structural_hash")
+    _field("integrity.structural_hash", ha, hb)
+    ga, gb = da.get("graph") or {}, db.get("graph") or {}
+    _field("graph.name", ga.get("name"), gb.get("name"))
+    _field("graph.tasks", len(ga.get("tasks") or ()), len(gb.get("tasks") or ()))
+    _field("graph.buffers", len(ga.get("buffers") or ()),
+           len(gb.get("buffers") or ()))
+
+    fa, fb = da.get("fusion") or {}, db.get("fusion") or {}
+    gra = [tuple(g) for g in fa.get("groups") or ()]
+    grb = [tuple(g) for g in fb.get("groups") or ()]
+    if gra != grb:
+        out.append(f"fusion.groups: {len(gra)} group(s) != {len(grb)} group(s)")
+    ka, kb = list(fa.get("kernels") or ()), list(fb.get("kernels") or ())
+    if ka != kb:
+        out.append(f"fusion.kernels: {ka} != {kb}")
+
+    def _tuning(doc):
+        entries = (doc.get("tuning") or {}).get("entries") or ()
+        return {f"{e.get('signature')}:{e.get('backend')}:{e.get('hw')}":
+                (e.get("choice"), json.dumps(e.get("tile"), sort_keys=True))
+                for e in entries}
+
+    ta, tb = _tuning(da), _tuning(db)
+    for key in sorted(set(ta) - set(tb)):
+        out.append(f"tuning[{key}]: only in first")
+    for key in sorted(set(tb) - set(ta)):
+        out.append(f"tuning[{key}]: only in second")
+    for key in sorted(set(ta) & set(tb)):
+        if ta[key] != tb[key]:
+            out.append(f"tuning[{key}]: choice/tile {ta[key]} != {tb[key]}")
+
+    sa, sb = da.get("sharding"), db.get("sharding")
+    if (sa is None) != (sb is None):
+        out.append("sharding: present in "
+                   + ("first only" if sb is None else "second only"))
+    elif sa is not None:
+        _field("sharding.strategy", sa.get("strategy"), sb.get("strategy"))
+        _field("sharding.mesh", (sa.get("mesh") or {}).get("axes"),
+               (sb.get("mesh") or {}).get("axes"))
+        _field("sharding.digest", sa.get("digest"), sb.get("digest"))
+        na, nb = len(sa.get("steps") or ()), len(sb.get("steps") or ())
+        if na != nb:
+            out.append(f"sharding.steps: {na} != {nb}")
+    return out
+
+
+def main(argv: list[str] | None = None) -> int:
+    """``python -m repro.core.artifact diff A.json B.json``.
+
+    Exit status: 0 = artifacts agree, 1 = they differ (differences on
+    stdout, one per line), 2 = usage or load error.  Stable for CI use:
+    ``python -m repro.core.artifact diff golden.json fresh.json`` guards
+    against silent compiler-decision drift.
+    """
+    import argparse
+
+    parser = argparse.ArgumentParser(
+        prog="python -m repro.core.artifact",
+        description="Inspect and compare CODO artifact files.")
+    sub = parser.add_subparsers(dest="verb", required=True)
+    p_diff = sub.add_parser(
+        "diff", help="compare two artifacts' compiler decisions")
+    p_diff.add_argument("a", help="first artifact JSON")
+    p_diff.add_argument("b", help="second artifact JSON")
+    p_show = sub.add_parser("summary", help="print a one-paragraph summary")
+    p_show.add_argument("a", help="artifact JSON")
+    try:
+        ns = parser.parse_args(argv)
+    except SystemExit as e:
+        return 2 if e.code else 0
+    try:
+        if ns.verb == "summary":
+            print(artifact_summary(ns.a))
+            return 0
+        diffs = diff_artifacts(ns.a, ns.b)
+    except (OSError, ValueError, ArtifactError) as e:
+        print(f"error: {e}", file=sys.stderr)
+        return 2
+    for line in diffs:
+        print(line)
+    if diffs:
+        print(f"{len(diffs)} difference(s)")
+        return 1
+    print("artifacts match")
+    return 0
+
+
+if __name__ == "__main__":  # pragma: no cover - exercised via subprocess
+    sys.exit(main())
+
+
 __all__ = ["SCHEMA_VERSION", "ArtifactError", "ArtifactWarning",
-           "artifact_summary", "artifact_weights", "dumps", "export_artifact",
-           "import_artifact", "sidecar_path", "validate_artifact"]
+           "artifact_summary", "artifact_weights", "diff_artifacts", "dumps",
+           "export_artifact", "import_artifact", "main", "sidecar_path",
+           "validate_artifact"]

@@ -84,17 +84,35 @@ class CodoOptions:
     balance_n: float = 2.0
     hbm_channels: int = 8
     hw: HwParams = V5E
-    # Per-pass wall-time budgets in seconds ({} / None = unenforced).  A
-    # pass exceeding its budget marks its PassRecord over_budget; see
-    # enforce_pass_budgets() and the CLI --enforce-budgets/--strict flags.
-    # Enforcement-only: budgets never change the compiled design, so they
-    # are excluded from cache_key().
-    pass_budgets: dict[str, float] | None = None
+    # Per-pass budgets ({} / None = unenforced).  A bare number is a
+    # wall-time budget in seconds (the original shape); a dict value may
+    # set any of {"seconds": float, "mem_mb": float, "violations": int} —
+    # peak python-allocation delta during the pass (measured via
+    # tracemalloc only when requested) and a cap on the coarse+fine
+    # violations *left* after the pass.  A pass exceeding any dimension
+    # marks its PassRecord over_budget; see enforce_pass_budgets() and the
+    # CLI --enforce-budgets/--strict flags.  Enforcement-only: budgets
+    # never change the compiled design, so they are excluded from
+    # cache_key().
+    pass_budgets: dict[str, float | dict] | None = None
 
     def __post_init__(self):
         if self.pass_budgets is not None:
-            self.pass_budgets = {str(k): float(v)
-                                 for k, v in sorted(dict(self.pass_budgets).items())}
+            norm = {}
+            for k, v in sorted(dict(self.pass_budgets).items()):
+                if isinstance(v, dict):
+                    bad = set(v) - {"seconds", "mem_mb", "violations"}
+                    if bad:
+                        raise ValueError(
+                            f"pass_budgets[{k!r}]: unknown dimension(s) "
+                            f"{sorted(bad)}; allowed: seconds, mem_mb, "
+                            f"violations")
+                    norm[str(k)] = {dk: (int(dv) if dk == "violations"
+                                         else float(dv))
+                                    for dk, dv in sorted(v.items())}
+                else:
+                    norm[str(k)] = float(v)
+            self.pass_budgets = norm
 
     # ---- pass-set presets (Table VII as data) -----------------------------
     def pass_set(self) -> tuple[str, ...]:
@@ -300,7 +318,8 @@ def codo_opt(graph: DataflowGraph, options: CodoOptions | None = None, *,
 
 class PassBudgetError(RuntimeError):
     """Raised by :func:`enforce_pass_budgets` in strict mode when any pass
-    exceeded its time budget."""
+    exceeded a budget dimension (wall time, memory delta, or the
+    remaining-violation cap)."""
 
 
 def enforce_pass_budgets(diagnostics, *, strict: bool = False) -> list[str]:
@@ -699,10 +718,14 @@ def main(argv=None) -> int:
                          "the --jobs worker processes like the configs do)")
     ap.add_argument("--budget", type=int, default=2048,
                     help="scheduler budget units")
-    ap.add_argument("--pass-budget", default="", metavar="PASS=SEC[,...]",
-                    help="per-pass wall-time budgets in seconds, e.g. "
-                         "'schedule=0.5,reuse=0.2'; unlisted passes keep "
-                         "the DEFAULT_PASS_BUDGETS entry")
+    ap.add_argument("--pass-budget", default="",
+                    metavar="PASS=SEC[:MEM_MB[:VIOL]][,...]",
+                    help="per-pass budgets: wall seconds, optional peak "
+                         "python-allocation delta in MB, optional cap on "
+                         "violations left after the pass, e.g. "
+                         "'schedule=0.5,reuse=0.2:64,fine=0.1:32:0'; an "
+                         "empty dimension skips it ('fine=::0'); unlisted "
+                         "passes keep the DEFAULT_PASS_BUDGETS entry")
     ap.add_argument("--enforce-budgets", action="store_true",
                     help="after the grid, warn about every pass execution "
                          "that exceeded its time budget")
@@ -785,9 +808,25 @@ def main(argv=None) -> int:
             pname, _, val = item.partition("=")
             pname = pname.strip()
             if pname not in budgets or not val:
-                ap.error(f"--pass-budget wants PASS=SECONDS with PASS in "
-                         f"{sorted(budgets)}, got {item!r}")
-            budgets[pname] = float(val)
+                ap.error(f"--pass-budget wants PASS=SEC[:MEM_MB[:VIOL]] "
+                         f"with PASS in {sorted(budgets)}, got {item!r}")
+            try:
+                parts = val.split(":")
+                if len(parts) > 3:
+                    raise ValueError("too many ':' dimensions")
+                dims: dict[str, float | int] = {}
+                if parts[0]:
+                    dims["seconds"] = float(parts[0])
+                if len(parts) > 1 and parts[1]:
+                    dims["mem_mb"] = float(parts[1])
+                if len(parts) > 2 and parts[2]:
+                    dims["violations"] = int(parts[2])
+            except ValueError as e:
+                ap.error(f"--pass-budget {item!r}: {e}")
+            if not dims:
+                ap.error(f"--pass-budget {item!r}: every dimension empty")
+            budgets[pname] = (dims["seconds"]
+                              if set(dims) == {"seconds"} else dims)
 
     if args.profile or args.export or args.autotune:
         _register_kernel_patterns()     # routing verbs see the real registry

@@ -455,3 +455,78 @@ def estimate_chain(graph: DataflowGraph, tasks: list[Task],
     win = routed <= generic * (1.0 + params.slack)
     return ChainEstimate(pattern, tuple(t.name for t in tasks),
                          routed, generic, win)
+
+
+# --------------------------------------------------------------------------
+# Sharding: compute-per-shard vs link bytes (ISSUE 9)
+# --------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class ShardingEstimate:
+    """Per-device cost of one sharding candidate: the compute each device
+    actually runs (task latency divided by its shard factor) plus the
+    cycles its collective schedule spends on the inter-chip links."""
+
+    strategy: str
+    compute_cycles: float
+    collective_cycles: float
+    collective_bytes: int
+
+    @property
+    def total_cycles(self) -> float:
+        return self.compute_cycles + self.collective_cycles
+
+
+# Bytes each device moves per payload byte, per collective algorithm
+# (the classic ring-algorithm link factors).
+_LINK_FACTOR = {
+    ("psum", "direct"): 2.0,          # all-reduce: reduce + broadcast
+    ("psum", "rs_ag"): 2.0,           # 2(n-1)/n ~ 2, bandwidth-optimal
+    ("all_gather", "direct"): 1.0,    # (n-1)/n ~ 1
+    ("all_gather", "ring"): 1.0,
+    ("reduce_scatter", "direct"): 1.0,
+    ("ppermute", "direct"): 1.0,
+}
+
+
+def estimate_sharding(graph: DataflowGraph, plan, hw: HwParams = V5E):
+    """Price a :class:`~repro.distributed.plan.ShardingPlan`.
+
+    Compute: every task's single-device latency shrinks by the product of
+    mesh-axis sizes sharding its output (a psum emitted after the task
+    means its contraction was sharded too, so that axis also divides the
+    work).  Collectives: payload bytes x the algorithm's link factor over
+    the ICI bandwidth, expressed in core cycles so the two sides add.
+    """
+    psum_after: dict[str, set] = {}
+    for s in plan.steps:
+        if s.kind == "psum" and s.where == "after":
+            psum_after.setdefault(s.task, set()).add(s.axis)
+
+    compute = 0.0
+    for task in graph.tasks:
+        cost = task_cost(graph, task, hw)
+        axes: set = set(psum_after.get(task.name, set()))
+        for a in task.writes:
+            spec = plan.spec_of(a.buffer, len(graph.buffers[a.buffer].shape))
+            axes.update(d for d in spec.dims if d is not None)
+        factor = 1
+        for ax in axes:
+            factor *= plan.mesh.axis_size(ax)
+        compute += cost.latency / max(factor, 1)
+
+    link_bps = max(hw.ici_bw, 1.0)
+    bytes_per_cycle = link_bps / hw.clock_hz
+    coll = 0.0
+    total_bytes = 0
+    for s in plan.steps:
+        factor = _LINK_FACTOR.get((s.kind, s.via), 1.0)
+        n = plan.mesh.axis_size(s.axis)
+        if n <= 1:
+            continue
+        coll += s.bytes * factor / bytes_per_cycle
+        total_bytes += s.bytes
+    return ShardingEstimate(strategy=plan.strategy, compute_cycles=compute,
+                            collective_cycles=coll,
+                            collective_bytes=total_bytes)

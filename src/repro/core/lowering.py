@@ -195,17 +195,90 @@ def _build_steps(graph: DataflowGraph, groups: list[FusionGroup],
             g.kernel = XLA_FUSED
             g.decision = "generic"
 
-    steps: list[Callable[[dict], dict]] = []
+    steps: list[tuple[str, Callable[[dict], dict]]] = []
     for t in graph.toposort():
         if t.name in skip:
             continue
-        steps.append(step_at.get(t.name, t.fn))
+        steps.append((t.name, step_at.get(t.name, t.fn)))
     return steps
+
+
+def _drop_sharded_routes(groups: list[FusionGroup], sharding) -> None:
+    """Un-route any chain a collective lands inside.  A routed kernel step
+    runs at the chain's *last* task with the interiors skipped, so the
+    only anchor the sharded executor can honor is "after the last task"
+    (the psum on a row-parallel matmul's output).  A gather before any
+    chain task, or a reduction after an interior, would silently never
+    run — fall back to the generic per-task path for that chain."""
+    from repro.distributed import collectives as _coll
+    before, after = _coll.attach(sharding.steps)
+    for g in groups:
+        kept = []
+        for r in g.routes:
+            bad = any(t in before for t in r.tasks) or \
+                any(t in after for t in r.tasks[:-1])
+            if bad:
+                r.decision = "sharded"      # collective inside the chain
+                g.rejected.append(r)
+            else:
+                kept.append(r)
+        if len(kept) != len(g.routes):
+            g.routes = kept
+            g.kernel = ("pallas:" + "+".join(r.kernel for r in kept)
+                        if kept else XLA_FUSED)
+            g.decision = "routed" if kept else "generic"
+
+
+def _sharded_program(graph: DataflowGraph, steps, outputs: list[str],
+                     sharding) -> Callable[[dict], dict]:
+    """Wrap the step list in ``shard_map`` over the plan's mesh.
+
+    Inside the body every env entry is the *local shard* its
+    :class:`ShardSpec` dictates; the plan's collective schedule rewrites
+    scope values before the consumer that needs the full buffer
+    (all_gather) and after the producer that left partial sums
+    (psum / reduce_scatter+all_gather / ppermute ring)."""
+    from repro.distributed import collectives as _coll
+    from repro.distributed.sharding import shard_map
+    from repro.launch.mesh import mesh_from_spec
+
+    before, after = _coll.attach(sharding.steps)
+    emitted = {name for name, _f in steps}
+    missing = [s.task for s in sharding.steps if s.task not in emitted]
+    if missing:        # _drop_sharded_routes guarantees this never fires
+        raise GraphError(
+            f"collective anchored on skipped task(s) {missing}")
+    fns = {id(s): _coll.make_collective(s, sharding.mesh)
+           for s in sharding.steps}
+    in_specs, out_specs = _coll.env_partition_specs(graph, sharding)
+    mesh = mesh_from_spec(sharding.mesh)
+
+    def body(env: dict) -> dict:
+        scope = dict(env)
+        for name, f in steps:
+            for s in before.get(name, ()):
+                scope[s.buffer] = fns[id(s)](scope[s.buffer])
+            scope.update(f(scope))
+            for s in after.get(name, ()):
+                scope[s.buffer] = fns[id(s)](scope[s.buffer])
+        return {k: scope[k] for k in outputs}
+
+    mapped = shard_map(body, mesh=mesh, in_specs=(in_specs,),
+                       out_specs=out_specs, check_vma=False)
+
+    def program(env: dict) -> dict:
+        extra = set(env) - set(in_specs)
+        if extra:
+            raise GraphError(f"sharded program got unexpected env keys "
+                             f"{sorted(extra)}")
+        return mapped(dict(env))
+
+    return program
 
 
 def lower(compiled: CompiledDataflow, jit: bool = True,
           use_registered_kernels: bool = True, *,
-          memo: bool = True) -> LoweredProgram:
+          memo: bool = True, sharding=None) -> LoweredProgram:
     # The compiler — not the user — wires the Pallas kernels in.
     ensure_kernel_patterns()
     graph = compiled.graph
@@ -225,7 +298,8 @@ def lower(compiled: CompiledDataflow, jit: bool = True,
     # registry epoch — flipping any of them must never serve a stale
     # program.
     key = (graph.structural_hash(), bool(jit), bool(use_registered_kernels),
-           pallas_interpret_forced(), *routing_state_key(), _ops_epoch())
+           pallas_interpret_forced(), *routing_state_key(), _ops_epoch(),
+           sharding.digest() if sharding is not None else "")
     if memo:
         with _LOWER_LOCK:
             hit = _LOWER_CACHE.get(key)
@@ -246,6 +320,8 @@ def lower(compiled: CompiledDataflow, jit: bool = True,
     groups = fusion_groups(graph, impl)
     if use_registered_kernels:
         route_groups(graph, groups, impl, hw=compiled.options.hw)
+    if sharding is not None:
+        _drop_sharded_routes(groups, sharding)
     steps = _build_steps(graph, groups, use_registered_kernels)
 
     outputs = [b.name for b in graph.outputs()]
@@ -257,11 +333,14 @@ def lower(compiled: CompiledDataflow, jit: bool = True,
                     if impl.get(b.name) == "pingpong"
                     and b.name not in swallowed]
 
-    def program(env: dict) -> dict:
-        scope = dict(env)
-        for f in steps:
-            scope.update(f(scope))
-        return {k: scope[k] for k in outputs}
+    if sharding is None:
+        def program(env: dict) -> dict:
+            scope = dict(env)
+            for _name, f in steps:
+                scope.update(f(scope))
+            return {k: scope[k] for k in outputs}
+    else:
+        program = _sharded_program(graph, steps, outputs, sharding)
 
     fn = jax.jit(program) if jit else program
     out = LoweredProgram(graph, groups, fn, materialized)
@@ -317,13 +396,39 @@ def oracle_outputs(source_graph: DataflowGraph, env: dict) -> dict:
 
 
 def verify_lowering(source_graph: DataflowGraph, compiled: CompiledDataflow,
-                    env: dict, rtol: float = 1e-5, atol: float = 1e-5) -> None:
-    got = lower(compiled, jit=False)(env)
+                    env: dict, rtol: float = 1e-5, atol: float = 1e-5,
+                    sharding=None) -> None:
+    """Lowered outputs must match the un-optimized oracle.  With a
+    ``sharding`` plan the multi-device lowering is checked instead; the
+    default tolerances absorb the one reassociation a psum introduces
+    (a tree-reduce over device partials vs the serial contraction —
+    everything collective-free stays bit-identical)."""
+    got = lower(compiled, jit=False, sharding=sharding)(env)
     want = oracle_outputs(source_graph, env)
     for k in want:
         np.testing.assert_allclose(np.asarray(got[k]), np.asarray(want[k]),
                                    rtol=rtol, atol=atol,
                                    err_msg=f"output {k} diverged after lowering")
+
+
+def verify_sharding(compiled: CompiledDataflow, sharding, env: dict,
+                    rtol: float = 1e-4, atol: float = 5e-5) -> None:
+    """Assert the sharded lowering matches the single-device lowering on
+    ``env`` within documented fp tolerance.  Two reassociations are
+    expected and bounded, nothing else may differ: a psum tree-reduces
+    device partials where the serial contraction sums in order, and even
+    gather-only plans run matmuls at *local* shapes, where XLA may pick a
+    different (equally valid) contraction order.  Defaults hold the GPT-2
+    block to ~1e-5 on CPU; genuine sharding bugs (wrong shard, missing
+    collective) produce O(1) errors, orders of magnitude past the gate."""
+    single = lower(compiled, jit=False)(env)
+    shard = lower(compiled, jit=False, sharding=sharding)(env)
+    for k in single:
+        np.testing.assert_allclose(
+            np.asarray(shard[k]), np.asarray(single[k]), rtol=rtol,
+            atol=atol,
+            err_msg=f"output {k}: sharded lowering diverged beyond the "
+                    f"fp-reassociation tolerance")
 
 
 def verify_routing(compiled: CompiledDataflow, env: dict,

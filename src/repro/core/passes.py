@@ -28,6 +28,7 @@ from __future__ import annotations
 
 import threading
 import time
+import tracemalloc
 from collections import Counter
 from dataclasses import dataclass, field
 from typing import Any, Callable, Sequence
@@ -75,6 +76,18 @@ class Pass:
         return bool(getattr(options, self.option_flag))
 
 
+def _budget_dims(raw) -> tuple[float, float, int]:
+    """Normalize one ``CodoOptions.pass_budgets`` value to
+    ``(seconds, mem_mb, violations)``.  A bare number is a wall-time
+    budget (the original shape); a dict may set any of ``seconds``,
+    ``mem_mb`` and ``violations``."""
+    if isinstance(raw, dict):
+        return (float(raw.get("seconds", 0.0)),
+                float(raw.get("mem_mb", 0.0)),
+                int(raw.get("violations", -1)))
+    return float(raw or 0.0), 0.0, -1
+
+
 @dataclass
 class PassRecord:
     """Wall time + violation census for one pass execution."""
@@ -88,28 +101,77 @@ class PassRecord:
     rerun: bool = False        # re-execution triggered by an invalidation
     summary: str = ""
     budget: float = 0.0        # per-pass time budget in seconds (0 = none)
+    # Structured budget dimensions (0 / -1 = unenforced).  mem_delta_mb is
+    # the tracemalloc peak-over-entry python allocation during the pass,
+    # measured only when a memory budget was requested (tracing costs
+    # ~2x pass wall time, so it is opt-in per pass).
+    mem_budget_mb: float = 0.0
+    mem_delta_mb: float = 0.0
+    violation_budget: int = -1  # cap on coarse+fine violations LEFT after
+
+    @property
+    def violations_after(self) -> int:
+        """Census total after the pass (-1 when the census was off)."""
+        if self.coarse_after < 0 or self.fine_after < 0:
+            return -1
+        return self.coarse_after + self.fine_after
+
+    @property
+    def over_time(self) -> bool:
+        return self.budget > 0 and self.seconds > self.budget
+
+    @property
+    def over_memory(self) -> bool:
+        return self.mem_budget_mb > 0 and self.mem_delta_mb > self.mem_budget_mb
+
+    @property
+    def over_violations(self) -> bool:
+        return (self.violation_budget >= 0 and self.violations_after >= 0
+                and self.violations_after > self.violation_budget)
 
     @property
     def over_budget(self) -> bool:
-        return self.budget > 0 and self.seconds > self.budget
+        return self.over_time or self.over_memory or self.over_violations
+
+    def budget_problems(self) -> list[str]:
+        """One phrase per exceeded budget dimension (empty = within)."""
+        out = []
+        if self.over_time:
+            out.append(f"took {self.seconds * 1e3:.2f} ms > budget "
+                       f"{self.budget * 1e3:.2f} ms")
+        if self.over_memory:
+            out.append(f"allocated {self.mem_delta_mb:.2f} MB > budget "
+                       f"{self.mem_budget_mb:.2f} MB")
+        if self.over_violations:
+            out.append(f"left {self.violations_after} violation(s) > budget "
+                       f"{self.violation_budget}")
+        return out
 
     def line(self) -> str:
         tag = f"{self.name}*" if self.rerun else self.name
         census = ("" if self.coarse_before < 0 else
                   f"coarse {self.coarse_before:>3d}->{self.coarse_after:<3d} "
                   f"fine {self.fine_before:>3d}->{self.fine_after:<3d}  ")
-        over = (f"  OVER BUDGET ({self.budget * 1e3:.0f} ms)"
+        mem = (f" mem {self.mem_delta_mb:.2f} MB"
+               if self.mem_budget_mb > 0 else "")
+        over = (f"  OVER BUDGET ({'; '.join(self.budget_problems())})"
                 if self.over_budget else "")
         return (f"{tag:<10s} {self.seconds * 1e3:8.2f} ms  "
-                f"{census}{self.summary}{over}")
+                f"{census}{self.summary}{mem}{over}")
 
     def to_dict(self) -> dict:
-        return {"name": self.name, "seconds": self.seconds,
-                "coarse_before": self.coarse_before,
-                "coarse_after": self.coarse_after,
-                "fine_before": self.fine_before, "fine_after": self.fine_after,
-                "rerun": self.rerun, "summary": self.summary,
-                "budget": self.budget}
+        out = {"name": self.name, "seconds": self.seconds,
+               "coarse_before": self.coarse_before,
+               "coarse_after": self.coarse_after,
+               "fine_before": self.fine_before, "fine_after": self.fine_after,
+               "rerun": self.rerun, "summary": self.summary,
+               "budget": self.budget}
+        if self.mem_budget_mb > 0:
+            out["mem_budget_mb"] = self.mem_budget_mb
+            out["mem_delta_mb"] = self.mem_delta_mb
+        if self.violation_budget >= 0:
+            out["violation_budget"] = self.violation_budget
+        return out
 
     @classmethod
     def from_dict(cls, doc: dict) -> "PassRecord":
@@ -120,7 +182,10 @@ class PassRecord:
                    int(doc.get("fine_after", -1)),
                    rerun=bool(doc.get("rerun", False)),
                    summary=doc.get("summary", ""),
-                   budget=float(doc.get("budget", 0.0)))
+                   budget=float(doc.get("budget", 0.0)),
+                   mem_budget_mb=float(doc.get("mem_budget_mb", 0.0)),
+                   mem_delta_mb=float(doc.get("mem_delta_mb", 0.0)),
+                   violation_budget=int(doc.get("violation_budget", -1)))
 
 
 @dataclass
@@ -151,9 +216,10 @@ class CompileDiagnostics:
         return out
 
     def budget_violations(self) -> list[str]:
-        """Human-readable line per pass execution that blew its budget."""
-        return [f"{self.graph}: pass {r.name}{'*' if r.rerun else ''} took "
-                f"{r.seconds * 1e3:.2f} ms > budget {r.budget * 1e3:.2f} ms"
+        """Human-readable line per pass execution that blew any budget
+        dimension (time, memory delta, or remaining-violation count)."""
+        return [f"{self.graph}: pass {r.name}{'*' if r.rerun else ''} "
+                + "; ".join(r.budget_problems())
                 for r in self.records if r.over_budget]
 
     def routed_kernels(self) -> dict[str, str]:
@@ -321,11 +387,26 @@ class PassManager:
     # ---- execution -------------------------------------------------------
     def _execute(self, p: Pass, graph: Any, options: Any, out: Any,
                  records: list[PassRecord], rerun: bool) -> None:
+        budgets = getattr(options, "pass_budgets", None) or {}
+        sec, mem_mb, viol = _budget_dims(budgets.get(p.name, 0.0))
         cb, fb = ((len(coarse_violations(graph)), len(fine_violations(graph)))
                   if self.census else (-1, -1))
+        mem_delta = 0.0
+        trace_mem = mem_mb > 0
+        if trace_mem:
+            was_tracing = tracemalloc.is_tracing()
+            if not was_tracing:
+                tracemalloc.start()
+            tracemalloc.reset_peak()
+            base, _ = tracemalloc.get_traced_memory()
         t0 = time.perf_counter()
         report = p.run(graph, options, out)
         dt = time.perf_counter() - t0
+        if trace_mem:
+            _, peak = tracemalloc.get_traced_memory()
+            mem_delta = max(0.0, (peak - base) / 1e6)
+            if not was_tracing:
+                tracemalloc.stop()
         with _COUNTS_LOCK:
             PASS_RUN_COUNTS[p.name] += 1
         ca, fa = ((len(coarse_violations(graph)), len(fine_violations(graph)))
@@ -337,10 +418,11 @@ class PassManager:
             else:
                 setattr(out, p.result_attr, report)
         summary = report.summary() if hasattr(report, "summary") else ""
-        budgets = getattr(options, "pass_budgets", None) or {}
         records.append(PassRecord(p.name, dt, cb, ca, fb, fa,
                                   rerun=rerun, summary=summary,
-                                  budget=float(budgets.get(p.name, 0.0))))
+                                  budget=sec, mem_budget_mb=mem_mb,
+                                  mem_delta_mb=mem_delta,
+                                  violation_budget=viol))
 
     def run(self, graph: Any, options: Any, out: Any = None) -> CompileDiagnostics:
         t0 = time.perf_counter()

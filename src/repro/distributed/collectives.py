@@ -1,0 +1,158 @@
+"""Lower inter-device edges to typed collectives and execute them.
+
+Two halves, split on the jax boundary:
+
+* **Plan construction** (jax-free): :func:`build_steps` turns the raw
+  events the partitioner emitted into sized
+  :class:`~repro.distributed.plan.CollectiveStep` records.  Buffer sizing
+  reuses the single-device FIFO machinery — a collective stages ``depth``
+  slots (the buffer's FIFO depth) of one ``chunk_bytes`` chunk each, and
+  inherits the HBM channel the off-chip pass balanced the buffer onto.
+  Decomposition choices are made *here*, from byte counts, so an exported
+  plan replays identically:
+
+  - a psum at or above ``CODO_COLLECTIVE_RSAG_BYTES`` becomes
+    reduce_scatter + all_gather (``via="rs_ag"``, the bandwidth-optimal
+    2(n-1)/n bytes-per-link form) when the leading dim splits evenly;
+  - an all_gather at or above ``CODO_COLLECTIVE_RING_BYTES`` becomes a
+    ppermute ring (``via="ring"``): n-1 neighbor hops of one chunk each
+    instead of one n·chunk broadcast.
+
+* **Execution** (imports jax lazily): :func:`make_collective` compiles a
+  step into a ``jax.lax`` closure applied inside ``shard_map``, and
+  :func:`attach` anchors the closures before/after their tasks.
+"""
+
+from __future__ import annotations
+
+import os
+from collections import defaultdict
+
+from repro.distributed.plan import CollectiveStep, MeshSpec, ShardingPlan
+
+__all__ = ["build_steps", "make_collective", "attach",
+            "env_partition_specs"]
+
+_MIB = 1 << 20
+
+
+def _threshold(env: str, default: int) -> int:
+    try:
+        return int(os.environ.get(env, default))
+    except ValueError:
+        return default
+
+
+def _depth(graph, name: str, buffer_plan) -> int:
+    if buffer_plan is not None:
+        d = getattr(buffer_plan, "fifo_depth", {}).get(name)
+        if d:
+            return int(d)
+    from repro.core import buffers as _b
+    return int(_b._fifo_depth(graph, graph.buffers[name]))
+
+
+def build_steps(graph, mesh: MeshSpec, events, *, buffer_plan=None,
+                transfer_plan=None) -> tuple[CollectiveStep, ...]:
+    """Size and type the raw partitioner events into the plan schedule."""
+    ring_at = _threshold("CODO_COLLECTIVE_RING_BYTES", _MIB)
+    rsag_at = _threshold("CODO_COLLECTIVE_RSAG_BYTES", _MIB)
+    channels = getattr(transfer_plan, "channel_of", None) or {}
+    steps = []
+    for ev in events:
+        buf = graph.buffers[ev["buffer"]]
+        n = mesh.axis_size(ev["axis"])
+        if ev["kind"] == "all_gather":
+            # each device contributes its local shard once per link
+            payload = buf.nbytes // n
+            chunk = payload
+            via = "ring" if (payload * (n - 1) >= ring_at and n > 1) \
+                else "direct"
+        elif ev["kind"] == "psum":
+            payload = buf.nbytes
+            chunk = buf.nbytes // n
+            via = "rs_ag" if (payload >= rsag_at and n > 1
+                              and buf.shape and buf.shape[0] % n == 0) \
+                else "direct"
+        else:  # pragma: no cover - partitioner only emits the two above
+            payload = buf.nbytes
+            chunk = buf.nbytes // max(n, 1)
+            via = "direct"
+        steps.append(CollectiveStep(
+            kind=ev["kind"], buffer=ev["buffer"], axis=ev["axis"],
+            task=ev["task"], where=ev["where"], dim=int(ev.get("dim", 0)),
+            bytes=int(payload), chunk_bytes=int(chunk),
+            depth=_depth(graph, ev["buffer"], buffer_plan),
+            channel=int(channels.get(ev["buffer"], -1)), via=via))
+    return tuple(steps)
+
+
+# --------------------------------------------------------------------------
+# execution (lazy jax)
+# --------------------------------------------------------------------------
+
+
+def _ring_all_gather(x, axis_name: str, dim: int, n: int):
+    """All-gather as n-1 ppermute neighbor hops.
+
+    After hop j, the local slot holds the shard of device ``(i - j) mod
+    n``; stacking the slots and reindexing by ``(i - arange(n)) mod n``
+    restores device order before the concat, so the result is
+    bit-identical to ``jax.lax.all_gather(..., tiled=True)``.
+    """
+    import jax
+    import jax.numpy as jnp
+    idx = jax.lax.axis_index(axis_name)
+    perm = [(i, (i + 1) % n) for i in range(n)]
+    chunks = [x]
+    cur = x
+    for _ in range(n - 1):
+        cur = jax.lax.ppermute(cur, axis_name, perm)
+        chunks.append(cur)
+    stacked = jnp.take(jnp.stack(chunks), (idx - jnp.arange(n)) % n, axis=0)
+    stacked = jnp.moveaxis(stacked, 0, dim)
+    shape = x.shape[:dim] + (n * x.shape[dim],) + x.shape[dim + 1:]
+    return stacked.reshape(shape)
+
+
+def make_collective(step: CollectiveStep, mesh: MeshSpec):
+    """Compile one plan step into a ``jax.lax`` closure (local -> local)."""
+    import jax
+    n = mesh.axis_size(step.axis)
+    axis = step.axis
+    if step.kind == "psum":
+        if step.via == "rs_ag" and n > 1:
+            def rs_ag(x):
+                x = jax.lax.psum_scatter(x, axis, scatter_dimension=0,
+                                         tiled=True)
+                return jax.lax.all_gather(x, axis, axis=0, tiled=True)
+            return rs_ag
+        return lambda x: jax.lax.psum(x, axis)
+    if step.kind == "all_gather":
+        dim = step.dim
+        if step.via == "ring" and n > 1:
+            return lambda x: _ring_all_gather(x, axis, dim, n)
+        return lambda x: jax.lax.all_gather(x, axis, axis=dim, tiled=True)
+    raise ValueError(f"cannot execute collective kind {step.kind!r}")
+
+
+def attach(steps):
+    """Index plan steps by schedule anchor: (before[task], after[task])."""
+    before: dict[str, list] = defaultdict(list)
+    after: dict[str, list] = defaultdict(list)
+    for s in steps:
+        (before if s.where == "before" else after)[s.task].append(s)
+    return before, after
+
+
+def env_partition_specs(graph, plan: ShardingPlan):
+    """jax ``PartitionSpec`` dicts for the env pytree: (inputs+weights,
+    outputs) — what ``shard_map`` needs as in_specs/out_specs."""
+    from jax.sharding import PartitionSpec as P
+
+    def spec(buf):
+        return P(*plan.spec_of(buf.name, len(buf.shape)).dims)
+
+    ins = {b.name: spec(b) for b in graph.inputs() + graph.weights()}
+    outs = {b.name: spec(b) for b in graph.outputs()}
+    return ins, outs

@@ -177,10 +177,34 @@ def _param_spec(path: str, shape: tuple[int, ...], mesh: Mesh,
     return spec(*body_specs)
 
 
-def sanitize_spec(spec: P, shape: tuple[int, ...], mesh: Mesh) -> P:
-    """Drop sharding on dims the mesh axes don't divide evenly (pjit input
-    shardings require equal shards; e.g. long_500k's global_batch=1)."""
+class ShardingSpecError(ValueError):
+    """A PartitionSpec names a mesh axis that does not exist or does not
+    divide the dim it shards (raised by :func:`sanitize_spec` in strict
+    mode instead of silently truncating the spec)."""
+
+
+def sanitize_spec(spec: P, shape: tuple[int, ...], mesh: Mesh, *,
+                  strict: bool = True, path: str = "") -> P:
+    """Validate ``spec`` against ``shape`` on ``mesh``.
+
+    Strict (the default): raise :class:`ShardingSpecError` when a named
+    axis is missing from the mesh or does not divide its dim evenly (pjit
+    input shardings require equal shards) — a spec that silently degrades
+    to replicated is a perf cliff, not a preference.
+
+    ``strict=False`` restores the historical best-effort behavior — drop
+    the offending axes and keep the rest — which is what the heuristic
+    rule tables here want (e.g. long_500k's global_batch=1 legitimately
+    turns its batch sharding off).  ``path`` labels errors with the pytree
+    location.
+    """
+    if len(spec) > len(shape):
+        raise ShardingSpecError(
+            f"{path or 'spec'}: PartitionSpec{tuple(spec)} has "
+            f"{len(spec)} entries for shape {tuple(shape)} of rank "
+            f"{len(shape)}")
     out = []
+    where = f" at {path!r}" if path else ""
     for d, entry in enumerate(spec):
         if entry is None:
             out.append(None)
@@ -189,19 +213,43 @@ def sanitize_spec(spec: P, shape: tuple[int, ...], mesh: Mesh) -> P:
         keep = []
         size = shape[d]
         for a in axes:
-            if size % mesh.shape[a] == 0:
+            n = mesh.shape.get(a)
+            if n is None:
+                if strict:
+                    raise ShardingSpecError(
+                        f"spec{where} names mesh axis {a!r} on dim {d}, "
+                        f"but the mesh only has axes "
+                        f"{tuple(mesh.axis_names)}")
+                continue
+            if size % n == 0:
                 keep.append(a)
-                size //= mesh.shape[a]
+                size //= n
+            elif strict:
+                raise ShardingSpecError(
+                    f"spec{where} shards dim {d} (size {shape[d]}) over "
+                    f"mesh axis {a!r} (size {n}), which does not divide "
+                    f"it evenly; pass strict=False to drop the axis "
+                    f"instead")
         out.append(tuple(keep) if len(keep) > 1 else (keep[0] if keep else None))
     return P(*out)
 
 
-def param_specs(params_or_shapes: Any, mesh: Mesh, cfg: ArchConfig) -> Any:
-    """PartitionSpec pytree mirroring the param pytree."""
+def param_specs(params_or_shapes: Any, mesh: Mesh, cfg: ArchConfig, *,
+                strict: bool = False) -> Any:
+    """PartitionSpec pytree mirroring the param pytree.
+
+    The rule table is a placement *preference*, so by default dims the
+    mesh cannot divide fall back to replicated.  ``strict=True`` turns
+    every such fallback into a :class:`ShardingSpecError` naming the
+    parameter — use it in tests/CI to prove a config shards cleanly on a
+    given mesh.
+    """
 
     def rule(path, leaf):
-        spec = _param_spec(_path_str(path), tuple(leaf.shape), mesh, cfg)
-        return sanitize_spec(spec, tuple(leaf.shape), mesh)
+        p = _path_str(path)
+        spec = _param_spec(p, tuple(leaf.shape), mesh, cfg)
+        return sanitize_spec(spec, tuple(leaf.shape), mesh,
+                             strict=strict, path=p)
 
     return jax.tree_util.tree_map_with_path(rule, params_or_shapes)
 
@@ -230,7 +278,8 @@ def batch_specs(batch: Any, mesh: Mesh) -> Any:
         nd = len(leaf.shape)
         if not nd:
             return P()
-        return sanitize_spec(P(dp, *([None] * (nd - 1))), tuple(leaf.shape), mesh)
+        return sanitize_spec(P(dp, *([None] * (nd - 1))), tuple(leaf.shape),
+                             mesh, strict=False)
 
     return jax.tree.map(rule, batch)
 
@@ -275,7 +324,8 @@ def cache_specs(cache: Any, mesh: Mesh, cfg: ArchConfig) -> Any:
             spec = P(*(lead + (dp, "model")))
         else:
             spec = P(*(lead + (dp,) + (None,) * (bn - 1)))
-        return sanitize_spec(spec, tuple(leaf.shape), mesh)
+        return sanitize_spec(spec, tuple(leaf.shape), mesh,
+                             strict=False, path=p)
 
     return jax.tree_util.tree_map_with_path(rule, cache)
 

@@ -152,7 +152,8 @@ def build_cell(arch_name: str, shape_name: str, mesh):
             lambda: tf.init_cache(cfg, shape.global_batch, shape.seq_len))
         cspecs = cache_specs(cache_shapes, mesh, cfg)
         dp = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
-        tok_spec = sanitize_spec(P(dp), (shape.global_batch,), mesh)
+        tok_spec = sanitize_spec(P(dp), (shape.global_batch,), mesh,
+                                 strict=False)
         pshard, tshard, cshard = (as_shardings(x, mesh)
                                   for x in (pspecs, tok_spec, cspecs))
         fn = jax.jit(build_serve_step(cfg),

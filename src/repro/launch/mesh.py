@@ -41,6 +41,29 @@ def make_debug_mesh(shape=(2, 2), axes=("data", "model")) -> Mesh:
     return Mesh(arr, axes)
 
 
+def mesh_from_spec(spec) -> Mesh:
+    """Reconstruct a device mesh from a pure-data
+    :class:`repro.distributed.plan.MeshSpec` (or a jax ``Mesh``, passed
+    through).  This is the only place a :class:`ShardingPlan` touches
+    device state, so an exported plan reloads on any machine with enough
+    devices — CPU CI included."""
+    if isinstance(spec, Mesh):
+        return spec
+    from repro.distributed.plan import MeshSpec
+    spec = MeshSpec.of(spec)
+    devs = jax.devices()
+    if len(devs) < spec.size:
+        raise RuntimeError(
+            f"sharding plan needs {spec.size} devices for mesh "
+            + "x".join(f"{n}:{s}" for n, s in spec.axes)
+            + f", have {len(devs)} — run under XLA_FLAGS="
+            f"--xla_force_host_platform_device_count={spec.size} or on "
+            f"real hardware")
+    shape = tuple(s for _, s in spec.axes)
+    arr = np.asarray(devs[:spec.size]).reshape(shape)
+    return Mesh(arr, spec.names)
+
+
 def dp_axes(mesh: Mesh) -> tuple[str, ...]:
     """The data-parallel axes of a mesh (pod included when present)."""
     return tuple(a for a in mesh.axis_names if a in ("pod", "data"))

@@ -36,14 +36,27 @@ def test_use_mesh_shim_is_context_manager():
         assert float(x.sum()) == 4.0
 
 
-def test_sanitize_spec_drops_undivisible():
+def test_sanitize_spec_drops_undivisible_when_lenient():
     mesh = FakeMesh({"data": 16, "model": 16})
-    assert sanitize_spec(P("data"), (1,), mesh) == P(None)
-    assert sanitize_spec(P("data", "model"), (32, 7), mesh) == P("data", None)
-    assert sanitize_spec(P(("pod", "data"),), (32,),
-                         FakeMesh({"pod": 2, "data": 16})) == P(("pod", "data"))
-    assert sanitize_spec(P(("pod", "data"),), (2,),
-                         FakeMesh({"pod": 2, "data": 16})) == P("pod")
+    s = lambda *a, **k: sanitize_spec(*a, strict=False, **k)  # noqa: E731
+    assert s(P("data"), (1,), mesh) == P(None)
+    assert s(P("data", "model"), (32, 7), mesh) == P("data", None)
+    assert s(P(("pod", "data"),), (32,),
+             FakeMesh({"pod": 2, "data": 16})) == P(("pod", "data"))
+    assert s(P(("pod", "data"),), (2,),
+             FakeMesh({"pod": 2, "data": 16})) == P("pod")
+
+
+def test_sanitize_spec_strict_rejects_undivisible():
+    from repro.distributed.sharding import ShardingSpecError
+    mesh = FakeMesh({"data": 16, "model": 16})
+    with pytest.raises(ShardingSpecError, match="does not divide"):
+        sanitize_spec(P("data", "model"), (32, 7), mesh)
+    with pytest.raises(ShardingSpecError, match="only has axes"):
+        sanitize_spec(P("pod"), (32,), mesh)
+    # a clean spec passes through untouched
+    assert sanitize_spec(P("data", "model"), (32, 32), mesh) \
+        == P("data", "model")
 
 
 def test_param_specs_cover_all_archs():

@@ -1,0 +1,293 @@
+"""Sharded multi-device execution tests.
+
+Two layers:
+
+* in-process, jax-free unit tests of the pure-data subsystem —
+  ``distributed/plan.py`` (MeshSpec/ShardSpec/ShardingPlan), the
+  propagation partitioner, the collective-step builder with its
+  decomposition thresholds, and the cost-model pricing; plus the v1.4
+  artifact plumbing on a single device.
+* one subprocess battery under ``XLA_FLAGS=--xla_force_host_platform_
+  device_count=8`` that lowers the gpt2_block design through
+  ``shard_map`` on a 4x2 mesh and proves every strategy matches the
+  single-device numerics (within the documented fp-reassociation band),
+  including the forced ring / reduce-scatter+all-gather decompositions
+  and the full ``codo.compile(mesh=...) -> export -> codo.load`` round
+  trip.
+"""
+
+import json
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+import pytest
+
+from repro.core.costmodel import estimate_sharding
+from repro.distributed import collectives as coll
+from repro.distributed.partition import PartitionError, partition
+from repro.distributed.plan import (COLLECTIVE_KINDS, MeshSpec, ShardSpec,
+                                    ShardingPlan)
+from repro.models import dataflow_models as dm
+
+SRC = str(Path(__file__).resolve().parents[1] / "src")
+
+MESH42 = MeshSpec((("data", 4), ("model", 2)))
+
+
+# --------------------------------------------------------------------------
+# plan.py (pure data)
+# --------------------------------------------------------------------------
+
+
+def test_mesh_spec_roundtrip_and_validation():
+    assert MESH42.size == 8 and MESH42.names == ("data", "model")
+    assert MeshSpec.from_dict(MESH42.to_dict()) == MESH42
+    with pytest.raises(ValueError):
+        MeshSpec((("data", 2), ("data", 4)))       # duplicate axis
+    with pytest.raises(ValueError):
+        MeshSpec((("data", 0),))                   # non-positive size
+
+
+def test_shard_spec_local_shape_and_validation():
+    s = ShardSpec(("data", None))
+    assert s.shard_factor(MESH42) == 4
+    assert s.local_shape((8, 6), MESH42) == (2, 6)
+    assert ShardSpec((None, None)).is_replicated
+    with pytest.raises(ValueError):
+        ShardSpec(("data", "data"))                # same axis on two dims
+
+
+def test_sharding_plan_digest_is_stable_and_tamper_checked():
+    plan = partition(dm.gpt2_block(32, 64), MESH42, "dp")
+    again = partition(dm.gpt2_block(32, 64), MESH42, "dp")
+    assert plan.digest() == again.digest()
+    doc = plan.to_dict()
+    assert ShardingPlan.from_dict(doc).digest() == plan.digest()
+    doc["strategy"] = "tp"                         # tamper
+    with pytest.raises(ValueError, match="digest"):
+        ShardingPlan.from_dict(doc)
+
+
+# --------------------------------------------------------------------------
+# partition.py + collectives.py (jax-free)
+# --------------------------------------------------------------------------
+
+
+def test_partition_strategies_have_expected_collectives():
+    g = dm.gpt2_block(32, 64)
+    dp = partition(g, MESH42, "dp")
+    tp = partition(g, MESH42, "tp")
+    both = partition(g, MESH42, "dp_tp")
+    assert {s.kind for s in dp.steps} <= {"all_gather"}
+    assert any(s.kind == "psum" for s in tp.steps)
+    assert len(both.steps) >= max(len(dp.steps), len(tp.steps))
+    for plan in (dp, tp, both):
+        assert all(s.kind in COLLECTIVE_KINDS for s in plan.steps)
+        assert plan.collective_bytes > 0
+
+
+def test_partition_auto_picks_cheapest_candidate():
+    g = dm.gpt2_block(32, 64)
+    auto = partition(g, MESH42, "auto")
+    cands = [partition(g, MESH42, s)
+             for s in ("replicate", "dp", "tp", "dp_tp")]
+    assert auto.estimated_cycles == min(c.estimated_cycles for c in cands)
+
+
+def test_partition_rejects_bad_inputs():
+    g = dm.gpt2_block(32, 64)
+    with pytest.raises(PartitionError, match="unknown strategy"):
+        partition(g, MESH42, "nope")
+    with pytest.raises(PartitionError, match="tensor axis"):
+        partition(g, MeshSpec((("data", 8),)), "tp")
+
+
+def test_estimate_sharding_prices_compute_vs_links():
+    g = dm.gpt2_block(32, 64)
+    rep = estimate_sharding(g, partition(g, MESH42, "replicate"))
+    both = estimate_sharding(g, partition(g, MESH42, "dp_tp"))
+    assert rep.collective_cycles == 0
+    assert both.collective_cycles > 0
+    assert both.compute_cycles < rep.compute_cycles
+    assert both.total_cycles < rep.total_cycles
+
+
+def test_collective_decomposition_thresholds(monkeypatch):
+    g = dm.gpt2_block(32, 64)
+    direct = partition(g, MESH42, "dp_tp")
+    assert {s.via for s in direct.steps} == {"direct"}   # small payloads
+    monkeypatch.setenv("CODO_COLLECTIVE_RING_BYTES", "0")
+    monkeypatch.setenv("CODO_COLLECTIVE_RSAG_BYTES", "0")
+    forced = partition(g, MESH42, "dp_tp")
+    vias = {(s.kind, s.via) for s in forced.steps}
+    assert ("all_gather", "ring") in vias
+    assert ("psum", "rs_ag") in vias
+    # decomposition is recorded in the digest: different plan identity
+    assert forced.digest() != direct.digest()
+
+
+def test_collective_steps_carry_fifo_depth_and_bytes():
+    g = dm.gpt2_block(32, 64)
+    plan = partition(g, MESH42, "dp_tp")
+    for s in plan.steps:
+        assert s.bytes > 0 and s.depth >= 1
+        if s.kind == "psum":
+            assert s.chunk_bytes == s.bytes // MESH42.axis_size(s.axis)
+
+
+# --------------------------------------------------------------------------
+# artifact v1.4 plumbing (single device)
+# --------------------------------------------------------------------------
+
+
+def test_artifact_sharding_section_roundtrip(tmp_path):
+    from repro import api as codo
+    from repro.core.artifact import (diff_artifacts, import_artifact,
+                                     validate_artifact)
+    prog = codo.compile(dm.gpt2_block(32, 64))
+    plan = partition(prog.compiled, MESH42, "dp_tp")
+    prog._sharding = plan
+    path = tmp_path / "sharded.json"
+    prog.export(str(path))
+    doc = json.loads(path.read_text())
+    assert doc["schema_version"] == "1.4"
+    assert doc["sharding"]["strategy"] == "dp_tp"
+    assert validate_artifact(doc) == []
+    back = import_artifact(str(path))
+    assert back.sharding_plan.digest() == plan.digest()
+
+    plain = tmp_path / "plain.json"
+    prog._sharding = None
+    prog.export(str(plain))
+    diffs = diff_artifacts(str(path), str(plain))
+    assert any("sharding" in d for d in diffs)
+
+
+def test_artifact_rejects_corrupt_sharding_section(tmp_path):
+    from repro import api as codo
+    from repro.core.artifact import ArtifactError, validate_artifact
+    prog = codo.compile(dm.gpt2_block(32, 64))
+    prog._sharding = partition(prog.compiled, MESH42, "dp")
+    path = tmp_path / "a.json"
+    prog.export(str(path))
+    doc = json.loads(path.read_text())
+    doc["sharding"]["specs"]["no_such_buffer"] = {"dims": ["data"]}
+    with pytest.raises(ArtifactError, match="no_such_buffer"):
+        validate_artifact(doc)
+
+
+# --------------------------------------------------------------------------
+# multi-device battery (subprocess: 8 host devices)
+# --------------------------------------------------------------------------
+
+MULTIDEV = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import json, sys
+    sys.path.insert(0, {src!r})
+    import numpy as np
+    import jax
+
+    from repro import api as codo
+    from repro.core.lowering import verify_sharding
+    from repro.distributed.partition import partition
+    from repro.launch.mesh import make_debug_mesh
+    from repro.models import dataflow_models as dm
+
+    out = {{}}
+    S, D = 64, 128
+    graph = dm.gpt2_block(S, D)
+    mesh = make_debug_mesh((4, 2), ("data", "model"))
+    prog = codo.compile(graph)
+    rng = np.random.default_rng(0)
+    args = {{n: rng.standard_normal(
+        tuple(graph.buffers[n].shape)).astype("float32")
+        for n in prog.input_names}}
+    env = prog.make_env(**args)
+
+    # 1) every strategy matches single-device numerics
+    strat_out = {{}}
+    for strat in ("replicate", "dp", "tp", "dp_tp", "auto"):
+        plan = partition(prog.compiled, mesh, strat)
+        verify_sharding(prog.compiled, plan, dict(env))
+        strat_out[strat] = {{
+            "resolved": plan.strategy,
+            "kinds": sorted(set(s.kind for s in plan.steps)),
+            "est": plan.estimated_cycles,
+        }}
+    out["strategies"] = strat_out
+
+    # 2) forced ring + rs_ag decompositions still verify
+    os.environ["CODO_COLLECTIVE_RING_BYTES"] = "0"
+    os.environ["CODO_COLLECTIVE_RSAG_BYTES"] = "0"
+    forced = partition(prog.compiled, mesh, "dp_tp")
+    out["forced_vias"] = sorted(set((s.kind, s.via) for s in forced.steps))
+    verify_sharding(prog.compiled, forced, dict(env))
+    del os.environ["CODO_COLLECTIVE_RING_BYTES"]
+    del os.environ["CODO_COLLECTIVE_RSAG_BYTES"]
+
+    # 3) full api path: compile(mesh=...) -> verify -> export -> load
+    sh = codo.compile(graph, mesh=mesh)
+    out["api_strategy"] = sh.sharding.strategy
+    sh.verify(**args)
+    low_sh = sh.lower(jit=True)
+    out["lower_memoized"] = low_sh is sh.lower(jit=True)
+    y_sh = low_sh(sh.make_env(**args))
+    y_1 = prog.lower(jit=True)(prog.make_env(**args))
+    errs = [float(np.abs(np.asarray(y_sh[k]) - np.asarray(y_1[k])).max())
+            for k in y_1]
+    out["jit_max_abs_err"] = max(errs)
+
+    path = "sharded_artifact.json"
+    sh.export(path, weights={{n: env[n] for n in env
+                             if graph.buffers[n].kind == "weight"}})
+    back = codo.load(path)
+    out["loaded_digest_match"] = (back.sharding.digest()
+                                  == sh.sharding.digest())
+    out["schema"] = json.load(open(path))["schema_version"]
+
+    print("RESULT" + json.dumps(out))
+""")
+
+
+@pytest.fixture(scope="module")
+def sharded_results(tmp_path_factory):
+    script = MULTIDEV.format(src=SRC)
+    proc = subprocess.run([sys.executable, "-c", script],
+                          capture_output=True, text=True, timeout=600,
+                          cwd=tmp_path_factory.mktemp("sharding"))
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    line = [l for l in proc.stdout.splitlines()
+            if l.startswith("RESULT")][-1]
+    return json.loads(line[len("RESULT"):])
+
+
+def test_all_strategies_match_single_device(sharded_results):
+    st = sharded_results["strategies"]
+    assert set(st) == {"replicate", "dp", "tp", "dp_tp", "auto"}
+    assert st["dp"]["kinds"] in ([], ["all_gather"])
+    assert "psum" in st["tp"]["kinds"]
+    # auto resolved to a named candidate with the lowest estimate
+    named = {k: v["est"] for k, v in st.items() if k != "auto"}
+    assert st["auto"]["resolved"] in named
+    assert st["auto"]["est"] == min(named.values())
+
+
+def test_forced_decompositions_verify(sharded_results):
+    vias = [tuple(v) for v in sharded_results["forced_vias"]]
+    assert ("all_gather", "ring") in vias
+    assert ("psum", "rs_ag") in vias
+
+
+def test_api_sharded_jit_matches_single_device(sharded_results):
+    assert sharded_results["jit_max_abs_err"] < 5e-4
+    assert sharded_results["lower_memoized"]
+
+
+def test_sharding_plan_survives_export_load(sharded_results):
+    assert sharded_results["schema"] == "1.4"
+    assert sharded_results["loaded_digest_match"]
+    assert sharded_results["api_strategy"] in ("replicate", "dp", "tp",
+                                               "dp_tp")

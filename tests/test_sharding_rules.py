@@ -1,0 +1,141 @@
+"""Direct unit tests for repro.distributed.sharding — the rule tables and
+spec sanitizer (strict + lenient contracts), independent of any model."""
+
+import jax
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import get_config
+from repro.distributed.sharding import (ShardingSpecError, batch_specs,
+                                        cache_specs, param_specs,
+                                        sanitize_spec, shard_hint)
+
+
+class FakeMesh:
+    def __init__(self, shape):
+        self.shape = shape
+        self.axis_names = tuple(shape)
+
+
+MESH = FakeMesh({"data": 4, "model": 2})
+CFG = get_config("gpt2-medium").smoke()
+
+
+def sds(*shape):
+    return jax.ShapeDtypeStruct(tuple(shape), np.float32)
+
+
+# --------------------------------------------------------------------------
+# sanitize_spec
+# --------------------------------------------------------------------------
+
+
+def test_strict_is_the_default_and_rejects():
+    with pytest.raises(ShardingSpecError, match="does not divide"):
+        sanitize_spec(P("model"), (7,), MESH)
+
+
+def test_strict_error_names_the_path():
+    with pytest.raises(ShardingSpecError, match="embed/tok"):
+        sanitize_spec(P("model"), (7,), MESH, path="embed/tok")
+
+
+def test_strict_rejects_unknown_axis():
+    with pytest.raises(ShardingSpecError, match="only has axes"):
+        sanitize_spec(P("pod"), (8,), MESH)
+
+
+def test_rank_mismatch_rejected_in_both_modes():
+    with pytest.raises(ShardingSpecError, match="rank"):
+        sanitize_spec(P("data", None, None), (8, 8), MESH)
+    with pytest.raises(ShardingSpecError, match="rank"):
+        sanitize_spec(P("data", None, None), (8, 8), MESH, strict=False)
+
+
+def test_lenient_drops_only_the_offending_axis():
+    assert sanitize_spec(P("data", "model"), (8, 7), MESH,
+                         strict=False) == P("data", None)
+    assert sanitize_spec(P("pod", "model"), (8, 8), MESH,
+                         strict=False) == P(None, "model")
+
+
+def test_lenient_tuple_entry_keeps_dividing_prefix():
+    mesh = FakeMesh({"pod": 2, "data": 4})
+    assert sanitize_spec(P(("pod", "data"),), (8,), mesh,
+                         strict=False) == P(("pod", "data"))
+    assert sanitize_spec(P(("pod", "data"),), (2,), mesh,
+                         strict=False) == P("pod")
+
+
+def test_clean_spec_passes_through_strict():
+    assert sanitize_spec(P("data", "model"), (8, 8), MESH) \
+        == P("data", "model")
+    assert sanitize_spec(P(None, None), (3, 5), MESH) == P(None, None)
+
+
+# --------------------------------------------------------------------------
+# param_specs (rule table + strictness plumbing)
+# --------------------------------------------------------------------------
+
+
+def test_param_rule_table_megatron_pairing():
+    # stacked group leaves carry a leading layer dim
+    tree = {"groups": {"b0_attn": {
+        "wq": {"w": sds(2, 64, 64)}, "wo": {"w": sds(2, 64, 64)},
+        "mlp": {"w_in": {"w": sds(2, 64, 128)},
+                "w_out": {"w": sds(2, 128, 64)}},
+    }}}
+    specs = param_specs(tree, MESH, CFG)
+    g = specs["groups"]["b0_attn"]
+    # column-parallel in, row-parallel out (leading stacked dim unsharded)
+    assert g["wq"]["w"] == P(None, "data", "model")
+    assert g["wo"]["w"] == P(None, "model", "data")
+    assert g["mlp"]["w_in"]["w"] == P(None, "data", "model")
+    assert g["mlp"]["w_out"]["w"] == P(None, "model", "data")
+
+
+def test_param_specs_lenient_by_default_replicates_undivisible():
+    tree = {"embed": {"tok": sds(7, 64)}}   # 7 not divisible by model=2
+    specs = param_specs(tree, MESH, CFG)
+    assert specs["embed"]["tok"] == P(None, "data")
+
+
+def test_param_specs_strict_raises_with_param_path():
+    tree = {"embed": {"tok": sds(7, 64)}}
+    with pytest.raises(ShardingSpecError, match="embed/tok"):
+        param_specs(tree, MESH, CFG, strict=True)
+
+
+def test_param_specs_strict_passes_on_clean_shapes():
+    from repro.models import transformer as tf
+    mesh = FakeMesh({"data": 1, "model": 1})  # axis size 1 divides anything
+    shapes = tf.param_shapes(CFG)
+    specs = param_specs(shapes, mesh, CFG, strict=True)
+    assert jax.tree.leaves(specs, is_leaf=lambda x: isinstance(x, P))
+
+
+# --------------------------------------------------------------------------
+# batch / cache rule tables
+# --------------------------------------------------------------------------
+
+
+def test_batch_specs_shard_leading_dim_only():
+    specs = batch_specs({"tokens": sds(8, 16), "scalar": sds()}, MESH)
+    assert specs["tokens"] == P("data", None)
+    assert specs["scalar"] == P()
+
+
+def test_cache_specs_head_divisibility_switch():
+    # kv heads divisible by model -> heads sharded; else sequence sharded
+    kv_ok = {"groups": {"b0_attn": {"k": sds(2, 8, 32, 2, 16)}}}
+    kv_odd = {"groups": {"b0_attn": {"k": sds(2, 8, 32, 3, 16)}}}
+    ok = cache_specs(kv_ok, MESH, CFG)["groups"]["b0_attn"]["k"]
+    odd = cache_specs(kv_odd, MESH, CFG)["groups"]["b0_attn"]["k"]
+    assert ok == P(None, "data", None, "model", None)
+    assert odd == P(None, "data", "model", None, None)
+
+
+def test_shard_hint_is_identity_outside_mesh():
+    x = np.ones((4, 4), np.float32)
+    assert shard_hint(x, "data", None) is x
