@@ -19,7 +19,7 @@ from pathlib import Path
 sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
 
 from benchmarks import (roofline, routing_bench, serving_bench,  # noqa: E402
-                        sharding_bench, tables)
+                        sharding_bench, tables, train_bench)
 
 OUT = Path(__file__).resolve().parents[1] / "results" / "bench"
 
@@ -42,6 +42,9 @@ SUITES = {
     # per-device-count sharded scaling on gpt2_medium; also writes
     # results/bench/sharding.json (uploaded by the sharding-smoke CI job)
     "sharding": sharding_bench.sharding_rows,
+    # compiled-vs-plain-jit training step time (graph-level autodiff); also
+    # writes results/bench/training.json (uploaded by the training-smoke job)
+    "training": train_bench.training_rows,
 }
 
 

@@ -1,0 +1,182 @@
+"""Training-step benchmark: pipeline-compiled vs plain-jit step time.
+
+Drives the graph-level-autodiff :class:`repro.api.CompiledTrainStep` on
+the ``gpt2_block_loss`` workload and measures one full training step —
+forward + backward + AdamW update — against the plain-jit reference
+(``jax.value_and_grad`` of the traced loss graph's oracle execution plus
+``training.optimizer.adamw_update``, one fused jit).  Both paths compute
+the same numbers (checked before timing, within the documented fp band);
+the comparison isolates what the pass pipeline's fusion/routing buys or
+costs on this backend.  Writes the machine-readable document the nightly
+CI job uploads::
+
+    results/bench/training.json
+
+CLI (the CI ``training-smoke`` job runs ``--quick``)::
+
+    PYTHONPATH=src python -m benchmarks.train_bench --quick
+    PYTHONPATH=src python -m benchmarks.train_bench       # full-size block
+
+``--quick`` shrinks the block (S=32, D=64) and the step counts for PR
+latency; the full run uses the paper-scale GPT-2 block (S=128, D=1024).
+``--max-ratio X`` exits 1 if compiled/jit step time exceeds X (CI
+regression gate; 0 disables).
+
+The suite is also registered in ``benchmarks.run`` as ``training`` (quick
+mode), so the nightly ``--json`` collection carries its rows.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import statistics
+import sys
+import time
+from pathlib import Path
+
+OUT = Path(__file__).resolve().parents[1] / "results" / "bench"
+
+
+def _time_steps(fn, n: int, warmup: int) -> dict:
+    for _ in range(warmup):
+        fn()
+    times = []
+    for _ in range(n):
+        t0 = time.perf_counter()
+        fn()
+        times.append(time.perf_counter() - t0)
+    return {
+        "steps": n,
+        "mean_ms": round(statistics.fmean(times) * 1e3, 4),
+        "min_ms": round(min(times) * 1e3, 4),
+        "p50_ms": round(sorted(times)[len(times) // 2] * 1e3, 4),
+    }
+
+
+def run_bench(*, quick: bool = False, steps: int | None = None,
+              seed: int = 0) -> dict:
+    """One measured comparison; returns the ``training.json`` document."""
+    import jax
+    import numpy as np
+
+    from repro import api as codo
+    from repro.kernels import register_all
+    from repro.models.dataflow_models import gpt2_block_loss_fn
+    from repro.training.optimizer import OptConfig, adamw_init, adamw_update
+
+    register_all()
+    S, D = (32, 64) if quick else (128, 1024)
+    if steps is None:
+        steps = 5 if quick else 10
+    warmup = 2
+
+    step = codo.compile(gpt2_block_loss_fn, (S, D), (S, D), grad=True,
+                        name="gpt2_block_loss")
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal((S, D)).astype(np.float32)
+    target = rng.standard_normal((S, D)).astype(np.float32)
+    params = step.init_params()
+    opt_state = step.init_opt_state(params)
+
+    # -- plain-jit reference: one fused value_and_grad + update ------------
+    oc = OptConfig()
+    src, g = step.source, step.graphs
+
+    def loss_of(ps, bx, bt):
+        return src.execute({"x": bx, "target": bt, **ps})[g.loss].reshape(())
+
+    @jax.jit
+    def jit_step(ps, st, bx, bt):
+        loss, grads = jax.value_and_grad(loss_of)(ps, bx, bt)
+        ps, st, metrics = adamw_update(grads, st, ps, oc)
+        metrics["loss"] = loss
+        return ps, st, metrics
+
+    # Parity before timing: both paths must produce the same step.
+    jp, js, jm = jax.block_until_ready(
+        jit_step(params, adamw_init(params), x, target))
+    cp, cs, cm = step.step(params, opt_state, x, target)
+    np.testing.assert_allclose(float(cm["loss"]), float(jm["loss"]),
+                               rtol=1e-5, atol=1e-6)
+    for w in step.param_names:
+        np.testing.assert_allclose(np.asarray(cp[w]), np.asarray(jp[w]),
+                                   rtol=2e-3, atol=1e-4,
+                                   err_msg=f"post-update {w} diverged")
+
+    # -- timed loops (state held fixed so every step does the same work) --
+    compiled = _time_steps(
+        lambda: jax.block_until_ready(
+            step.step(params, opt_state, x, target)[2]["loss"]),
+        steps, warmup)
+    st0 = adamw_init(params)
+    jit = _time_steps(
+        lambda: jax.block_until_ready(jit_step(params, st0, x, target)[2]),
+        steps, warmup)
+
+    return {
+        "workload": f"gpt2_block_loss(S={S},D={D})",
+        "backend": jax.default_backend(),
+        "quick": quick,
+        "params": len(step.param_names),
+        "compiled": compiled,
+        "plain_jit": jit,
+        "ratio": round(compiled["mean_ms"] / max(jit["mean_ms"], 1e-9), 3),
+        "backward_tasks": len(step.backward.compiled.graph.tasks),
+    }
+
+
+def training_rows():
+    """The ``benchmarks.run`` suite entry: quick-mode rows + training.json."""
+    from benchmarks.tables import Row
+    doc = run_bench(quick=True)
+    OUT.mkdir(parents=True, exist_ok=True)
+    (OUT / "training.json").write_text(
+        json.dumps(doc, indent=2, sort_keys=True) + "\n")
+    return [
+        Row("training/compiled_ms", doc["compiled"]["mean_ms"],
+            f"min_ms={doc['compiled']['min_ms']}"),
+        Row("training/plain_jit_ms", doc["plain_jit"]["mean_ms"],
+            f"min_ms={doc['plain_jit']['min_ms']}"),
+        Row("training/ratio", doc["ratio"],
+            f"{doc['workload']};backend={doc['backend']}"),
+    ]
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="Compiled-vs-plain-jit training step time.")
+    ap.add_argument("--quick", action="store_true",
+                    help="small block + fewer steps (PR/CI latency)")
+    ap.add_argument("--steps", type=int, default=0,
+                    help="timed steps (0 = scaled from --quick)")
+    ap.add_argument("--json", default=str(OUT / "training.json"),
+                    metavar="PATH", help="output document path")
+    ap.add_argument("--max-ratio", type=float, default=0.0,
+                    help="exit 1 if compiled/jit step time exceeds this "
+                         "(CI regression gate; 0 disables)")
+    args = ap.parse_args(argv)
+
+    doc = run_bench(quick=args.quick, steps=args.steps or None)
+    path = Path(args.json)
+    path.parent.mkdir(parents=True, exist_ok=True)
+    path.write_text(json.dumps(doc, indent=2, sort_keys=True) + "\n")
+
+    comp, jit = doc["compiled"], doc["plain_jit"]
+    print(f"train_bench {doc['workload']} [{doc['backend']}] "
+          f"params={doc['params']} bwd_tasks={doc['backward_tasks']}")
+    print(f"  compiled:  {comp['mean_ms']:.2f} ms/step "
+          f"(min {comp['min_ms']:.2f})")
+    print(f"  plain-jit: {jit['mean_ms']:.2f} ms/step "
+          f"(min {jit['min_ms']:.2f})")
+    print(f"  compiled-vs-jit ratio={doc['ratio']:.2f}")
+    print(f"wrote {path}", file=sys.stderr)
+    if args.max_ratio and doc["ratio"] > args.max_ratio:
+        print(f"FAIL: ratio {doc['ratio']:.2f} > "
+              f"--max-ratio {args.max_ratio}", file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

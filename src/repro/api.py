@@ -79,10 +79,12 @@ class CompiledProgram:
         self.compiled = compiled
         self.input_names = list(input_names)
         self.output_names = list(output_names)
+        self.origin: str | None = None        # trace provenance (v1.5)
         self._bindings: dict[str, Any] = {}
         self._lowered = None
         self._lowered_key = None
         self._sharding = None
+        self._provenance: dict | None = None
 
     # ---- introspection ---------------------------------------------------
     @property
@@ -277,7 +279,12 @@ class CompiledProgram:
 
         A sharded program additionally writes its :class:`ShardingPlan`
         into the v1.4 ``sharding`` section, so ``codo.load`` reproduces
-        the multi-device program on any host with enough devices."""
+        the multi-device program on any host with enough devices.
+
+        v1.5 artifacts also carry a ``provenance`` section — the
+        *pre-pass* source graph's structural hash plus the trace origin —
+        so ``artifact diff`` can tell "same source, different pipeline"
+        from "different source"."""
         from repro.core.artifact import export_artifact  # lazy
         if weights is True:
             weights = {b.name: (self._bindings.get(b.name)
@@ -286,7 +293,26 @@ class CompiledProgram:
                        for b in self.graph.weights()}
         return export_artifact(self.compiled, path, weights=weights,
                                weights_sidecar=sidecar,
-                               sharding=self._sharding)
+                               sharding=self._sharding,
+                               provenance=self.provenance())
+
+    def provenance(self) -> dict:
+        """The v1.5 ``provenance`` section: pre-pass source structural hash
+        plus trace origin.  Loaded programs return the section stored in
+        their artifact (the post-pass graph is not the source)."""
+        if self._provenance is not None:
+            return dict(self._provenance)
+        return {"source_structural_hash": self.source.structural_hash(),
+                "origin": self.origin or f"graph:{self.source.name}"}
+
+    # ---- autodiff --------------------------------------------------------
+    def value_and_grad(self, *, opt=None, wrt=None) -> "CompiledTrainStep":
+        """Differentiate this program's source graph and compile the
+        forward/backward/update triple through the same pass pipeline —
+        the method form of ``codo.compile(fn, ..., grad=True)``."""
+        step = _compile_train_step(self.source, options=self.compiled.options,
+                                   opt=opt, wrt=wrt, origin=self.origin)
+        return step
 
 
 def _io_from_graph(graph: DataflowGraph) -> tuple[list[str], list[str]]:
@@ -294,10 +320,200 @@ def _io_from_graph(graph: DataflowGraph) -> tuple[list[str], list[str]]:
             [b.name for b in graph.outputs()])
 
 
+class CompiledTrainStep:
+    """A training step compiled end-to-end through the pass pipeline.
+
+    Three linked :class:`CompiledProgram`\\ s — ``forward`` (loss +
+    residuals), ``backward`` (cotangent walk, built by
+    :mod:`repro.core.autodiff`), ``update`` (AdamW + global-norm clip +
+    warmup-cosine schedule as registry ops) — each individually traced
+    through fusion, fine-violation elimination, cost-gated kernel routing
+    and the compile cache.  The backward graph's matmul→gradient-epilogue
+    chains route to the ``streamfuse.mmgrad`` kernel when the cost gate
+    approves (or under ``CODO_FORCE_PALLAS=1``).
+
+    Numerical contract (the documented fp band, see docs/autodiff.md):
+    against eager ``jax.grad`` + ``training.optimizer.adamw_update`` the
+    compiled loss is bit-exact, gradients match within
+    ``rtol=2e-3, atol=1e-4`` (fp32 reassociation across contractions),
+    and the update math *given identical gradients* is bit-tight
+    (observed ≤3e-8).
+    """
+
+    def __init__(self, source: DataflowGraph, graphs,
+                 forward: CompiledProgram, backward: CompiledProgram,
+                 update: CompiledProgram):
+        self.source = source            # pre-pass loss graph (the oracle)
+        self.graphs = graphs            # core.autodiff.TrainGraphs
+        self.forward = forward
+        self.backward = backward
+        self.update = update
+        self.input_names = [b.name for b in source.inputs()]
+        self.param_names = list(graphs.params)
+        self.origin: str | None = None
+        self._provenance: dict | None = None
+        self._initial_params: dict | None = None   # artifact-carried weights
+
+    # ---- state -----------------------------------------------------------
+    def init_params(self) -> dict:
+        """Deterministic initial parameters (shape-keyed ``weight_init``),
+        or the weight payload carried by the artifact this step was loaded
+        from."""
+        if self._initial_params is not None:
+            return dict(self._initial_params)
+        return {b.name: frontend.weight_init(b.shape, b.dtype)
+                for b in self.source.weights()
+                if b.name in set(self.param_names)}
+
+    def init_opt_state(self, params: dict | None = None) -> dict:
+        """Fresh AdamW state in ``training.optimizer`` checkpoint format:
+        ``{"m": {...}, "v": {...}, "step": int32 scalar}``."""
+        params = params if params is not None else self.init_params()
+        return {"m": {w: np.zeros(np.shape(params[w]), np.float32)
+                      for w in self.param_names},
+                "v": {w: np.zeros(np.shape(params[w]), np.float32)
+                      for w in self.param_names},
+                "step": np.zeros((), np.int32)}
+
+    # ---- execution -------------------------------------------------------
+    def value_and_grad(self, *arrays, params: dict | None = None,
+                       jit: bool = True, **named):
+        """Run the compiled forward + backward graphs; returns
+        ``(loss, grads)`` with ``grads`` keyed by parameter name."""
+        g = self.graphs
+        params = dict(params) if params is not None else self.init_params()
+        fenv = self.forward.make_env(*arrays, **params, **named)
+        fouts = self.forward.lower(jit=jit)(fenv)
+        benv = {g.seeds[g.loss]: np.ones((1, 1), np.float32)}
+        for r in g.residuals:
+            benv[r] = fouts[r] if r in fouts else fenv[r]
+        bouts = self.backward.lower(jit=jit)(benv)
+        grads = {w: bouts[g.grads[w]] for w in self.param_names}
+        return fouts[g.loss], grads
+
+    def step(self, params: dict, opt_state: dict, *arrays,
+             jit: bool = True, **named):
+        """One full training step: forward, backward, AdamW update.
+        Returns ``(new_params, new_opt_state, metrics)`` where metrics
+        carries scalar ``loss``, ``grad_norm`` and ``lr``."""
+        loss, grads = self.value_and_grad(*arrays, params=params, jit=jit,
+                                          **named)
+        uenv = {"step": np.asarray(opt_state["step"],
+                                   np.float32).reshape(1, 1)}
+        for w in self.param_names:
+            uenv[w] = params[w]
+            uenv[f"grad_{w}"] = grads[w]
+            uenv[f"m_{w}"] = opt_state["m"][w]
+            uenv[f"v_{w}"] = opt_state["v"][w]
+        uouts = self.update.lower(jit=jit)(uenv)
+        new_params = {w: uouts[f"new_{w}"] for w in self.param_names}
+        new_state = {"m": {w: uouts[f"new_m_{w}"] for w in self.param_names},
+                     "v": {w: uouts[f"new_v_{w}"] for w in self.param_names},
+                     "step": np.asarray(uouts["new_step"],
+                                        np.float32).reshape(()).astype(np.int32)}
+        metrics = {"loss": np.asarray(loss).reshape(()),
+                   "grad_norm": np.asarray(uouts["grad_norm"]).reshape(()),
+                   "lr": np.asarray(uouts["lr"]).reshape(())}
+        return new_params, new_state, metrics
+
+    def verify(self, *arrays, params: dict | None = None,
+               rtol: float = 2e-3, atol: float = 1e-4, **named):
+        """Check compiled loss + gradients against eager ``jax.grad`` of
+        the source graph on these inputs, within the documented fp band."""
+        import jax  # lazy
+        g = self.graphs
+        params = dict(params) if params is not None else self.init_params()
+        loss, grads = self.value_and_grad(*arrays, params=params, **named)
+        base = dict(zip(self.input_names, arrays))
+        base.update(named)
+
+        def loss_fn(ps):
+            return self.source.execute({**base, **ps})[g.loss].reshape(())
+
+        ref_loss, ref_grads = jax.value_and_grad(loss_fn)(params)
+        np.testing.assert_allclose(
+            np.asarray(loss).reshape(()), np.asarray(ref_loss),
+            rtol=rtol, atol=atol, err_msg="loss diverged from eager jax.grad")
+        for w in self.param_names:
+            np.testing.assert_allclose(
+                np.asarray(grads[w]), np.asarray(ref_grads[w]),
+                rtol=rtol, atol=atol,
+                err_msg=f"grad {w} diverged from eager jax.grad")
+
+    # ---- tooling ---------------------------------------------------------
+    def autotune(self, **kw) -> list:
+        """Autotune all three phases' routed chains (see
+        :meth:`CompiledProgram.autotune`)."""
+        records = []
+        for p in (self.forward, self.backward, self.update):
+            records += p.autotune(**kw)
+        return records
+
+    def provenance(self) -> dict:
+        if self._provenance is not None:
+            return dict(self._provenance)
+        return {"source_structural_hash": self.source.structural_hash(),
+                "origin": self.origin or f"graph:{self.source.name}"}
+
+    def export(self, path: str | None = None, *,
+               weights: "bool | dict | None" = None):
+        """Write (or return) the v1.5 *train-step* artifact: one JSON doc
+        with ``kind: "train_step"``, a full per-phase artifact under
+        ``phases.{forward,backward,update}``, and the linking ``train``
+        section (loss/seed/residual/grad names + optimizer attrs) so
+        ``codo.load`` reconstructs the executable step in a fresh
+        interpreter.  ``weights=True`` embeds the parameters in the
+        forward phase (v1.3 semantics)."""
+        from repro.core.artifact import export_train_step_artifact  # lazy
+        g = self.graphs
+        if weights is True:
+            weights = self.init_params()
+        train = {"loss": g.loss, "seeds": dict(g.seeds),
+                 "residuals": list(g.residuals), "grads": dict(g.grads),
+                 "params": list(g.params), "opt": dict(g.opt)}
+        return export_train_step_artifact(
+            {"forward": self.forward.compiled,
+             "backward": self.backward.compiled,
+             "update": self.update.compiled},
+            train, path, weights=weights, provenance=self.provenance())
+
+    def report(self) -> str:
+        lines = [f"train step {self.source.name}: "
+                 f"{len(self.param_names)} params, "
+                 f"{len(self.graphs.residuals)} residuals"]
+        for tag, p in (("forward", self.forward), ("backward", self.backward),
+                       ("update", self.update)):
+            lines.append(f"-- {tag} " + "-" * max(1, 60 - len(tag)))
+            lines.append(p.report())
+        return "\n".join(lines)
+
+    def __repr__(self) -> str:
+        return (f"<CompiledTrainStep {self.source.name} "
+                f"params={len(self.param_names)} "
+                f"fwd={len(self.forward.compiled.graph.tasks)}t "
+                f"bwd={len(self.backward.compiled.graph.tasks)}t "
+                f"upd={len(self.update.compiled.graph.tasks)}t>")
+
+
+def _compile_train_step(source: DataflowGraph, *, options=None, cache=_UNSET,
+                        opt=None, wrt=None, origin: str | None = None,
+                        **codo_kwargs) -> CompiledTrainStep:
+    from repro.core.autodiff import build_train_graphs  # lazy: jax via ops
+    graphs = build_train_graphs(source, oc=opt, wrt=wrt)
+    progs = []
+    for phase in (graphs.forward, graphs.backward, graphs.update):
+        compiled = codo_opt(phase, options, cache=cache, **codo_kwargs)
+        progs.append(CompiledProgram(phase, compiled, *_io_from_graph(phase)))
+    step = CompiledTrainStep(source, graphs, *progs)
+    step.origin = origin or f"graph:{source.name}"
+    return step
+
+
 def compile(fn: Callable | DataflowGraph, *specs,  # noqa: A001 — the API name
             options: CodoOptions | None = None, name: str | None = None,
             cache=_UNSET, autotune: bool = False, mesh=None,
-            sharding_strategy: str = "auto",
+            sharding_strategy: str = "auto", grad: bool = False,
+            opt=None, wrt=None,
             **codo_kwargs) -> CompiledProgram:
     """Trace ``fn`` over ``specs`` (shape tuples / :func:`buffer` protos)
     and compile it through the ``codo_opt`` pipeline.
@@ -318,6 +534,14 @@ def compile(fn: Callable | DataflowGraph, *specs,  # noqa: A001 — the API name
     ``sharding_strategy`` picks the placement — ``"auto"`` prices every
     feasible candidate, or force one of ``replicate``/``dp``/``tp``/
     ``dp_tp``.  See docs/sharding.md.
+
+    ``grad=True`` differentiates the (scalar-loss) graph instead: the
+    reverse toposort walk in :mod:`repro.core.autodiff` emits the
+    backward as a second dataflow graph, an AdamW update graph rides
+    along (``opt`` — an ``OptConfig``, a dict of its fields, or ``None``
+    for defaults; ``wrt`` restricts the parameter set), and all three
+    compile through this same pipeline.  Returns a
+    :class:`CompiledTrainStep`.  See docs/autodiff.md.
     """
     if isinstance(fn, DataflowGraph):
         if specs:
@@ -327,10 +551,26 @@ def compile(fn: Callable | DataflowGraph, *specs,  # noqa: A001 — the API name
         if name is not None and name != source.name:
             raise TraceError(f"compile(graph, name={name!r}) cannot rename "
                              f"graph {source.name!r}")
+        origin = f"graph:{source.name}"
     else:
         source, ins, outs = frontend.trace_io(fn, *specs, name=name)
+        origin = (f"traced:{getattr(fn, '__module__', '?')}."
+                  f"{getattr(fn, '__qualname__', source.name)}")
+    if grad:
+        if mesh is not None:
+            raise TraceError("grad=True does not compose with mesh= yet — "
+                             "shard the phases individually")
+        step = _compile_train_step(source, options=options, cache=cache,
+                                   opt=opt, wrt=wrt, origin=origin,
+                                   **codo_kwargs)
+        if autotune:
+            step.autotune()
+        return step
+    if opt is not None or wrt is not None:
+        raise TraceError("opt=/wrt= only apply with grad=True")
     compiled = codo_opt(source, options, cache=cache, **codo_kwargs)
     program = CompiledProgram(source, compiled, ins, outs)
+    program.origin = origin
     if mesh is not None:
         program.shard(mesh, sharding_strategy)
     if autotune:
@@ -343,12 +583,24 @@ def load(path) -> CompiledProgram:
     (path or parsed document) — no recompile, any process; op kinds
     resolve against this process's registry.  Bound-weight payloads (v1.3)
     are hash-verified and re-bound, so a weight-carrying artifact executes
-    without ever reaching the shape-keyed initializer."""
-    from repro.core.artifact import artifact_weights, import_artifact  # lazy
+    without ever reaching the shape-keyed initializer.
+
+    A v1.5 *train-step* artifact (``kind: "train_step"``) reconstructs a
+    :class:`CompiledTrainStep` instead — all three phase graphs plus the
+    linking ``train`` section."""
+    from repro.core.artifact import (TRAIN_STEP_KIND, artifact_weights,
+                                     import_artifact, load_artifact)  # lazy
+    doc = load_artifact(path)
+    if doc.get("kind") == TRAIN_STEP_KIND:
+        return _load_train_step(doc)
+    path = doc
     compiled = import_artifact(path)
     # The artifact carries the optimized graph only; it is its own oracle.
     ins, outs = _io_from_graph(compiled.graph)
     program = CompiledProgram(compiled.graph, compiled, ins, outs)
+    # Keep the stored provenance (the post-pass graph's hash is NOT the
+    # pre-pass source hash) so re-exports round-trip the v1.5 section.
+    program._provenance = doc.get("provenance")
     plan = getattr(compiled, "sharding_plan", None)
     if plan is not None:
         # v1.4 sharding section: restore the multi-device program as-is
@@ -359,6 +611,26 @@ def load(path) -> CompiledProgram:
     if bound:
         program.bind(**bound)
     return program
+
+
+def _load_train_step(doc: dict) -> CompiledTrainStep:
+    from repro.core.artifact import import_train_step  # lazy
+    from repro.core.autodiff import TrainGraphs  # lazy
+    phases, train, weights = import_train_step(doc)
+    graphs = TrainGraphs(
+        forward=phases["forward"].graph, backward=phases["backward"].graph,
+        update=phases["update"].graph, loss=train["loss"],
+        seeds=dict(train["seeds"]), residuals=list(train["residuals"]),
+        grads=dict(train["grads"]), params=list(train["params"]),
+        opt=dict(train["opt"]))
+    progs = [CompiledProgram(c.graph, c, *_io_from_graph(c.graph))
+             for c in (phases["forward"], phases["backward"],
+                       phases["update"])]
+    step = CompiledTrainStep(phases["forward"].graph, graphs, *progs)
+    step._provenance = doc.get("provenance")
+    if weights:
+        step._initial_params = weights
+    return step
 
 
 # --------------------------------------------------------------------------
@@ -408,7 +680,8 @@ def main(argv=None) -> int:
     return 0
 
 
-__all__ = ["CodoOptions", "CompiledProgram", "F", "ShapedBuffer",
+__all__ = ["CodoOptions", "CompiledProgram", "CompiledTrainStep", "F",
+           "ShapedBuffer",
            "TraceError", "buffer", "compile", "load", "trace"]
 
 

@@ -66,10 +66,27 @@ from .routing import (XLA_FUSED, decide_route, ensure_kernel_patterns,
                       match_group, pallas_disabled)
 from .schedule import ScheduleReport
 
-SCHEMA_VERSION = "1.4"
+SCHEMA_VERSION = "1.5"
 
 # Schema changelog
 # ----------------
+# 1.5  `provenance`: source-graph provenance — the *pre-pass* source
+#      graph's structural hash plus the trace origin (the traced
+#      function's module-qualified name, or ``graph:<name>`` for
+#      hand-built graphs).  The integrity hash covers the *optimized*
+#      graph, so two artifacts compiled from the same source under
+#      different pipelines used to be indistinguishable from two
+#      different models; ``artifact diff`` now tells "same source,
+#      different pipeline" from "different source".  Also introduces the
+#      *train-step* document (``kind: "train_step"``): three linked
+#      per-phase artifacts (`phases.forward/backward/update` — the
+#      graph-level autodiff forward, cotangent, and AdamW-update designs)
+#      plus a `train` section naming the loss buffer, seed cotangents,
+#      shared residual buffers, per-parameter gradient buffers, and the
+#      optimizer attrs, so ``codo.load`` reconstructs an executable
+#      CompiledTrainStep in a fresh interpreter.  Older readers ignore
+#      the `provenance` section (unknown-field policy) and this reader
+#      accepts v1.0–v1.4 documents without it.
 # 1.4  `sharding`: the multi-device ShardingPlan — pure-data mesh axes,
 #      per-buffer placements, and the typed collective schedule
 #      (all_gather / reduce_scatter / psum / ppermute steps with their
@@ -242,7 +259,7 @@ def export_artifact(compiled: CompiledDataflow,
                     path: str | Path | None = None, *,
                     weights: dict | None = None,
                     weights_sidecar: bool = False,
-                    sharding=None) -> dict:
+                    sharding=None, provenance: dict | None = None) -> dict:
     """Serialize a compiled design to the versioned JSON artifact format.
 
     Returns the document as a dict; when ``path`` is given, also writes it
@@ -261,6 +278,12 @@ def export_artifact(compiled: CompiledDataflow,
     :class:`~repro.distributed.plan.ShardingPlan` — placements +
     collective schedule — so the importer reconstructs the same
     multi-device program without re-partitioning.
+
+    ``provenance`` (v1.5) records where the design came from: the
+    *pre-pass* source graph's structural hash and the trace origin.  The
+    integrity hash covers the optimized graph only, so this section is
+    what lets ``artifact diff`` separate "same source, different
+    pipeline" from "different source".
     """
     g = compiled.graph
     closures = [t.name for t in g.tasks if t.fn_is_closure]
@@ -312,6 +335,8 @@ def export_artifact(compiled: CompiledDataflow,
         doc["weights"] = _weights_section(g, weights, path, weights_sidecar)
     if sharding is not None:
         doc["sharding"] = sharding.to_dict()
+    if provenance is not None:
+        doc["provenance"] = dict(provenance)
     if path is not None:
         Path(path).write_text(dumps(doc))
     return doc
@@ -368,7 +393,36 @@ _TOP_FIELDS = {
     "weights": ((dict, type(None)), False),
     # v1.4: the multi-device ShardingPlan (mesh + placements + collectives).
     "sharding": ((dict, type(None)), False),
+    # v1.5: pre-pass source hash + trace origin.
+    "provenance": ((dict, type(None)), False),
     "integrity": ((dict, type(None)), False),
+}
+
+_PROVENANCE_FIELDS = {
+    "source_structural_hash": ((str,), True),
+    "origin": ((str,), False),
+}
+
+# v1.5 train-step document (kind: "train_step"): three linked per-phase
+# artifacts plus the autodiff linking section.
+TRAIN_STEP_KIND = "train_step"
+
+_TRAIN_TOP_FIELDS = {
+    "schema_version": ((str,), True),
+    "generator": ((str,), False),
+    "kind": ((str,), True),
+    "phases": ((dict,), True),
+    "train": ((dict,), True),
+    "provenance": ((dict, type(None)), False),
+}
+
+_TRAIN_FIELDS = {
+    "loss": ((str,), True),
+    "seeds": ((dict,), True),
+    "residuals": ((list,), True),
+    "grads": ((dict,), True),
+    "params": ((list,), True),
+    "opt": ((dict,), True),
 }
 
 _SHARDING_FIELDS = {
@@ -739,6 +793,9 @@ def validate_artifact(doc: Any) -> list[str]:
     if isinstance(doc.get("integrity"), dict):
         _check_fields(doc["integrity"], "integrity", _INTEGRITY_FIELDS,
                       errors, notes)
+    if isinstance(doc.get("provenance"), dict):
+        _check_fields(doc["provenance"], "provenance", _PROVENANCE_FIELDS,
+                      errors, notes)
     opts = doc.get("options")
     if isinstance(opts, dict):
         for k in set(opts) - _OPTIONS_KNOWN:
@@ -958,6 +1015,108 @@ def import_artifact(source: str | Path | dict, *,
     return out
 
 
+def load_artifact(source: str | Path | dict) -> dict:
+    """Parse an artifact file (or pass a parsed document through) without
+    validating it — the cheap first step when the caller needs to dispatch
+    on ``kind`` (design vs. v1.5 ``train_step``) before importing."""
+    return _load(source)
+
+
+# --------------------------------------------------------------------------
+# v1.5 train-step documents
+# --------------------------------------------------------------------------
+
+_TRAIN_PHASES = ("forward", "backward", "update")
+
+
+def export_train_step_artifact(phases: dict, train: dict,
+                               path: str | Path | None = None, *,
+                               weights: dict | None = None,
+                               provenance: dict | None = None) -> dict:
+    """Serialize a compiled training step (v1.5, ``kind: "train_step"``).
+
+    ``phases`` maps ``forward``/``backward``/``update`` to their
+    :class:`CompiledDataflow`; each is exported as a full artifact under
+    ``phases.<name>``, so every per-phase guarantee (integrity hash,
+    fusion cross-check, tuning merge) holds phase by phase on import.
+    ``train`` is the autodiff linking section — loss buffer, seed
+    cotangents, residual buffers shared forward→backward, per-parameter
+    gradient buffers, and the optimizer attrs.  ``weights`` embeds the
+    parameters into the forward phase (v1.3 semantics)."""
+    missing = [p for p in _TRAIN_PHASES if p not in phases]
+    if missing:
+        raise ArtifactError(f"train-step export needs phases "
+                            f"{_TRAIN_PHASES}; missing {missing}")
+    doc: dict[str, Any] = {
+        "schema_version": SCHEMA_VERSION,
+        "generator": GENERATOR,
+        "kind": TRAIN_STEP_KIND,
+        "phases": {name: export_artifact(phases[name], None,
+                                         weights=(weights if name == "forward"
+                                                  else None))
+                   for name in _TRAIN_PHASES},
+        "train": dict(train),
+    }
+    if provenance is not None:
+        doc["provenance"] = dict(provenance)
+    if path is not None:
+        Path(path).write_text(dumps(doc))
+    return doc
+
+
+def import_train_step(source: str | Path | dict, *,
+                      check_integrity: bool = True):
+    """Reconstruct the three phases of a v1.5 train-step artifact.
+
+    Returns ``(phases, train, weights)`` — ``phases`` maps
+    ``forward``/``backward``/``update`` to executable
+    :class:`CompiledDataflow`\\ s (each imported through the full
+    per-phase validation of :func:`import_artifact`), ``train`` is the
+    linking section, ``weights`` the forward phase's bound parameter
+    arrays (empty when the document carries none)."""
+    doc = _load(source)
+    if doc.get("kind") != TRAIN_STEP_KIND:
+        raise ArtifactError(
+            f"not a train-step artifact (kind={doc.get('kind')!r}); "
+            "use import_artifact for single-design documents")
+    errors: list[str] = []
+    notes: list[str] = []
+    _check_fields(doc, "artifact", _TRAIN_TOP_FIELDS, errors, notes)
+    if isinstance(doc.get("train"), dict):
+        _check_fields(doc["train"], "train", _TRAIN_FIELDS, errors, notes)
+    if isinstance(doc.get("provenance"), dict):
+        _check_fields(doc["provenance"], "provenance", _PROVENANCE_FIELDS,
+                      errors, notes)
+    phase_docs = doc.get("phases")
+    if isinstance(phase_docs, dict):
+        for p in _TRAIN_PHASES:
+            if not isinstance(phase_docs.get(p), dict):
+                errors.append(f"phases.{p}: missing or not an object")
+    if errors:
+        raise ArtifactError(
+            "invalid train-step artifact (%d problem%s):\n  " %
+            (len(errors), "s" if len(errors) != 1 else "")
+            + "\n  ".join(errors))
+    for note in notes:
+        _warn(note)
+    phases = {p: import_artifact(phase_docs[p],
+                                 check_integrity=check_integrity)
+              for p in _TRAIN_PHASES}
+    train = doc["train"]
+    loss = train.get("loss")
+    if loss not in set(phases["forward"].graph.buffers):
+        raise ArtifactError(f"train.loss: {loss!r} is not a forward-phase "
+                            "buffer")
+    bwd_bufs = set(phases["backward"].graph.buffers)
+    dangling = [r for r in train.get("residuals", ()) if r not in bwd_bufs]
+    if dangling:
+        raise ArtifactError(
+            f"train.residuals: {dangling[:3]} are not backward-phase "
+            "buffers — phases edited inconsistently?")
+    weights = artifact_weights(phase_docs["forward"])
+    return phases, train, weights
+
+
 def artifact_weights(source: str | Path | dict, *,
                      base_dir: str | Path | None = None) -> dict:
     """The bound weight arrays of a v1.3 artifact, verified against their
@@ -1035,6 +1194,18 @@ def artifact_summary(source: str | Path | dict) -> str:
     """One-paragraph human summary of an artifact (used by the CLI's
     ``--import-artifact`` verb and handy in notebooks)."""
     doc = _load(source)
+    if doc.get("kind") == TRAIN_STEP_KIND:
+        train = doc.get("train") or {}
+        lines = [f"train-step artifact (schema "
+                 f"v{doc.get('schema_version')}): loss={train.get('loss')}, "
+                 f"{len(train.get('params') or ())} params, "
+                 f"{len(train.get('residuals') or ())} residuals"]
+        for p in _TRAIN_PHASES:
+            phase = (doc.get("phases") or {}).get(p)
+            if phase:
+                lines += ["  " + ln for ln in
+                          artifact_summary(phase).splitlines()]
+        return "\n".join(lines)
     g = doc.get("graph") or {}
     cost = doc.get("cost") or {}
     plan = doc.get("buffer_plan") or {}
@@ -1072,8 +1243,26 @@ def diff_artifacts(a: str | Path | dict, b: str | Path | dict) -> list[str]:
     ``sharding`` section.  Cosmetic fields (generator string, measured
     milliseconds inside tuning records) are ignored so re-exports of the
     same design diff clean.
+
+    With v1.5 ``provenance`` on both sides, a graph difference is
+    classified: *same source, different pipeline* (equal pre-pass source
+    hashes — the designs came from one model compiled under different
+    options/passes) vs. *different source* (the models themselves
+    differ).  Two v1.5 train-step documents diff phase by phase.
     """
     da, db = _load(a), _load(b)
+    if (da.get("kind") == TRAIN_STEP_KIND) != (db.get("kind") == TRAIN_STEP_KIND):
+        return [f"kind: {da.get('kind')!r} != {db.get('kind')!r} "
+                "(train-step vs single-design artifact)"]
+    if da.get("kind") == TRAIN_STEP_KIND:
+        out = []
+        for p in _TRAIN_PHASES:
+            out += [f"phases.{p}.{line}" for line in
+                    diff_artifacts((da.get("phases") or {}).get(p) or {},
+                                   (db.get("phases") or {}).get(p) or {})]
+        if da.get("train") != db.get("train"):
+            out.append("train: linking sections differ")
+        return out
     out: list[str] = []
 
     def _field(label, va, vb):
@@ -1084,6 +1273,20 @@ def diff_artifacts(a: str | Path | dict, b: str | Path | dict) -> list[str]:
     ha = (da.get("integrity") or {}).get("structural_hash")
     hb = (db.get("integrity") or {}).get("structural_hash")
     _field("integrity.structural_hash", ha, hb)
+    pa, pb = da.get("provenance") or {}, db.get("provenance") or {}
+    sa_hash, sb_hash = (pa.get("source_structural_hash"),
+                        pb.get("source_structural_hash"))
+    if sa_hash and sb_hash and ha != hb:
+        # v1.5: the integrity hash covers the optimized graph; the source
+        # hash tells whether the divergence is the model or the pipeline.
+        if sa_hash == sb_hash:
+            out.append("provenance: same source, different pipeline "
+                       f"(source {sa_hash[:16]}…; optimized graphs differ)")
+        else:
+            out.append(f"provenance: different source "
+                       f"({sa_hash[:16]}… != {sb_hash[:16]}…)")
+    elif pa.get("origin") != pb.get("origin"):
+        _field("provenance.origin", pa.get("origin"), pb.get("origin"))
     ga, gb = da.get("graph") or {}, db.get("graph") or {}
     _field("graph.name", ga.get("name"), gb.get("name"))
     _field("graph.tasks", len(ga.get("tasks") or ()), len(gb.get("tasks") or ()))
@@ -1174,7 +1377,9 @@ if __name__ == "__main__":  # pragma: no cover - exercised via subprocess
     sys.exit(main())
 
 
-__all__ = ["SCHEMA_VERSION", "ArtifactError", "ArtifactWarning",
-           "artifact_summary", "artifact_weights", "diff_artifacts", "dumps",
-           "export_artifact", "import_artifact", "main", "sidecar_path",
+__all__ = ["SCHEMA_VERSION", "TRAIN_STEP_KIND", "ArtifactError",
+           "ArtifactWarning", "artifact_summary", "artifact_weights",
+           "diff_artifacts", "dumps", "export_artifact",
+           "export_train_step_artifact", "import_artifact",
+           "import_train_step", "load_artifact", "main", "sidecar_path",
            "validate_artifact"]

@@ -316,6 +316,11 @@ _CPU_PARAMS = RoutingCostParams(
     backend="cpu",
     efficiency=(("streamfuse.conv", 0.99), ("streamfuse.mmchain", 1.0),
                 ("streamfuse.softmaxmm", 0.97),
+                # Backward matmul + gradient-epilogue chains measure just
+                # under parity on CPU (the epilogue replays registry impls);
+                # the gate keeps them generic here — CI forces them on with
+                # CODO_FORCE_PALLAS to exercise the kernel path.
+                ("streamfuse.mmgrad", 0.98),
                 # flashattn's CPU reference is the same fused-jnp chain, so
                 # parity; chunked-scan references re-execute the recurrence
                 # sequentially and measure slightly under parity — below the

@@ -154,6 +154,16 @@ def generate_permutation(graph: DataflowGraph, reference: Task, target: Task,
     desired = [tgt_drivers[i] for i in ref_order if i in tgt_drivers]
     if len(set(desired)) != len(desired):
         return None  # one var drives two dims: not a pure permutation
+    red = {l.var for l in target.loops if l.ring == "reduction"}
+    if red & set(desired):
+        # A rewritten reduction (Fig. 5) keeps its reduction dims innermost
+        # — the hoisted write emits each element once after the accumulator
+        # drains.  Hoisting such a loop outward to chase a neighbour's
+        # stream order would silently undo that rewrite (backward graphs
+        # hit this: weight-grad matmuls contract over the sequence dim and
+        # ask their operands for a genuinely reversed order).  Decline; the
+        # edge stays ping-pong.
+        return None
 
     # Step 3: depth→depth map.
     old_depths = {v: target.loop_depth(v) for v in desired}

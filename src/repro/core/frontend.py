@@ -217,6 +217,24 @@ class GB:
         self.g.add_task(t)
         return out
 
+    def mean_all(self, x: str) -> str:
+        """Full mean-reduction to a (1, 1) scalar carrier — the loss head
+        of traced training objectives."""
+        shp = self.shape[x]
+        if len(shp) < 2:
+            raise TraceError(f"mean_all needs a rank>=2 operand (got {shp})")
+        out = self.buf(self.fresh("loss"), (1, 1))
+        dims = [f"i{k}" for k in range(len(shp))]
+        t = Task(self.fresh("mean_all_t"),
+                 loops=[Loop(d, int(n)) for d, n in zip(dims, shp)],
+                 reads=[Access(x, full_index(dims), False)],
+                 writes=[Access(out, (idx((dims[0], 0)), idx((dims[1], 0))),
+                                True)],
+                 op="pool", flops_per_iter=1.0,
+                 spec=OpSpec("mean_all", (x,), (out,)))
+        self.g.add_task(t)
+        return out
+
     def flatten(self, x: str) -> str:
         n, c, h, w = self.shape[x]
         out = self.buf(self.fresh("flat"), (n, c * h * w))
@@ -966,6 +984,15 @@ def flatten(x):
     return _eager("reshape", (x,), {"shape": (x.shape[0], -1)})
 
 
+def mean_all(x):
+    """Mean of every element as a (1, 1) scalar carrier — the loss head
+    traced training objectives end in."""
+    tr = _tracer_of(x)
+    if tr is not None:
+        return tr.wrap(tr.gb.mean_all(tr.name_of(x)))
+    return _eager("mean_all", (x,))
+
+
 def load(x):
     tr = _tracer_of(x)
     if tr is not None:
@@ -1192,7 +1219,7 @@ __all__ = [
     "trace_io", "weight_init",
     # ops
     "add", "concat", "conv", "div", "fc", "flatten", "gelu",
-    "global_avgpool", "load", "matmul", "maxpool", "mul", "mv", "pad",
-    "relu", "rglru_scan", "scale", "slice_", "softmax", "split", "ssd_scan",
-    "sub", "transpose", "vadd",
+    "global_avgpool", "load", "matmul", "maxpool", "mean_all", "mul", "mv",
+    "pad", "relu", "rglru_scan", "scale", "slice_", "softmax", "split",
+    "ssd_scan", "sub", "transpose", "vadd",
 ]

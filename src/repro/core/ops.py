@@ -466,16 +466,13 @@ def _slice(spec: OpSpec, env: dict) -> dict:
     return {spec.outs[0]: x[ix]}
 
 
-@register_op("rglru_scan")
-def _rglru_scan(spec: OpSpec, env: dict) -> dict:
-    """RG-LRU linear recurrence h_t = a_t * h_{t-1} + b_t over axis 1 of
-    (B, S, D) operands, h_{-1} = 0.  This is the *generic* sequential
-    definition (``lax.scan``); the routed ``rglru.scan`` kernel replaces
-    it with the chunked Pallas stream."""
+def _rglru_reference(a, b):
+    """RG-LRU recurrence h_t = a_t * h_{t-1} + b_t over axis 1 of (B, S, D)
+    operands, h_{-1} = 0 — shared by the generic impl and its VJP (the VJP
+    always differentiates this reference, so re-registering the forward
+    with a kernel cannot change gradient semantics)."""
     import jax
     import jax.numpy as jnp
-    a = jnp.asarray(env[spec.ins[0]])
-    b = jnp.asarray(env[spec.ins[1]])
 
     def step(h, ab):
         at, bt = ab
@@ -484,7 +481,34 @@ def _rglru_scan(spec: OpSpec, env: dict) -> dict:
 
     _, hs = jax.lax.scan(step, jnp.zeros_like(a[:, 0]),
                          (jnp.swapaxes(a, 0, 1), jnp.swapaxes(b, 0, 1)))
-    return {spec.outs[0]: jnp.swapaxes(hs, 0, 1)}
+    return jnp.swapaxes(hs, 0, 1)
+
+
+def _ssd_reference(states, decay):
+    """SSD inter-chunk recurrence over (nc, BH, P, N) end states and
+    (nc, BH, 1, 1) decays: the state carried *into* each chunk, h_0 = 0.
+    Shared by the generic impl and its VJP."""
+    import jax
+    import jax.numpy as jnp
+
+    def step(h, inp):
+        st, dec = inp
+        return h * dec + st, h
+
+    h0 = jnp.zeros(states.shape[1:], states.dtype)
+    _, prevs = jax.lax.scan(step, h0, (states, decay))
+    return prevs
+
+
+@register_op("rglru_scan")
+def _rglru_scan(spec: OpSpec, env: dict) -> dict:
+    """RG-LRU linear recurrence h_t = a_t * h_{t-1} + b_t over axis 1 of
+    (B, S, D) operands, h_{-1} = 0.  This is the *generic* sequential
+    definition (``lax.scan``); the routed ``rglru.scan`` kernel replaces
+    it with the chunked Pallas stream."""
+    import jax.numpy as jnp
+    return {spec.outs[0]: _rglru_reference(jnp.asarray(env[spec.ins[0]]),
+                                           jnp.asarray(env[spec.ins[1]]))}
 
 
 @register_op("ssd_scan")
@@ -493,19 +517,534 @@ def _ssd_scan(spec: OpSpec, env: dict) -> dict:
     (nc, BH, P, N) and scalar decays (nc, BH, 1, 1): emits the state
     carried *into* each chunk (h_0 = 0).  Generic sequential definition;
     the routed ``ssd.scan`` kernel is the chunked Pallas stream."""
+    import jax.numpy as jnp
+    return {spec.outs[0]: _ssd_reference(jnp.asarray(env[spec.ins[0]]),
+                                         jnp.asarray(env[spec.ins[1]]))}
+
+
+# --------------------------------------------------------------------------
+# Gradient + optimizer op implementations (ISSUE 10).  Same contract as
+# everything above: plain-data specs, lazy jax imports, ``(spec, env) ->
+# {out: array}``.  These are the vocabulary the autodiff pass
+# (core/autodiff.py) emits backward and AdamW-update graphs in — all of
+# them first-class registry ops, so the backward graph pickles, caches,
+# and reloads exactly like a forward graph.
+# --------------------------------------------------------------------------
+
+
+@register_op("mean_all")
+def _mean_all(spec: OpSpec, env: dict) -> dict:
+    """Full reduction to a (1, 1) scalar carrier — the loss head."""
+    return {spec.outs[0]: env[spec.ins[0]].mean().reshape(1, 1)}
+
+
+@register_op("bcast")
+def _bcast(spec: OpSpec, env: dict) -> dict:
+    """Broadcast to ``attrs['shape']`` (scalar carriers flatten first)."""
+    import jax.numpy as jnp
+    shape = tuple(int(s) for s in spec.attrs["shape"])
+    x = env[spec.ins[0]]
+    if x.size == 1:
+        x = x.reshape(())
+    return {spec.outs[0]: jnp.broadcast_to(x, shape)}
+
+
+@register_op("outer")
+def _outer(spec: OpSpec, env: dict) -> dict:
+    """Rank-1 outer product ``a ⊗ b`` — the matrix grad of ``mv``."""
+    a, b = env[spec.ins[0]], env[spec.ins[1]]
+    return {spec.outs[0]: a[:, None] * b[None, :]}
+
+
+@register_op("relu_grad")
+def _relu_grad(spec: OpSpec, env: dict) -> dict:
+    g, x = env[spec.ins[0]], env[spec.ins[1]]
+    return {spec.outs[0]: g * (x > 0).astype(g.dtype)}
+
+
+@register_op("gelu_grad")
+def _gelu_grad(spec: OpSpec, env: dict) -> dict:
+    """Exact (tanh-approx) gelu VJP via jax's own rule, so registry-vs-jax
+    gradient parity is bit-tight."""
+    import jax
+    g, x = env[spec.ins[0]], env[spec.ins[1]]
+    _, vjp = jax.vjp(jax.nn.gelu, x)
+    return {spec.outs[0]: vjp(g)[0]}
+
+
+@register_op("softmax_grad")
+def _softmax_grad(spec: OpSpec, env: dict) -> dict:
+    """``y * (g - sum(g*y, axis))`` with ``y`` the forward softmax output."""
+    axis = int(spec.attrs.get("axis", -1))
+    g, y = env[spec.ins[0]], env[spec.ins[1]]
+    return {spec.outs[0]: y * (g - (g * y).sum(axis=axis, keepdims=True))}
+
+
+@register_op("conv2d_input_grad")
+def _conv2d_input_grad(spec: OpSpec, env: dict) -> dict:
+    """Cotangent wrt the conv input: jax.vjp of the (linear) conv at a
+    zero input — exact, and stays in lockstep with the forward lowering."""
     import jax
     import jax.numpy as jnp
-    states = jnp.asarray(env[spec.ins[0]])
-    decay = jnp.asarray(env[spec.ins[1]])
+    s = int(spec.attrs.get("stride", 1))
+    groups = int(spec.attrs.get("groups", 1))
+    x_shape = tuple(int(v) for v in spec.attrs["x_shape"])
+    g, w = env[spec.ins[0]], env[spec.ins[1]]
 
-    def step(h, inp):
-        st, dec = inp
-        return h * dec + st, h
+    def fwd(x):
+        return jax.lax.conv_general_dilated(
+            x, w, (s, s), "VALID",
+            dimension_numbers=("NCHW", "OIHW", "NCHW"),
+            feature_group_count=groups)
 
-    h0 = jnp.zeros(states.shape[1:], states.dtype)
-    _, prevs = jax.lax.scan(step, h0, (states, decay))
-    return {spec.outs[0]: prevs}
+    _, vjp = jax.vjp(fwd, jnp.zeros(x_shape, g.dtype))
+    return {spec.outs[0]: vjp(g)[0]}
 
 
-__all__ = ["OpSpec", "UnknownOpError", "materialize", "op_impl",
-           "register_op", "registered_ops"]
+@register_op("conv2d_weight_grad")
+def _conv2d_weight_grad(spec: OpSpec, env: dict) -> dict:
+    import jax
+    import jax.numpy as jnp
+    s = int(spec.attrs.get("stride", 1))
+    groups = int(spec.attrs.get("groups", 1))
+    w_shape = tuple(int(v) for v in spec.attrs["w_shape"])
+    g, x = env[spec.ins[0]], env[spec.ins[1]]
+
+    def fwd(w):
+        return jax.lax.conv_general_dilated(
+            x, w, (s, s), "VALID",
+            dimension_numbers=("NCHW", "OIHW", "NCHW"),
+            feature_group_count=groups)
+
+    _, vjp = jax.vjp(fwd, jnp.zeros(w_shape, g.dtype))
+    return {spec.outs[0]: vjp(g)[0]}
+
+
+@register_op("maxpool2d_grad")
+def _maxpool2d_grad(spec: OpSpec, env: dict) -> dict:
+    """Scatter the cotangent to each window's argmax (jax.vjp of the
+    forward reduce_window at the *actual* input)."""
+    import jax
+    import jax.numpy as jnp
+    k = int(spec.attrs["k"])
+    g, x = env[spec.ins[0]], env[spec.ins[1]]
+
+    def fwd(z):
+        return jax.lax.reduce_window(z, -jnp.inf, jax.lax.max,
+                                     (1, 1, k, k), (1, 1, k, k), "VALID")
+
+    _, vjp = jax.vjp(fwd, x)
+    return {spec.outs[0]: vjp(g)[0]}
+
+
+@register_op("slice_grad")
+def _slice_grad(spec: OpSpec, env: dict) -> dict:
+    """Zero-embed the window cotangent back into the source shape."""
+    import jax.numpy as jnp
+    g = env[spec.ins[0]]
+    x_shape = tuple(int(v) for v in spec.attrs["x_shape"])
+    ix = tuple(slice(int(st), int(st) + int(sz))
+               for st, sz in zip(spec.attrs["starts"], spec.attrs["sizes"]))
+    return {spec.outs[0]: jnp.zeros(x_shape, g.dtype).at[ix].set(g)}
+
+
+@register_op("mean_grad")
+def _mean_grad(spec: OpSpec, env: dict) -> dict:
+    """Spread ``g / count`` uniformly over the reduced axes."""
+    import jax.numpy as jnp
+    g = env[spec.ins[0]]
+    x_shape = tuple(int(v) for v in spec.attrs["x_shape"])
+    axes = tuple(int(a) for a in spec.attrs["axes"])
+    count = 1
+    for a in axes:
+        count *= x_shape[a]
+    return {spec.outs[0]: jnp.broadcast_to(
+        jnp.expand_dims(g / count, axes), x_shape)}
+
+
+@register_op("rglru_scan_grad")
+def _rglru_scan_grad(spec: OpSpec, env: dict) -> dict:
+    """(da, db) of the RG-LRU recurrence — jax.vjp of the shared
+    sequential reference (itself a reverse scan)."""
+    import jax
+    g, a, b = (env[n] for n in spec.ins)
+    _, vjp = jax.vjp(_rglru_reference, a, b)
+    da, db = vjp(g)
+    return {spec.outs[0]: da, spec.outs[1]: db}
+
+
+@register_op("ssd_scan_grad")
+def _ssd_scan_grad(spec: OpSpec, env: dict) -> dict:
+    """(dstates, ddecay) of the SSD inter-chunk recurrence."""
+    import jax
+    g, states, decay = (env[n] for n in spec.ins)
+    _, vjp = jax.vjp(_ssd_reference, states, decay)
+    ds, dd = vjp(g)
+    return {spec.outs[0]: ds, spec.outs[1]: dd}
+
+
+@register_op("sumsq")
+def _sumsq(spec: OpSpec, env: dict) -> dict:
+    """f32 sum of squares to a (1, 1) carrier (global-norm partials —
+    matches ``optimizer.clip_by_global_norm``'s per-leaf term)."""
+    import jax.numpy as jnp
+    x = env[spec.ins[0]]
+    return {spec.outs[0]:
+            jnp.sum(jnp.square(x.astype(jnp.float32))).reshape(1, 1)}
+
+
+@register_op("clip_scale")
+def _clip_scale(spec: OpSpec, env: dict) -> dict:
+    """Global-norm clip factor from the summed squares: outs are
+    ``(scale, norm)``, both (1, 1) carriers."""
+    import jax.numpy as jnp
+    max_norm = float(spec.attrs["max_norm"])
+    norm = jnp.sqrt(env[spec.ins[0]])
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return {spec.outs[0]: scale, spec.outs[1]: norm}
+
+
+@register_op("lr_sched")
+def _lr_sched(spec: OpSpec, env: dict) -> dict:
+    """Warmup + cosine decay, the exact ``optimizer.lr_at`` arithmetic.
+    The input is the *already incremented* step (a (1, 1) f32 carrier),
+    matching ``adamw_update``'s ``lr_at(state['step'] + 1, oc)`` call."""
+    import jax.numpy as jnp
+    a = spec.attrs
+    lr0 = float(a["lr"])
+    warm_n = float(a["warmup_steps"])
+    total = float(a["total_steps"])
+    frac = float(a["min_lr_frac"])
+    step = env[spec.ins[0]].reshape(()).astype(jnp.float32)
+    warm = lr0 * (step + 1.0) / max(warm_n, 1.0)
+    prog = jnp.clip((step - warm_n) / max(total - warm_n, 1.0), 0.0, 1.0)
+    cos = lr0 * (frac + (1.0 - frac) * 0.5 * (1.0 + jnp.cos(jnp.pi * prog)))
+    return {spec.outs[0]:
+            jnp.where(step < warm_n, warm, cos).reshape(1, 1)}
+
+
+@register_op("adamw_step")
+def _adamw_step(spec: OpSpec, env: dict) -> dict:
+    """One decoupled-weight-decay Adam update for a single parameter —
+    the exact per-leaf arithmetic of ``optimizer.adamw_update`` with the
+    global clip ``scale`` and scheduled ``lr`` as (1, 1) operands.
+    ins: (p, g, m, v, scale, lr, step2); outs: (p2, m2, v2)."""
+    import jax.numpy as jnp
+    a = spec.attrs
+    b1, b2 = float(a["b1"]), float(a["b2"])
+    eps, wd = float(a["eps"]), float(a["wd"])
+    p, g, m, v, scale, lr, step2 = (env[n] for n in spec.ins)
+    f32 = jnp.float32
+    g32 = g.astype(f32) * scale.reshape(())
+    step_f = step2.reshape(()).astype(f32)
+    p32 = p.astype(f32)
+    m2 = b1 * m.astype(f32) + (1.0 - b1) * g32
+    v2 = b2 * v.astype(f32) + (1.0 - b2) * g32 * g32
+    mh = m2 / (1.0 - b1 ** step_f)
+    vh = v2 / (1.0 - b2 ** step_f)
+    delta = mh / (jnp.sqrt(vh) + eps) + wd * p32
+    p2 = p32 - lr.reshape(()) * delta
+    return {spec.outs[0]: p2.astype(p.dtype),
+            spec.outs[1]: m2, spec.outs[2]: v2}
+
+
+# --------------------------------------------------------------------------
+# VJP rules (ISSUE 10): kind -> rule, the same registry discipline as the
+# implementations — rules live in *code* keyed by kind, while everything
+# they emit is plain OpSpec *data* in a second DataflowGraph, so the
+# backward pickles/caches/reloads like any forward graph and the whole
+# pass pipeline (fusion, routing, caching) applies to it unchanged.
+#
+# A rule takes ``(spec, g, b)``:
+#
+# ``spec``
+#     the forward task's OpSpec;
+# ``g``
+#     {out buffer -> cotangent buffer name} for the *live* outputs only
+#     (outputs on a path to the loss; at least one, or the task is
+#     skipped entirely);
+# ``b``
+#     the backward-graph builder (``core.autodiff`` passes its
+#     ``_BwdBuilder``): ``b.shape(name)`` reports a buffer's shape,
+#     ``b.res(name)`` imports a forward buffer as a shared residual, the
+#     op helpers (``b.add/mul/scale/matmul/...``) emit spec'd tasks and
+#     return the produced buffer name.
+#
+# Rules return the input cotangents either as ``{in buffer: cot buffer}``
+# or as a ``[(in buffer, cot buffer)]`` pair list.  The pair list is
+# *required* whenever one buffer can appear in several operand slots
+# (``mul(x, x)``, ``matmul(x, x)``, ...): each pair accumulates
+# separately, a dict would silently drop one term.
+# --------------------------------------------------------------------------
+
+# kind -> rule(spec, g, b) -> {in: cot} | [(in, cot)]
+_VJP_REGISTRY: dict[str, Callable] = {}
+
+
+def register_vjp(kind: str):
+    """Decorator registering a VJP rule for ``kind`` (replace-on-repeat,
+    like :func:`register_op`; does *not* bump the registry epoch — rules
+    never change already-materialized forward numerics)."""
+
+    def deco(fn: Callable):
+        _VJP_REGISTRY[kind] = fn
+        return fn
+
+    return deco
+
+
+def has_vjp(kind: str) -> bool:
+    return kind in _VJP_REGISTRY
+
+
+def differentiable_ops() -> list[str]:
+    return sorted(_VJP_REGISTRY)
+
+
+def vjp_rule(kind: str) -> Callable:
+    try:
+        return _VJP_REGISTRY[kind]
+    except KeyError:
+        raise UnknownOpError(
+            f"no VJP rule registered for op kind {kind!r}; differentiable "
+            f"kinds: {differentiable_ops()}") from None
+
+
+@register_vjp("identity")
+def _identity_vjp(spec, g, b):
+    return {spec.ins[0]: g[spec.outs[0]]}
+
+
+@register_vjp("dup")
+def _dup_vjp(spec, g, b):
+    return {spec.ins[0]: b.add_n([g[o] for o in spec.outs if o in g])}
+
+
+@register_vjp("zeros")
+def _zeros_vjp(spec, g, b):
+    return {}
+
+
+@register_vjp("const")
+def _const_vjp(spec, g, b):
+    return {}
+
+
+def _pad_window_vjp(spec, g, b):
+    p = int(spec.attrs["pad"])
+    x_shape = b.shape(spec.ins[0])
+    starts = (0, 0) + (p,) * (len(x_shape) - 2)
+    return {spec.ins[0]: b.slice(g[spec.outs[0]], starts, x_shape)}
+
+
+register_vjp("pad2d")(_pad_window_vjp)
+register_vjp("fill_interior")(_pad_window_vjp)
+
+
+@register_vjp("conv2d")
+def _conv2d_vjp(spec, g, b):
+    go = g[spec.outs[0]]
+    x, w = spec.ins
+    base = {"stride": int(spec.attrs.get("stride", 1)),
+            "groups": int(spec.attrs.get("groups", 1))}
+    dx = b.emit("conv2d_input_grad", (go, b.res(w)), (b.shape(x),),
+                dict(base, x_shape=b.shape(x)), op="conv",
+                flops=2.0)[0]
+    dw = b.emit("conv2d_weight_grad", (go, b.res(x)), (b.shape(w),),
+                dict(base, w_shape=b.shape(w)), op="conv",
+                flops=2.0)[0]
+    return {x: dx, w: dw}
+
+
+@register_vjp("relu")
+def _relu_vjp(spec, g, b):
+    return {spec.ins[0]: b.ewise(
+        "relu_grad", (g[spec.outs[0]], b.res(spec.ins[0])))}
+
+
+@register_vjp("gelu")
+def _gelu_vjp(spec, g, b):
+    return {spec.ins[0]: b.ewise(
+        "gelu_grad", (g[spec.outs[0]], b.res(spec.ins[0])), flops=12.0)}
+
+
+@register_vjp("add")
+def _add_vjp(spec, g, b):
+    go = g[spec.outs[0]]
+    return [(spec.ins[0], go), (spec.ins[1], go)]
+
+
+@register_vjp("vadd")
+def _vadd_vjp(spec, g, b):
+    go = g[spec.outs[0]]
+    al = float(spec.attrs.get("alpha", 1.0))
+    be = float(spec.attrs.get("beta", 1.0))
+    return [(spec.ins[0], go if al == 1.0 else b.scale(go, al)),
+            (spec.ins[1], go if be == 1.0 else b.scale(go, be))]
+
+
+@register_vjp("scale")
+def _scale_vjp(spec, g, b):
+    return {spec.ins[0]: b.scale(g[spec.outs[0]], float(spec.attrs["s"]))}
+
+
+@register_vjp("affine")
+def _affine_vjp(spec, g, b):
+    a = float(spec.attrs.get("a", 1.0))
+    go = g[spec.outs[0]]
+    return {spec.ins[0]: go if a == 1.0 else b.scale(go, a)}
+
+
+@register_vjp("divc")
+def _divc_vjp(spec, g, b):
+    return {spec.ins[0]: b.divc(g[spec.outs[0]], float(spec.attrs["c"]))}
+
+
+@register_vjp("rdivc")
+def _rdivc_vjp(spec, g, b):
+    # d(c/x)/dx = -c/x^2 = -y^2/c with y the forward output residual.
+    go = g[spec.outs[0]]
+    c = float(spec.attrs["c"])
+    y = b.res(spec.outs[0])
+    return {spec.ins[0]: b.scale(b.mul(go, b.mul(y, y)), -1.0 / c)}
+
+
+@register_vjp("div")
+def _div_vjp(spec, g, b):
+    go = g[spec.outs[0]]
+    y = b.res(spec.outs[0])
+    den = b.res(spec.ins[1])
+    da = b.div(go, den)
+    db = b.scale(b.div(b.mul(go, y), den), -1.0)
+    return [(spec.ins[0], da), (spec.ins[1], db)]
+
+
+@register_vjp("mul")
+def _mul_vjp(spec, g, b):
+    go = g[spec.outs[0]]
+    xa, xb = spec.ins
+    if xa == xb:
+        return [(xa, b.scale(b.mul(go, b.res(xa)), 2.0))]
+    return [(xa, b.mul(go, b.res(xb))), (xb, b.mul(go, b.res(xa)))]
+
+
+@register_vjp("matmul")
+def _matmul_vjp(spec, g, b):
+    go = g[spec.outs[0]]
+    A, B = spec.ins
+    dA = b.matmul(go, b.transpose(b.res(B)))
+    dB = b.matmul(b.transpose(b.res(A)), go)
+    return [(A, dA), (B, dB)]
+
+
+@register_vjp("mv")
+def _mv_vjp(spec, g, b):
+    go = g[spec.outs[0]]
+    A, x = spec.ins
+    trans = bool(spec.attrs.get("trans", False))
+    if trans:                       # y = A.T @ x
+        dA = b.outer(b.res(x), go)
+        dx = b.mv(b.res(A), go, trans=False)
+    else:                           # y = A @ x
+        dA = b.outer(go, b.res(x))
+        dx = b.mv(b.res(A), go, trans=True)
+    return [(A, dA), (x, dx)]
+
+
+@register_vjp("transpose")
+def _transpose_vjp(spec, g, b):
+    # Both emitted perms (2-D T, batched (0, 2, 1)) are self-inverse.
+    return {spec.ins[0]: b.transpose(g[spec.outs[0]])}
+
+
+@register_vjp("reshape")
+def _reshape_vjp(spec, g, b):
+    x_shape = b.shape(spec.ins[0])
+    return {spec.ins[0]: b.emit("reshape", (g[spec.outs[0]],), (x_shape,),
+                                {"shape": x_shape}, op="copy", flops=0.0)[0]}
+
+
+@register_vjp("concat")
+def _concat_vjp(spec, g, b):
+    go = g[spec.outs[0]]
+    if len(spec.ins) == 1:
+        return [(spec.ins[0], go)]
+    axis = int(spec.attrs.get("axis", 0))
+    sizes = tuple(b.shape(i)[axis] for i in spec.ins)
+    return list(zip(spec.ins, b.split(go, sizes, axis)))
+
+
+@register_vjp("split")
+def _split_vjp(spec, g, b):
+    axis = int(spec.attrs.get("axis", 0))
+    pieces = [g[o] if o in g else b.zeros(b.shape(o)) for o in spec.outs]
+    return {spec.ins[0]: b.concat(pieces, axis)}
+
+
+@register_vjp("slice")
+def _slice_vjp(spec, g, b):
+    x_shape = b.shape(spec.ins[0])
+    attrs = {"starts": tuple(int(s) for s in spec.attrs["starts"]),
+             "sizes": tuple(int(s) for s in spec.attrs["sizes"]),
+             "x_shape": x_shape}
+    return {spec.ins[0]: b.emit("slice_grad", (g[spec.outs[0]],),
+                                (x_shape,), attrs, op="copy", flops=0.0)[0]}
+
+
+@register_vjp("softmax")
+def _softmax_vjp(spec, g, b):
+    axis = int(spec.attrs.get("axis", -1))
+    return {spec.ins[0]: b.ewise(
+        "softmax_grad", (g[spec.outs[0]], b.res(spec.outs[0])),
+        {"axis": axis}, flops=4.0)}
+
+
+@register_vjp("maxpool2d")
+def _maxpool2d_vjp(spec, g, b):
+    x = spec.ins[0]
+    x_shape = b.shape(x)
+    return {x: b.emit("maxpool2d_grad", (g[spec.outs[0]], b.res(x)),
+                      (x_shape,), {"k": int(spec.attrs["k"])},
+                      op="pool")[0]}
+
+
+@register_vjp("mean")
+def _mean_vjp(spec, g, b):
+    x_shape = b.shape(spec.ins[0])
+    axes = tuple(int(a) for a in spec.attrs["axes"])
+    return {spec.ins[0]: b.emit("mean_grad", (g[spec.outs[0]],), (x_shape,),
+                                {"axes": axes, "x_shape": x_shape})[0]}
+
+
+@register_vjp("mean_all")
+def _mean_all_vjp(spec, g, b):
+    x_shape = b.shape(spec.ins[0])
+    count = 1
+    for s in x_shape:
+        count *= int(s)
+    scaled = b.divc(g[spec.outs[0]], float(count))
+    return {spec.ins[0]: b.emit("bcast", (scaled,), (x_shape,),
+                                {"shape": x_shape}, op="copy", flops=0.0)[0]}
+
+
+@register_vjp("rglru_scan")
+def _rglru_scan_vjp(spec, g, b):
+    a, bb = spec.ins
+    da, db = b.emit("rglru_scan_grad",
+                    (g[spec.outs[0]], b.res(a), b.res(bb)),
+                    (b.shape(a), b.shape(bb)), op="scan", flops=4.0)
+    return [(a, da), (bb, db)]
+
+
+@register_vjp("ssd_scan")
+def _ssd_scan_vjp(spec, g, b):
+    st, dec = spec.ins
+    ds, dd = b.emit("ssd_scan_grad",
+                    (g[spec.outs[0]], b.res(st), b.res(dec)),
+                    (b.shape(st), b.shape(dec)), op="scan", flops=4.0)
+    return [(st, ds), (dec, dd)]
+
+
+__all__ = ["OpSpec", "UnknownOpError", "differentiable_ops", "has_vjp",
+           "materialize", "op_impl", "register_op", "register_vjp",
+           "registered_ops", "vjp_rule"]

@@ -91,6 +91,51 @@ def fused_matmul_chain(a: jax.Array, w1: jax.Array, w2: jax.Array, *,
 
 
 # --------------------------------------------------------------------------
+# matmul -> *ewise gradient epilogue (backward-pass chains)
+# --------------------------------------------------------------------------
+
+
+def _grad_chain_kernel(*refs, ew: Callable):
+    a_ref, w_ref, o_ref = refs[0], refs[1], refs[-1]
+    extras = [r[...].astype(jnp.float32) for r in refs[2:-1]]
+    h = jax.lax.dot_general(
+        a_ref[...].astype(jnp.float32), w_ref[...].astype(jnp.float32),
+        (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    o_ref[...] = ew(h, *extras).astype(o_ref.dtype)
+
+
+def fused_matmul_grad(a: jax.Array, w: jax.Array, *extras: jax.Array,
+                      ew: Callable, block_m: int = 128,
+                      interpret: bool = True) -> jax.Array:
+    """``ew(a @ w, *extras)`` as one Pallas kernel — the backward-pass
+    sibling of :func:`fused_matmul_chain`: a cotangent matmul whose
+    gradient epilogue (``relu_grad``/``gelu_grad``/``softmax_grad`` plus
+    plain elementwise) fuses onto the VMEM row-block instead of
+    round-tripping through HBM.  ``extras`` are the epilogue's residual
+    operands, each ``(M, N)`` and streamed with the same row-blocking as
+    the output; ``softmax_grad``'s row reduction is exact because blocks
+    span full rows."""
+    M, K = a.shape
+    K2, N = w.shape
+    assert K == K2, (a.shape, w.shape)
+    assert all(e.shape == (M, N) for e in extras), (
+        [e.shape for e in extras], (M, N))
+    bm = min(_block(M, block_m), M)
+    kernel = functools.partial(_grad_chain_kernel, ew=ew)
+    return pl.pallas_call(
+        kernel,
+        grid=(M // bm,),
+        in_specs=[
+            pl.BlockSpec((bm, K), lambda i: (i, 0)),
+            pl.BlockSpec((K, N), lambda i: (0, 0)),
+        ] + [pl.BlockSpec((bm, N), lambda i: (i, 0)) for _ in extras],
+        out_specs=pl.BlockSpec((bm, N), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((M, N), a.dtype),
+        interpret=interpret,
+    )(a, w, *extras)
+
+
+# --------------------------------------------------------------------------
 # softmax -> matmul (online-softmax streaming tail)
 # --------------------------------------------------------------------------
 

@@ -1,7 +1,7 @@
 """Jit'd wrappers + CODO kernel-pattern registration for the streamfuse
 fused kernels.
 
-``register()`` hooks three :class:`~repro.core.routing.KernelPattern`\\ s
+``register()`` hooks four :class:`~repro.core.routing.KernelPattern`\\ s
 into the compiler's routing layer:
 
 =======================  ===========================  =====================
@@ -10,6 +10,7 @@ pattern name             op pattern                   kernel
 ``streamfuse.conv``      ``pad → conv → ewise``       ``fused_pad_conv_relu``
 ``streamfuse.mmchain``   ``matmul → *ewise → matmul`` ``fused_matmul_chain``
 ``streamfuse.softmaxmm`` ``softmax → matmul``         ``fused_softmax_matmul``
+``streamfuse.mmgrad``    ``matmul → *ewise`` (grad)   ``fused_matmul_grad``
 =======================  ===========================  =====================
 
 Feasibility guards are pure graph analysis (spec kinds, strides, ranks,
@@ -33,12 +34,17 @@ import numpy as np
 from ...core.ops import op_impl
 from ...core.routing import (KernelPattern, pallas_interpret_forced,
                              register_kernel_pattern)
-from .ref import matmul_chain_ref, pad_conv_relu_ref, softmax_matmul_ref
+from .ref import (matmul_chain_ref, matmul_grad_ref, pad_conv_relu_ref,
+                  softmax_matmul_ref)
 
 # Elementwise spec kinds a kernel can replay on a VMEM block: exactly one
 # operand (the chain value), attrs-only parameters.
 EW_KINDS = frozenset({"relu", "gelu", "scale", "affine", "divc", "rdivc",
                       "identity"})
+
+# Gradient-epilogue kinds (backward chains): chain value first operand,
+# residual operands stream alongside it with the same row-blocking.
+GRAD_EW_KINDS = frozenset({"relu_grad", "gelu_grad", "softmax_grad"})
 
 # Resident-operand budget for compiled (TPU) kernels; interpret/reference
 # modes are unconstrained.
@@ -205,6 +211,100 @@ def _mm_chain_factory(graph, group, tasks, tile=None):
 
 
 # --------------------------------------------------------------------------
+# matmul -> *ewise gradient epilogue (backward-pass chains)
+# --------------------------------------------------------------------------
+
+
+def _mm_grad_feasible(graph, tasks) -> bool:
+    """Backward chains only: a cotangent matmul whose elementwise tail
+    contains at least one gradient kind (so forward ``matmul → ewise``
+    prefixes are never claimed and the longer ``mmchain`` match still
+    supersedes this one over shared tasks)."""
+    mm, tail = tasks[0], tasks[1:]
+    if any(t.spec is None for t in tasks) or not tail:
+        return False
+    if mm.spec.kind != "matmul" or len(mm.spec.ins) != 2:
+        return False
+    a_buf, w_buf = mm.spec.ins
+    mn = graph.buffers[mm.spec.outs[0]].shape
+    shapes = (graph.buffers[a_buf].shape, graph.buffers[w_buf].shape, mn)
+    if any(len(s) != 2 for s in shapes):
+        return False
+    prev, has_grad = mm.spec.outs[0], False
+    for t in tail:
+        kind = t.spec.kind
+        if kind in GRAD_EW_KINDS:
+            has_grad = True
+        elif kind not in EW_KINDS:
+            return False
+        if not t.spec.ins or t.spec.ins[0] != prev:
+            return False
+        for b in t.spec.ins[1:]:        # residual operands ride the stream
+            if graph.buffers[b].shape != mn or not _f32(graph, b):
+                return False
+        if kind == "softmax_grad" and int(
+                t.spec.attrs.get("axis", -1)) not in (-1, 1):
+            return False                # row blocks span full rows only
+        prev = t.spec.outs[0]
+    if not has_grad:
+        return False
+    return _f32(graph, a_buf, w_buf, tail[-1].spec.outs[0])
+
+
+def _grad_ew_applier(tail_tasks):
+    """Replay the gradient epilogue's registered impls on a VMEM block.
+    Returns ``(ew, extra_bufs)``: ``ew(h, *extras)`` threads the chain
+    value through each stage's first operand with the residual operands
+    bound positionally from ``extra_bufs`` order."""
+    impls = [(op_impl(t.spec.kind), t.spec) for t in tail_tasks]
+    extra_bufs = [b for t in tail_tasks for b in t.spec.ins[1:]]
+
+    def ew(h, *extras):
+        env = dict(zip(extra_bufs, extras))
+        for impl, spec in impls:
+            env[spec.ins[0]] = h
+            h = impl(spec, env)[spec.outs[0]]
+        return h
+
+    return ew, extra_bufs
+
+
+def _mm_grad_tiles(graph, tasks):
+    if _mode() == "reference":
+        return [None]
+    m = graph.buffers[tasks[0].spec.ins[0]].shape[0]
+    return [None] + [{"block_m": b} for b in (64, 256)
+                     if b <= max(m, 64)]
+
+
+def _mm_grad_factory(graph, group, tasks, tile=None):
+    import jax
+    from .chain import fused_matmul_grad
+
+    mm, tail = tasks[0], tasks[1:]
+    a_buf, w_buf = mm.spec.ins
+    out_buf = tail[-1].spec.outs[0]
+    ew, extra_bufs = _grad_ew_applier(tail)
+
+    mode = _mode()
+    if mode == "pallas" and not _vmem_ok(graph.buffers[w_buf].shape):
+        return None                     # resident operand exceeds VMEM
+    if mode == "reference":
+        fn = jax.jit(lambda a, w, *ex: matmul_grad_ref(a, w, ex, ew))
+    else:
+        block_m = int((tile or {}).get("block_m", 128))
+        fn = jax.jit(functools.partial(fused_matmul_grad, ew=ew,
+                                       block_m=block_m,
+                                       interpret=(mode == "interpret")))
+
+    def run(env):
+        return {out_buf: fn(env[a_buf], env[w_buf],
+                            *(env[b] for b in extra_bufs))}
+
+    return run
+
+
+# --------------------------------------------------------------------------
 # softmax -> matmul (attention tail)
 # --------------------------------------------------------------------------
 
@@ -295,3 +395,9 @@ def register() -> None:
         factory=_softmax_mm_factory, feasible=_softmax_mm_feasible,
         tiles=_softmax_mm_tiles,
         description="online-softmax(s)@v streaming attention tail"))
+    register_kernel_pattern(KernelPattern(
+        name="streamfuse.mmgrad", pattern=("matmul", "*ewise"),
+        factory=_mm_grad_factory, feasible=_mm_grad_feasible,
+        tiles=_mm_grad_tiles,
+        description="cotangent matmul with fused gradient epilogue "
+                    "(backward chains)"))

@@ -24,5 +24,15 @@ def matmul_chain_ref(a: jax.Array, w1: jax.Array, w2: jax.Array,
     return h @ w2
 
 
+def matmul_grad_ref(a: jax.Array, w: jax.Array, extras=(),
+                    ew=None) -> jax.Array:
+    """``ew(a @ w, *extras)`` — the backward matmul + gradient-epilogue
+    chain; ``ew`` takes the product block plus the residual operands."""
+    h = a.astype(jnp.float32) @ w.astype(jnp.float32)
+    if ew is not None:
+        h = ew(h, *extras)
+    return h.astype(a.dtype)
+
+
 def softmax_matmul_ref(s: jax.Array, v: jax.Array) -> jax.Array:
     return jax.nn.softmax(s, axis=-1) @ v

@@ -1,109 +1,25 @@
-"""Training launcher.
+"""Deprecated alias — the training CLI moved to :mod:`repro.training.cli`
+(the launcher now also drives the graph-level-autodiff
+:class:`~repro.api.CompiledTrainStep` via ``--compiled``; see
+``docs/autodiff.md``).
 
-CPU-scale (smoke config, runnable here):
-    PYTHONPATH=src python -m repro.launch.train --arch gemma-7b --smoke \\
-        --steps 20 --batch 4 --seq 128
-
-Production posture (full config; on a real v5e fleet):
-    python -m repro.launch.train --arch qwen1.5-110b --steps 10000 \\
-        --batch 256 --seq 4096 --ckpt /ckpts/qwen
-
-The launcher wires: config → data pipeline (prefetching) → jitted train
-step (remat, accumulation) → async checkpointer → heartbeat/straggler
-monitors, and prints the off-chip transfer manifest (host code analogue).
+This shim warns once on import and delegates everything — ``python -m
+repro.launch.train`` keeps working, as does the documented :func:`main`
+entry point.
 """
 
 from __future__ import annotations
 
-import argparse
-import time
+import warnings
 
-import jax
+warnings.warn(
+    "repro.launch.train is deprecated: use repro.training.cli "
+    "(python -m repro.training.cli) instead",
+    DeprecationWarning, stacklevel=2)
 
-from repro.configs import SHAPES, get_config
-from repro.checkpoint.checkpointer import Checkpointer
-from repro.data.pipeline import DataConfig, Prefetcher, SyntheticLM
-from repro.training.optimizer import OptConfig
-from repro.training.train_loop import SimulatedFailure, resume, train
+from repro.training.cli import main  # noqa: E402
 
-
-def main(argv=None) -> int:
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True)
-    ap.add_argument("--smoke", action="store_true",
-                    help="reduced same-family config (CPU-runnable)")
-    ap.add_argument("--steps", type=int, default=20)
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--seq", type=int, default=128)
-    ap.add_argument("--lr", type=float, default=3e-4)
-    ap.add_argument("--ckpt", default="")
-    ap.add_argument("--ckpt-every", type=int, default=10)
-    ap.add_argument("--fail-at", type=int, default=0,
-                    help="inject a failure after N steps (restart demo)")
-    ap.add_argument("--resume", action="store_true")
-    ap.add_argument("--seed", type=int, default=0)
-    ap.add_argument("--layers", type=int, default=0, help="override n_layers")
-    ap.add_argument("--d-model", type=int, default=0, help="override d_model")
-    ap.add_argument("--vocab", type=int, default=0, help="override vocab")
-    args = ap.parse_args(argv)
-
-    cfg = get_config(args.arch)
-    if args.smoke:
-        cfg = cfg.smoke()
-    import dataclasses
-    over = {}
-    if args.layers:
-        over["n_layers"] = args.layers
-    if args.d_model:
-        over["d_model"] = args.d_model
-        over["d_ff"] = 4 * args.d_model
-        over["head_dim"] = 0
-    if args.vocab:
-        over["vocab"] = args.vocab
-    if over:
-        cfg = dataclasses.replace(cfg, **over)
-    oc = OptConfig(lr=args.lr, warmup_steps=max(2, args.steps // 10),
-                   total_steps=args.steps)
-
-    dc = DataConfig(seq_len=args.seq, global_batch=args.batch, seed=args.seed)
-    source = SyntheticLM(cfg, dc)
-    prefetch = Prefetcher(source)
-    batches: dict[int, dict] = {}
-
-    def batch_fn(step: int) -> dict:
-        while step not in batches:
-            s, b = prefetch.next()
-            batches[s] = b
-        return {k: jax.numpy.asarray(v) for k, v in batches.pop(step).items()}
-
-    ckpt = Checkpointer(args.ckpt) if args.ckpt else None
-    t0 = time.time()
-    try:
-        if args.resume and ckpt is not None and ckpt.steps():
-            params, opt, report = resume(
-                cfg, ckpt, steps=args.steps, batch_fn=batch_fn, oc=oc,
-                seed=args.seed, checkpoint_every=args.ckpt_every)
-        else:
-            params, opt, report = train(
-                cfg, steps=args.steps, batch_fn=batch_fn, checkpointer=ckpt,
-                checkpoint_every=args.ckpt_every, oc=oc, seed=args.seed,
-                fail_at=args.fail_at or None)
-    except SimulatedFailure as e:
-        print(f"!! {e} — restart with --resume to continue from the last "
-              f"checkpoint")
-        prefetch.close()
-        return 42
-    finally:
-        if ckpt is not None:
-            ckpt.wait()
-
-    prefetch.close()
-    dt = time.time() - t0
-    print(f"arch={cfg.name} steps={report.steps_done} "
-          f"loss {report.losses[0]:.3f} -> {report.losses[-1]:.3f} "
-          f"({dt:.1f}s, {report.straggler_flags} straggler flags, "
-          f"checkpoints at {report.checkpoints})")
-    return 0
+__all__ = ["main"]
 
 
 if __name__ == "__main__":

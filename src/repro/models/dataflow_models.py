@@ -311,6 +311,17 @@ def gpt2_block(S: int = 128, D: int = 1024) -> DataflowGraph:
     return trace(gpt2_block_fn, (S, D), name="gpt2_block")
 
 
+def gpt2_block_loss_fn(x, target):
+    """MSE training objective over one GPT-2 block — the single (1, 1)
+    loss output a ``codo.compile(..., grad=True)`` train step seeds."""
+    d = F.sub(gpt2_block_fn(x), target)
+    return F.mean_all(F.mul(d, d))
+
+
+def gpt2_block_loss(S: int = 128, D: int = 1024) -> DataflowGraph:
+    return trace(gpt2_block_loss_fn, (S, D), (S, D), name="gpt2_block_loss")
+
+
 # --------------------------------------------------------------------------
 # Attention / recurrence families (ROADMAP item 4).  The workload bodies
 # live next to their reference models (models/transformer.py, rglru.py,

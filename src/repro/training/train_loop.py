@@ -194,3 +194,71 @@ def resume(cfg: ArchConfig, checkpointer, *, steps: int, batch_fn,
     return train(cfg, steps=steps, batch_fn=batch_fn,
                  checkpointer=checkpointer, params=state["params"],
                  opt_state=state["opt"], start_step=step, seed=seed, **kw)
+
+
+# --------------------------------------------------------------------------
+# Compiled driver (graph-level autodiff)
+# --------------------------------------------------------------------------
+
+
+def train_compiled(step, *, steps: int, batch_fn: Callable[[int], tuple],
+                   checkpointer=None, checkpoint_every: int = 50,
+                   params=None, opt_state=None, start_step: int = 0,
+                   fail_at: int | None = None, verify_every: int = 0,
+                   jit: bool = True) -> tuple[Any, Any, TrainReport]:
+    """The :func:`train` driver over a
+    :class:`~repro.api.CompiledTrainStep` — forward, backward and AdamW
+    update all run as pipeline-compiled dataflow graphs instead of one
+    jitted ``value_and_grad``.
+
+    Semantics match :func:`train`: same :class:`TrainReport`, the same
+    straggler/heartbeat monitors, the same ``fail_at`` injection and
+    checkpoint format (``{"params", "opt"}`` with ``optimizer``-layout
+    opt state), so :func:`resume_compiled` restores checkpoints written
+    by either driver.  ``batch_fn(step)`` returns the positional input
+    arrays of the loss graph (e.g. ``(x, target)``).
+
+    ``verify_every=N`` keeps the plain-jit path as a verification
+    oracle: every N steps the compiled loss/gradients are re-checked
+    against eager ``jax.grad`` of the source graph on that step's batch
+    (raises on divergence beyond the documented fp band).
+    """
+    report = TrainReport()
+    if params is None:
+        params = step.init_params()
+    if opt_state is None:
+        opt_state = step.init_opt_state(params)
+    monitor, hb = StepTimeMonitor(), Heartbeat()
+
+    for i in range(start_step, steps):
+        t0 = time.perf_counter()
+        batch = batch_fn(i)
+        if verify_every and i % verify_every == 0:
+            step.verify(*batch, params=params)
+        params, opt_state, metrics = step.step(params, opt_state, *batch,
+                                               jit=jit)
+        loss = float(metrics["loss"])
+        dt = time.perf_counter() - t0
+        hb.beat()
+        if monitor.observe(dt):
+            report.straggler_flags += 1
+        report.losses.append(loss)
+        report.step_times.append(dt)
+        report.steps_done = i + 1
+        if checkpointer is not None and (i + 1) % checkpoint_every == 0:
+            checkpointer.save(i + 1, {"params": params, "opt": opt_state})
+            report.checkpoints.append(i + 1)
+        if fail_at is not None and i + 1 >= fail_at:
+            raise SimulatedFailure(f"injected failure at step {i + 1}")
+    return params, opt_state, report
+
+
+def resume_compiled(step, checkpointer, *, steps: int, batch_fn, **kw):
+    """Restore the latest checkpoint and continue on the compiled step
+    (the restart path of :func:`train_compiled`)."""
+    like = {"params": step.init_params()}
+    like["opt"] = step.init_opt_state(like["params"])
+    at, state = checkpointer.restore_latest(like, None)
+    return train_compiled(step, steps=steps, batch_fn=batch_fn,
+                          checkpointer=checkpointer, params=state["params"],
+                          opt_state=state["opt"], start_step=at, **kw)

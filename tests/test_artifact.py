@@ -256,7 +256,7 @@ def test_fusion_kernels_forward_compat_both_directions(tmp_path, monkeypatch):
                  cache=None)
     lower(c, jit=False)                          # record real routing
     doc = export_artifact(c)
-    assert doc["schema_version"] == "1.4"
+    assert doc["schema_version"] == "1.5"
     assert len(doc["fusion"]["kernels"]) == len(doc["fusion"]["groups"])
     assert any(k.startswith("pallas:") for k in doc["fusion"]["kernels"])
 
@@ -405,7 +405,7 @@ def test_cli_export_import_profile(tmp_path, capsys):
     rc = compiler_main(["--import-artifact", str(path), "--profile"])
     out = capsys.readouterr().out
     assert rc == 0
-    assert "artifact gpt2_medium (schema v1.4)" in out
+    assert "artifact gpt2_medium (schema v1.5)" in out
     assert "== codo_opt(gpt2_medium) ==" in out
     assert "-- passes(gpt2_medium) --" in out
 
@@ -481,7 +481,7 @@ def test_v13_weights_roundtrip_embedded_and_sidecar(tmp_path):
     emb = tmp_path / "emb.json"
     p.export(str(emb), weights=True)
     doc = json.loads(emb.read_text())
-    assert doc["schema_version"] == "1.4"
+    assert doc["schema_version"] == "1.5"
     assert doc["weights"]["format"] == "embedded"
     got = artifact_weights(emb)
     assert set(got) == set(want)

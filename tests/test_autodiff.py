@@ -1,0 +1,454 @@
+"""Graph-level autodiff (ISSUE 10): declarative VJP rules, the backward
+and AdamW-update graphs, the compiled train step, and its v1.5 artifact.
+
+Covers the acceptance criteria:
+
+* per-op parametrized gradient checks — every kind in
+  ``differentiable_ops()`` (incl. the ``rglru_scan``/``ssd_scan``
+  recurrences) has its registry VJP checked against ``jax.grad`` of the
+  registered forward impl;
+* the compiled GPT-2-block train step matches eager ``jax.grad`` +
+  ``training.optimizer.adamw_update`` within the documented fp band
+  (gradients rtol 2e-3/atol 1e-4; update math *given identical
+  gradients* is bit-tight);
+* the backward graph carries ≥1 cost-gate-approved routed chain
+  (``streamfuse.mmgrad``; forced on CPU via ``CODO_FORCE_PALLAS`` since
+  the gate predicts a loss at CPU efficiency);
+* the v1.5 train-step artifact reloads executable in a fresh
+  interpreter;
+* the compiled training driver (``train_compiled``/``resume_compiled``)
+  keeps the checkpoint/restart semantics of the jitted loop;
+* ``launch/train.py`` is a warn+delegate shim onto
+  ``repro.training.cli``.
+"""
+
+import json
+import subprocess
+import sys
+import warnings
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+import repro.api as codo
+from repro.core.autodiff import (AutodiffError, _BwdBuilder, build_backward,
+                                 build_update, opt_attrs)
+from repro.core.frontend import GB
+from repro.core.ops import differentiable_ops, has_vjp
+from repro.core.routing import ROUTED_DECISIONS, route_plan
+from repro.kernels import register_all
+from repro.models.dataflow_models import gpt2_block_loss_fn
+
+register_all()
+
+RNG = np.random.default_rng(11)
+SRC = Path(__file__).resolve().parents[1] / "src"
+
+
+# --------------------------------------------------------------------------
+# Per-op gradient checks: registry VJP vs jax.grad of the registered impl
+# --------------------------------------------------------------------------
+
+# kind -> case.  ``ins``/``outs`` are shapes; ``attrs``/``op`` feed the
+# OpSpec; ``env`` optionally overrides the default standard-normal inputs
+# (domain restrictions: positive denominators, contractive decays).
+def _pos(shape):
+    return RNG.uniform(0.5, 1.5, shape).astype(np.float32)
+
+
+def _std(shape):
+    return RNG.standard_normal(shape).astype(np.float32)
+
+
+CASES = {
+    "identity": dict(ins=[(4, 5)], outs=[(4, 5)]),
+    "dup": dict(ins=[(4, 5)], outs=[(4, 5), (4, 5)]),
+    "relu": dict(ins=[(4, 5)], outs=[(4, 5)]),
+    "gelu": dict(ins=[(4, 5)], outs=[(4, 5)]),
+    "add": dict(ins=[(4, 5), (4, 5)], outs=[(4, 5)]),
+    "vadd": dict(ins=[(4, 5), (4, 5)], outs=[(4, 5)],
+                 attrs={"alpha": 1.5, "beta": -0.5}),
+    "scale": dict(ins=[(4, 5)], outs=[(4, 5)], attrs={"s": 1.7}),
+    "affine": dict(ins=[(4, 5)], outs=[(4, 5)], attrs={"a": -1.0, "b": 0.3}),
+    "divc": dict(ins=[(4, 5)], outs=[(4, 5)], attrs={"c": 3.0}),
+    "rdivc": dict(ins=[(4, 5)], outs=[(4, 5)], attrs={"c": 2.0}, env=_pos),
+    "div": dict(ins=[(4, 5), (4, 5)], outs=[(4, 5)], env=_pos),
+    "mul": dict(ins=[(4, 5), (4, 5)], outs=[(4, 5)]),
+    "matmul": dict(ins=[(4, 3), (3, 5)], outs=[(4, 5)], op="matmul"),
+    "mv": dict(ins=[(4, 3), (3,)], outs=[(4,)], op="matmul",
+               loop_shape=(4, 3)),
+    "transpose": dict(ins=[(4, 5)], outs=[(5, 4)], op="copy"),
+    "reshape": dict(ins=[(4, 5)], outs=[(2, 10)],
+                    attrs={"shape": (2, 10)}, op="copy"),
+    "concat": dict(ins=[(2, 5), (3, 5)], outs=[(5, 5)], attrs={"axis": 0}),
+    "split": dict(ins=[(5, 4)], outs=[(2, 4), (3, 4)],
+                  attrs={"axis": 0, "sizes": (2, 3)}),
+    "slice": dict(ins=[(5, 6)], outs=[(2, 3)],
+                  attrs={"starts": (1, 2), "sizes": (2, 3)}, op="copy"),
+    "softmax": dict(ins=[(4, 5)], outs=[(4, 5)], attrs={"axis": -1}),
+    "pad2d": dict(ins=[(1, 2, 6, 6)], outs=[(1, 2, 8, 8)],
+                  attrs={"pad": 1}, op="copy"),
+    "fill_interior": dict(ins=[(1, 2, 6, 6)], outs=[(1, 2, 8, 8)],
+                          attrs={"pad": 1}, op="copy"),
+    "conv2d": dict(ins=[(1, 2, 6, 6), (3, 2, 3, 3)], outs=[(1, 3, 4, 4)],
+                   attrs={"stride": 1, "groups": 1}, op="conv"),
+    "maxpool2d": dict(ins=[(1, 2, 6, 6)], outs=[(1, 2, 3, 3)],
+                      attrs={"k": 2}, op="pool"),
+    "mean": dict(ins=[(4, 5)], outs=[(4,)], attrs={"axes": (1,)}, op="pool",
+                 loop_shape=(4, 5)),
+    "mean_all": dict(ins=[(4, 5)], outs=[(1, 1)], op="pool"),
+    "rglru_scan": dict(
+        ins=[(2, 5, 3), (2, 5, 3)], outs=[(2, 5, 3)], op="scan",
+        env=lambda shape: RNG.uniform(-0.8, 0.8, shape).astype(np.float32)),
+    "ssd_scan": dict(
+        ins=[(4, 2, 3, 2), (4, 2, 1, 1)], outs=[(4, 2, 3, 2)], op="scan",
+        env=lambda shape: RNG.uniform(0.2, 0.9, shape).astype(np.float32)),
+    # no-operand constants: no cotangents to produce (rule returns {});
+    # checked through a graph where they feed a differentiable op.
+    "zeros": dict(special="zeros"),
+    "const": dict(special="const"),
+}
+
+
+def _case_graph(kind, case):
+    """A one-op forward graph for ``kind`` (inputs x0..xn, op outputs
+    marked as graph outputs), built with the same generalized emitter the
+    autodiff rules use — the numerics come from the registry impl either
+    way."""
+    gb = GB(f"{kind}_case")
+    b = _BwdBuilder(gb)
+    if case.get("special") == "zeros":
+        x = gb.input("x0", (4, 5))
+        z = b.zeros((4, 5))
+        gb.mark_output(gb.add(x, z))
+        return gb.g, [x]
+    if case.get("special") == "const":
+        x = gb.input("x0", (4, 5))
+        value = tuple(map(tuple, _std((4, 5)).tolist()))
+        c = b.emit("const", (), ((4, 5),),
+                   {"value": value, "dtype": "float32"}, op="copy")[0]
+        gb.mark_output(gb.mul(x, c))
+        return gb.g, [x]
+    ins = [gb.input(f"x{i}", tuple(shp))
+           for i, shp in enumerate(case["ins"])]
+    outs = b.emit(kind, tuple(ins), case["outs"], case.get("attrs"),
+                  op=case.get("op", "ewise"),
+                  loop_shape=case.get("loop_shape"))
+    for o in outs:
+        gb.mark_output(o)
+    g = gb.g
+    g.validate()
+    return g, ins
+
+
+def test_vjp_case_coverage():
+    """Every differentiable op kind has a gradient-check case (and every
+    case names a registered rule) — new rules must arrive with a check."""
+    assert set(CASES) == set(differentiable_ops())
+    assert all(has_vjp(k) for k in CASES)
+
+
+@pytest.mark.parametrize("kind", sorted(CASES))
+def test_op_vjp_matches_jax_grad(kind):
+    import jax
+    import jax.numpy as jnp
+
+    case = CASES[kind]
+    src, ins = _case_graph(kind, case)
+    env_fn = case.get("env", _std)
+    env = {n: env_fn(tuple(src.buffers[n].shape)) for n in ins}
+
+    bb = build_backward(src, wrt=list(ins))
+    # Residual intermediates become forward outputs (shared, the train-
+    # step wiring); inputs re-read by the backward come from ``env``.
+    fwd = src.copy()
+    for r in bb.residuals:
+        if fwd.buffers[r].kind == "intermediate":
+            fwd.buffers[r].kind = "output"
+    fouts = fwd.execute(env)
+
+    seeds = {s: _std(tuple(src.buffers[o].shape))
+             for o, s in bb.seeds.items()}
+    benv = dict(seeds)
+    for r in bb.residuals:
+        benv[r] = fouts[r] if r in fouts else env[r]
+    bouts = bb.graph.execute(benv)
+    got = {w: np.asarray(bouts[bb.grads[w]]) for w in ins}
+
+    def scalar(ps):
+        out = src.execute({**env, **ps})
+        return sum((out[o].astype(jnp.float32)
+                    * seeds[bb.seeds[o]]).sum() for o in bb.seeds)
+
+    ref = jax.grad(scalar)({w: jnp.asarray(env[w]) for w in ins})
+    for w in ins:
+        np.testing.assert_allclose(
+            got[w], np.asarray(ref[w]), rtol=1e-4, atol=1e-5,
+            err_msg=f"{kind}: grad wrt {w} diverged from jax.grad")
+
+
+def test_fused_task_is_rejected():
+    """Autodiff runs on the pre-pass source graph; a post-fusion
+    composite spec has no VJP rule and is rejected with guidance."""
+    gb = GB("fused_rej")
+    b = _BwdBuilder(gb)
+    x = gb.input("x", (4, 4))
+    (o,) = b.emit("fused", (x,), ((4, 4),), {"ops": ("relu", "scale")})
+    gb.mark_output(o)
+    with pytest.raises(AutodiffError, match="fused composite"):
+        build_backward(gb.g, wrt=[x])
+
+
+# --------------------------------------------------------------------------
+# Update graph vs training.optimizer (bit-tight with identical grads)
+# --------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("step_no", [0, 500])
+def test_update_graph_matches_adamw(step_no):
+    from repro.training.optimizer import OptConfig, adamw_update
+
+    oc = OptConfig(lr=1e-3, warmup_steps=10, total_steps=1000)
+    shapes = {"wa": (4, 5), "wb": (7,)}
+    upd = build_update(shapes, oc)
+    params = {w: _std(s) for w, s in shapes.items()}
+    grads = {w: _std(s) for w, s in shapes.items()}
+    state = {"m": {w: _std(s) * 0.01 for w, s in shapes.items()},
+             "v": {w: np.abs(_std(s)) * 0.01 for w, s in shapes.items()},
+             "step": np.asarray(step_no, np.int32)}
+
+    env = {"step": np.float32(step_no).reshape(1, 1)}
+    for w in shapes:
+        env[w] = params[w]
+        env[f"grad_{w}"] = grads[w]
+        env[f"m_{w}"] = state["m"][w]
+        env[f"v_{w}"] = state["v"][w]
+    outs = upd.execute(env)
+
+    ref_p, ref_s, ref_m = adamw_update(grads, state, params, oc)
+    for w in shapes:
+        np.testing.assert_allclose(np.asarray(outs[f"new_{w}"]),
+                                   np.asarray(ref_p[w]), rtol=0, atol=1e-6,
+                                   err_msg=f"new_{w}")
+        np.testing.assert_allclose(np.asarray(outs[f"new_m_{w}"]),
+                                   np.asarray(ref_s["m"][w]), rtol=0,
+                                   atol=1e-7)
+    np.testing.assert_allclose(
+        np.asarray(outs["grad_norm"]).reshape(()),
+        np.asarray(ref_m["grad_norm"]), rtol=1e-6, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(outs["lr"]).reshape(()),
+                               np.asarray(ref_m["lr"]), rtol=1e-6)
+    assert int(np.asarray(outs["new_step"]).reshape(())) == step_no + 1
+
+
+def test_opt_attrs_normalization():
+    from repro.training.optimizer import OptConfig
+    assert opt_attrs(None)["lr"] == pytest.approx(3e-4)
+    assert opt_attrs({"lr": 1e-3})["lr"] == pytest.approx(1e-3)
+    assert opt_attrs(OptConfig(lr=2e-3))["lr"] == pytest.approx(2e-3)
+    with pytest.raises(AutodiffError, match="unknown optimizer"):
+        opt_attrs({"learning_rate": 1e-3})
+
+
+# --------------------------------------------------------------------------
+# Compiled GPT-2-block train step: the tentpole acceptance path
+# --------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def gpt2_step():
+    return codo.compile(gpt2_block_loss_fn, (32, 64), (32, 64), grad=True,
+                        name="gpt2_block_loss")
+
+
+def test_train_step_matches_eager_jax_grad(gpt2_step):
+    x, t = _std((32, 64)), _std((32, 64))
+    # the documented fp band: loss + grads vs eager jax.grad
+    gpt2_step.verify(x, t)
+
+
+def test_train_step_update_bit_tight_with_same_grads(gpt2_step):
+    from repro.training.optimizer import OptConfig, adamw_update
+
+    x, t = _std((32, 64)), _std((32, 64))
+    params = gpt2_step.init_params()
+    opt_state = gpt2_step.init_opt_state(params)
+    loss, grads = gpt2_step.value_and_grad(x, t, params=params)
+    new_params, new_state, metrics = gpt2_step.step(params, opt_state, x, t)
+    # Same-gradient oracle: the update arithmetic itself is bit-tight
+    # (the fp band lives in the gradients, not the optimizer math).
+    g_np = {w: np.asarray(g) for w, g in grads.items()}
+    ref_p, ref_s, ref_m = adamw_update(
+        g_np, {"m": opt_state["m"], "v": opt_state["v"],
+               "step": opt_state["step"]}, params, OptConfig())
+    for w in gpt2_step.param_names:
+        np.testing.assert_allclose(np.asarray(new_params[w]),
+                                   np.asarray(ref_p[w]), rtol=0, atol=1e-6,
+                                   err_msg=f"post-update {w}")
+    np.testing.assert_allclose(float(metrics["grad_norm"]),
+                               float(ref_m["grad_norm"]), rtol=1e-5)
+    np.testing.assert_allclose(float(metrics["lr"]), float(ref_m["lr"]),
+                               rtol=0, atol=0)
+    assert int(new_state["step"]) == 1
+
+
+def test_value_and_grad_method(gpt2_step):
+    prog = codo.compile(gpt2_block_loss_fn, (32, 64), (32, 64),
+                        name="gpt2_block_loss")
+    step = prog.value_and_grad()
+    assert sorted(step.param_names) == sorted(gpt2_step.param_names)
+    x, t = _std((32, 64)), _std((32, 64))
+    l1, g1 = gpt2_step.value_and_grad(x, t, params=gpt2_step.init_params())
+    l2, g2 = step.value_and_grad(x, t, params=step.init_params())
+    np.testing.assert_allclose(np.asarray(l1), np.asarray(l2), rtol=1e-6)
+    for w in step.param_names:
+        np.testing.assert_allclose(np.asarray(g1[w]), np.asarray(g2[w]),
+                                   rtol=1e-6, atol=1e-7)
+
+
+def test_grad_kwargs_guardrails():
+    with pytest.raises(codo.TraceError, match="grad=True"):
+        codo.compile(gpt2_block_loss_fn, (8, 16), (8, 16), wrt=["wfc3"])
+
+
+def test_backward_routes_mmgrad_chain(monkeypatch):
+    """≥1 cost-gate-approved routed chain in the backward graph.  On CPU
+    the gate prices streamfuse.mmgrad at a predicted loss, so the chain
+    is forced via CODO_FORCE_PALLAS — decision "forced" is in
+    ROUTED_DECISIONS, the acceptance path."""
+    monkeypatch.setenv("CODO_FORCE_PALLAS", "1")
+    step = codo.compile(gpt2_block_loss_fn, (32, 64), (32, 64), grad=True,
+                        cache=None, name="gpt2_block_loss_routed")
+    bwd = step.backward.compiled
+    impl = bwd.buffer_plan.impl if bwd.buffer_plan else {}
+    plan = route_plan(bwd.graph, impl)
+    routed = [r for e in plan for r in e["routes"]
+              if r["kernel"] == "streamfuse.mmgrad"
+              and r["decision"] in ROUTED_DECISIONS]
+    assert routed, f"no routed mmgrad chain in {json.dumps(plan, indent=1)}"
+    # routed numerics hold: the interpret-mode kernels run under verify
+    x, t = _std((32, 64)), _std((32, 64))
+    step.verify(x, t)
+
+
+# --------------------------------------------------------------------------
+# v1.5 train-step artifact
+# --------------------------------------------------------------------------
+
+
+def test_train_step_artifact_roundtrip(gpt2_step, tmp_path):
+    path = tmp_path / "train_step.json"
+    doc = gpt2_step.export(path, weights=True)
+    assert doc["schema_version"] == "1.5"
+    assert doc["kind"] == "train_step"
+    assert set(doc["phases"]) == {"forward", "backward", "update"}
+    assert doc["provenance"]["origin"].startswith("traced:")
+
+    loaded = codo.load(path)
+    assert sorted(loaded.param_names) == sorted(gpt2_step.param_names)
+    x, t = _std((32, 64)), _std((32, 64))
+    params = gpt2_step.init_params()
+    l1, g1 = gpt2_step.value_and_grad(x, t, params=params)
+    l2, g2 = loaded.value_and_grad(x, t, params=loaded.init_params())
+    np.testing.assert_allclose(np.asarray(l1), np.asarray(l2), rtol=1e-6)
+    for w in gpt2_step.param_names:
+        np.testing.assert_allclose(np.asarray(g1[w]), np.asarray(g2[w]),
+                                   rtol=1e-6, atol=1e-7)
+    # re-export preserves the stored provenance verbatim
+    assert loaded.export()["provenance"] == doc["provenance"]
+
+
+def test_train_step_artifact_fresh_interpreter(gpt2_step, tmp_path):
+    """The acceptance criterion: the artifact reloads executable in a
+    fresh interpreter (no trace, no compile, registry-only numerics)."""
+    path = tmp_path / "train_step.json"
+    gpt2_step.export(path, weights=True)
+    code = (
+        "import numpy as np\n"
+        "import repro.api as codo\n"
+        f"step = codo.load({str(path)!r})\n"
+        "rng = np.random.default_rng(0)\n"
+        "x = rng.standard_normal((32, 64)).astype(np.float32)\n"
+        "t = rng.standard_normal((32, 64)).astype(np.float32)\n"
+        "p = step.init_params()\n"
+        "np_, ns, m = step.step(p, step.init_opt_state(p), x, t)\n"
+        "print('LOSS', float(m['loss']), int(ns['step']))\n")
+    out = subprocess.run([sys.executable, "-c", code], text=True,
+                         capture_output=True, env={"PYTHONPATH": str(SRC),
+                                                   "JAX_PLATFORMS": "cpu",
+                                                   "PATH": "/usr/bin:/bin"})
+    assert out.returncode == 0, out.stderr
+    tag, loss, stepno = out.stdout.split()[-3:]
+    assert tag == "LOSS" and int(stepno) == 1
+    # same numbers as in-process on the same deterministic batch
+    rng = np.random.default_rng(0)
+    x = rng.standard_normal((32, 64)).astype(np.float32)
+    t = rng.standard_normal((32, 64)).astype(np.float32)
+    p = gpt2_step.init_params()
+    _, _, metrics = gpt2_step.step(p, gpt2_step.init_opt_state(p), x, t)
+    np.testing.assert_allclose(float(loss), float(metrics["loss"]),
+                               rtol=1e-6)
+
+
+def test_single_design_provenance_diff(tmp_path):
+    from repro.core.artifact import diff_artifacts
+    from repro.core.compiler import CodoOptions
+
+    a = codo.compile(gpt2_block_loss_fn, (8, 16), (8, 16),
+                     name="prov_case").export(tmp_path / "a.json")
+    b = codo.compile(gpt2_block_loss_fn, (8, 16), (8, 16),
+                     name="prov_case",
+                     options=CodoOptions.preset("opt1")).export(
+                         tmp_path / "b.json")
+    c = codo.compile(gpt2_block_loss_fn, (8, 32), (8, 32),
+                     name="prov_case").export(tmp_path / "c.json")
+    assert diff_artifacts(a, a) == []
+    same_src = [d for d in diff_artifacts(a, b) if d.startswith("provenance")]
+    assert same_src and "same source, different pipeline" in same_src[0]
+    diff_src = [d for d in diff_artifacts(a, c) if d.startswith("provenance")]
+    assert diff_src and "different source" in diff_src[0]
+
+
+# --------------------------------------------------------------------------
+# Compiled training driver + launcher shim
+# --------------------------------------------------------------------------
+
+
+def test_train_compiled_resume_semantics(gpt2_step, tmp_path):
+    from repro.checkpoint.checkpointer import Checkpointer
+    from repro.training.train_loop import (SimulatedFailure, resume_compiled,
+                                           train_compiled)
+
+    rng = np.random.default_rng(5)
+
+    def batch_fn(i):
+        x = rng.standard_normal((32, 64)).astype(np.float32)
+        return x, 0.5 * x
+
+    ckpt = Checkpointer(str(tmp_path / "ckpt"))
+    with pytest.raises(SimulatedFailure):
+        train_compiled(gpt2_step, steps=6, batch_fn=batch_fn,
+                       checkpointer=ckpt, checkpoint_every=2, fail_at=5)
+    ckpt.wait()
+    assert ckpt.steps()
+    params, opt_state, report = resume_compiled(
+        gpt2_step, ckpt, steps=6, batch_fn=batch_fn, checkpoint_every=2,
+        verify_every=3)
+    ckpt.wait()
+    assert report.steps_done == 6
+    assert int(opt_state["step"]) == 6
+    assert len(report.losses) == 2          # resumed from step 4
+    assert report.step_times
+
+
+def test_launch_train_shim_warns_and_delegates():
+    for mod in ("repro.launch.train",):
+        sys.modules.pop(mod, None)
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        import repro.launch.train as shim
+    assert any(issubclass(x.category, DeprecationWarning) and
+               "repro.training.cli" in str(x.message) for x in w)
+    from repro.training import cli
+    assert shim.main is cli.main

@@ -236,7 +236,7 @@ def test_tuning_roundtrips_through_artifact_in_fresh_interpreter(tmp_path):
     assert all(r.choice in ("pallas", XLA_FUSED) for r in records)
 
     doc = export_artifact(c)
-    assert doc["schema_version"] == "1.4"
+    assert doc["schema_version"] == "1.5"
     assert doc["tuning"] and len(doc["tuning"]["entries"]) >= 1
     path = tmp_path / "ff.json"
     path.write_text(json.dumps(doc))

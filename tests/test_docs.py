@@ -13,8 +13,9 @@ sys.path.insert(0, str(ROOT / "tools"))
 from check_docs import check_file, extract_blocks  # noqa: E402
 
 DOCS = [ROOT / "README.md", ROOT / "docs" / "architecture.md",
-        ROOT / "docs" / "artifact_format.md", ROOT / "docs" / "frontend.md",
-        ROOT / "docs" / "serving.md", ROOT / "docs" / "sharding.md"]
+        ROOT / "docs" / "artifact_format.md", ROOT / "docs" / "autodiff.md",
+        ROOT / "docs" / "frontend.md", ROOT / "docs" / "serving.md",
+        ROOT / "docs" / "sharding.md"]
 
 
 def test_docs_exist_and_have_python_blocks():

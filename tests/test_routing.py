@@ -305,7 +305,7 @@ def test_artifact_records_group_kernels(monkeypatch):
     c = _gpt2()
     lower(c, jit=False)
     doc = export_artifact(c)
-    assert doc["schema_version"] == "1.4"
+    assert doc["schema_version"] == "1.5"
     kernels = doc["fusion"]["kernels"]
     assert len(kernels) == len(doc["fusion"]["groups"])
     assert any(k.startswith("pallas:") for k in kernels)

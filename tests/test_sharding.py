@@ -5,7 +5,7 @@ Two layers:
 * in-process, jax-free unit tests of the pure-data subsystem —
   ``distributed/plan.py`` (MeshSpec/ShardSpec/ShardingPlan), the
   propagation partitioner, the collective-step builder with its
-  decomposition thresholds, and the cost-model pricing; plus the v1.4
+  decomposition thresholds, and the cost-model pricing; plus the v1.5
   artifact plumbing on a single device.
 * one subprocess battery under ``XLA_FLAGS=--xla_force_host_platform_
   device_count=8`` that lowers the gpt2_block design through
@@ -138,7 +138,7 @@ def test_collective_steps_carry_fifo_depth_and_bytes():
 
 
 # --------------------------------------------------------------------------
-# artifact v1.4 plumbing (single device)
+# artifact v1.5 plumbing (single device)
 # --------------------------------------------------------------------------
 
 
@@ -152,7 +152,7 @@ def test_artifact_sharding_section_roundtrip(tmp_path):
     path = tmp_path / "sharded.json"
     prog.export(str(path))
     doc = json.loads(path.read_text())
-    assert doc["schema_version"] == "1.4"
+    assert doc["schema_version"] == "1.5"
     assert doc["sharding"]["strategy"] == "dp_tp"
     assert validate_artifact(doc) == []
     back = import_artifact(str(path))
@@ -287,7 +287,7 @@ def test_api_sharded_jit_matches_single_device(sharded_results):
 
 
 def test_sharding_plan_survives_export_load(sharded_results):
-    assert sharded_results["schema"] == "1.4"
+    assert sharded_results["schema"] == "1.5"
     assert sharded_results["loaded_digest_match"]
     assert sharded_results["api_strategy"] in ("replicate", "dp", "tp",
                                                "dp_tp")
